@@ -1,0 +1,35 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + (
+    os.environ.get("REPRO_BENCH_DEVICES", "4"))
+
+# Worker for bench_distributed: needs N host devices, so it must own the
+# process (jax locks the device count at first init). Prints one CSV row.
+import sys
+import time
+
+import jax
+
+from repro.core import exact_join_pairs, recall
+from repro.core.distributed import (build_sharded_merged_index,
+                                    distributed_mi_join)
+from repro.core.types import JoinResult, JoinStats, TraversalConfig
+from repro.data.vectors import make_dataset, thresholds
+
+
+def main(n_data: int, n_shards: int) -> None:
+    ds = make_dataset("manifold", n_data=n_data, n_query=256, dim=48, seed=5)
+    theta = float(thresholds(ds, 7)[1])
+    tr = exact_join_pairs(ds.X, ds.Y, theta)
+    mesh = jax.make_mesh((n_shards,), ("data",))
+    smi = build_sharded_merged_index(ds.Y, ds.X, n_shards, k=32, degree=24)
+    t0 = time.perf_counter()
+    pairs, stats = distributed_mi_join(
+        ds.X, smi, mesh, ("data",), theta=theta, cfg=TraversalConfig(),
+        wave_size=128)
+    dt = time.perf_counter() - t0
+    rec = recall(JoinResult(pairs=pairs, stats=JoinStats()), tr)
+    print(f"{n_shards},{dt:.6g},{rec:.6g},{len(pairs)},{stats['n_dist']}")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]), int(sys.argv[2]))

@@ -1,0 +1,31 @@
+"""Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_method, theta_grid
+
+METHODS = ("index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
+
+
+def run(scale: str = "ci", *, regime: str = "manifold",
+        theta_idxs=(1, 4, 7)) -> list[dict]:
+    rows = []
+    grid = theta_grid(regime, scale)
+    for ti in theta_idxs:
+        theta = grid[ti - 1]
+        for method in METHODS:
+            res, dt, rec = run_method(regime, method, theta, scale=scale)
+            s = res.stats
+            rows.append(dict(
+                dataset=regime, theta_idx=ti, method=method,
+                greedy_s=s.greedy_seconds, expand_s=s.expand_seconds,
+                other_s=s.other_seconds, total_s=s.total_seconds,
+                recall=rec))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

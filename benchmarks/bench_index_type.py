@@ -1,0 +1,30 @@
+"""Paper Fig. 15: index-type ablation — NSG (RNG-pruned) vs NSW-style
+(unpruned kNN graph; the flat stand-in for HNSW, DESIGN §2) on one ID and
+one OOD dataset."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_method, theta_grid
+
+METHODS = ("index", "es", "es_sws", "es_mi", "es_mi_adapt")
+
+
+def run(scale: str = "ci", *, regimes=("manifold", "ood")) -> list[dict]:
+    rows = []
+    for regime in regimes:
+        theta = theta_grid(regime, scale)[0]
+        for style in ("nsg", "nsw"):
+            for method in METHODS:
+                res, dt, rec = run_method(regime, method, theta,
+                                          scale=scale, style=style)
+                rows.append(dict(dataset=regime, index=style, method=method,
+                                 seconds=dt, recall=rec,
+                                 n_dist=res.stats.n_dist))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

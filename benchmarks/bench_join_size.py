@@ -1,0 +1,24 @@
+"""Paper Fig. 9: join size per dataset and threshold (exact NLJ counts)."""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, dataset, emit, theta_grid, truth
+
+
+def run(scale: str = "ci") -> list[dict]:
+    rows = []
+    for regime in REGIMES:
+        ds = dataset(regime, scale)
+        denom = ds.X.shape[0] * ds.Y.shape[0]
+        for i, theta in enumerate(theta_grid(regime, scale), 1):
+            n = len(truth(regime, theta, scale))
+            rows.append(dict(dataset=regime, theta_idx=i, theta=theta,
+                             join_size=n, selectivity=n / denom))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 13: offline overhead — separate query+data indexes vs the
+merged index (size and build time)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import REGIMES, dataset, emit
+from repro.core import build_index, build_merged_index
+
+
+def _index_bytes(gi) -> int:
+    return (np.asarray(gi.vecs).nbytes + np.asarray(gi.nbrs).nbytes
+            + np.asarray(gi.mean_nbr_dist).nbytes)
+
+
+def run(scale: str = "ci", *, regimes=REGIMES) -> list[dict]:
+    rows = []
+    for regime in regimes:
+        ds = dataset(regime, scale)
+        t0 = time.perf_counter()
+        iy = build_index(ds.Y, k=32, degree=24)
+        ix = build_index(ds.X, k=32, degree=24)
+        t_sep = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        im = build_merged_index(ds.Y, ds.X, k=32, degree=24)
+        t_merged = time.perf_counter() - t0
+        sep = _index_bytes(iy) + _index_bytes(ix)
+        mrg = _index_bytes(im)
+        rows.append(dict(
+            dataset=regime, sep_build_s=t_sep, merged_build_s=t_merged,
+            sep_bytes=sep, merged_bytes=mrg, size_ratio=mrg / sep,
+            time_ratio=t_merged / t_sep))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 10: latency / recall / memory for every method × θ × dataset.
+
+The headline table: NAIVE (NLJ), INDEX, ES, ES+HWS (≈SIMJOIN), ES+SWS,
+ES+MI, ES+MI+ADAPT. Memory = peak work-sharing cache entries (the paper's
+online-memory metric; the index itself is offline, Fig. 13).
+"""
+from __future__ import annotations
+
+from benchmarks.common import REGIMES, emit, run_method, theta_grid
+
+METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
+
+
+def run(scale: str = "ci", *, regimes=REGIMES, theta_idxs=(1, 3, 5, 7),
+        methods=METHODS) -> list[dict]:
+    rows = []
+    for regime in regimes:
+        grid = theta_grid(regime, scale)
+        for ti in theta_idxs:
+            theta = grid[ti - 1]
+            for method in methods:
+                res, dt, rec = run_method(regime, method, theta, scale=scale)
+                rows.append(dict(
+                    dataset=regime, theta_idx=ti, theta=theta, method=method,
+                    seconds=dt, recall=rec, pairs=len(res.pairs),
+                    n_dist=res.stats.n_dist,
+                    cache_entries=res.stats.peak_cache_entries,
+                    overflow=res.stats.n_overflow, n_ood=res.stats.n_ood))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 11: latency–recall trade-off vs max queue size L (θ = θ₁).
+
+L drives the greedy-phase beam for non-MI methods and the hybrid
+out-range beam for ES+MI+ADAPT; ES+MI ignores it (greedy phase offloaded).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_method, theta_grid
+from repro.core.types import TraversalConfig
+
+QUEUE_SIZES = (8, 32, 128, 512)
+METHODS = ("index", "es", "es_sws", "es_mi", "es_mi_adapt")
+
+
+def run(scale: str = "ci", *, regimes=("manifold", "ood")) -> list[dict]:
+    rows = []
+    for regime in regimes:
+        theta = theta_grid(regime, scale)[0]
+        for L in QUEUE_SIZES:
+            tcfg = TraversalConfig(beam_width=L, hybrid_beam=min(L, 128))
+            for method in METHODS:
+                res, dt, rec = run_method(regime, method, theta,
+                                          scale=scale, tcfg=tcfg)
+                rows.append(dict(dataset=regime, L=L, method=method,
+                                 seconds=dt, recall=rec,
+                                 n_dist=res.stats.n_dist))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

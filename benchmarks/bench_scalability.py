@@ -1,0 +1,45 @@
+"""Paper Fig. 14: scalability in |Y| at the smallest threshold θ₁."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import (build_index, build_merged_index, exact_join_pairs,
+                        recall)
+from repro.core.join import vector_join
+from repro.core.types import JoinConfig
+from repro.data.vectors import make_dataset, thresholds
+
+METHODS = ("nlj", "es", "es_sws", "es_mi")
+SIZES_CI = (4_000, 8_000, 16_000, 32_000)
+SIZES_FULL = (10_000, 100_000, 1_000_000)
+
+
+def run(scale: str = "ci") -> list[dict]:
+    sizes = SIZES_CI if scale == "ci" else SIZES_FULL
+    rows = []
+    for n in sizes:
+        ds = make_dataset("manifold", n_data=n, n_query=256, dim=48, seed=3)
+        theta = float(thresholds(ds, 7)[0])
+        iy = build_index(ds.Y, k=32, degree=24)
+        ix = build_index(ds.X, k=32, degree=24)
+        im = build_merged_index(ds.Y, ds.X, k=32, degree=24)
+        tr = exact_join_pairs(ds.X, ds.Y, theta)
+        for method in METHODS:
+            cfg = JoinConfig(method=method, theta=theta, wave_size=128)
+            t0 = time.perf_counter()
+            res = vector_join(ds.X, ds.Y, cfg, index_y=iy, index_x=ix,
+                              index_merged=im)
+            dt = time.perf_counter() - t0
+            rows.append(dict(n_data=n, method=method, seconds=dt,
+                             recall=recall(res, tr),
+                             n_dist=res.stats.n_dist))
+    return rows
+
+
+def main(scale: str = "ci") -> None:
+    emit(run(scale))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Shared benchmark scaffolding.
+
+Every bench_*.py exposes ``run(scale: str) -> list[dict]`` ("ci" = minutes
+on CPU, "full" = the paper-scale sweep) and prints CSV via ``emit``.
+Datasets mirror the paper's Table-1 regimes (data/vectors.py); indexes are
+built once per (dataset, kind) and cached across benches within a process.
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+import numpy as np
+
+from repro.core import build_index, build_merged_index, exact_join_pairs
+from repro.core.types import JoinConfig, JoinResult, TraversalConfig, recall
+from repro.core.join import vector_join
+from repro.data.vectors import VectorDataset, make_dataset, thresholds
+
+# the paper's eight datasets → four synthetic regimes (DESIGN §7)
+REGIMES = ("manifold", "weak", "clustered", "ood")
+
+SCALES = {
+    "ci": dict(n_data=12_000, n_query=384, dim=48),
+    "full": dict(n_data=100_000, n_query=2_000, dim=96),
+}
+
+
+@functools.cache
+def dataset(regime: str, scale: str = "ci", seed: int = 0) -> VectorDataset:
+    kw = SCALES[scale]
+    return make_dataset(regime, seed=seed, **kw)
+
+
+@functools.cache
+def theta_grid(regime: str, scale: str = "ci", n: int = 7
+               ) -> tuple[float, ...]:
+    return tuple(float(t) for t in thresholds(dataset(regime, scale), n))
+
+
+@functools.cache
+def indexes(regime: str, scale: str = "ci", *, k: int = 32, degree: int = 24,
+            style: str = "nsg"):
+    ds = dataset(regime, scale)
+    iy = build_index(ds.Y, k=k, degree=degree, style=style)
+    ix = build_index(ds.X, k=k, degree=degree, style=style)
+    im = build_merged_index(ds.Y, ds.X, k=k, degree=degree, style=style)
+    return iy, ix, im
+
+
+@functools.cache
+def truth(regime: str, theta: float, scale: str = "ci") -> np.ndarray:
+    ds = dataset(regime, scale)
+    return exact_join_pairs(ds.X, ds.Y, theta)
+
+
+_WARMED: set = set()
+
+
+def run_method(regime: str, method: str, theta: float, *, scale: str = "ci",
+               tcfg: TraversalConfig | None = None, wave: int = 128,
+               style: str = "nsg") -> tuple[JoinResult, float, float]:
+    """(result, seconds, recall) for one (dataset, method, θ) cell."""
+    ds = dataset(regime, scale)
+    iy, ix, im = indexes(regime, scale, style=style)
+    cfg = JoinConfig(method=method, theta=theta, wave_size=wave,
+                     traversal=tcfg or TraversalConfig())
+    # warm the jit caches (keyed on wave shape + traversal config) with a
+    # tiny query subset so reported latency is compile-free, like the
+    # paper's steady-state measurements
+    wkey = (regime, method, scale, style, cfg.traversal, wave)
+    if method != "nlj" and wkey not in _WARMED:
+        vector_join(ds.X[:32], ds.Y, cfg, index_y=iy, index_x=ix,
+                    index_merged=im)
+        _WARMED.add(wkey)
+    t0 = time.perf_counter()
+    res = vector_join(ds.X, ds.Y, cfg, index_y=iy, index_x=ix,
+                      index_merged=im)
+    dt = time.perf_counter() - t0
+    rec = recall(res, truth(regime, theta, scale))
+    return res, dt, rec
+
+
+def emit(rows: list[dict], *, file=None) -> None:
+    """Print rows as CSV (keys of the first row define the header)."""
+    file = file or sys.stdout
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys), file=file)
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys), file=file)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

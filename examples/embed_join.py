@@ -1,0 +1,72 @@
+"""Embedding dedup: the paper's operator consuming a model from the zoo.
+
+Trains a tiny LM briefly, embeds a corpus of sequences (some near-
+duplicates by construction), then finds all near-duplicate pairs with the
+merged-index threshold join — the paper's motivating application
+(near-duplicate detection over embeddings) end-to-end in one framework.
+
+  PYTHONPATH=src python examples/embed_join.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.core import exact_join_pairs, recall, vector_join
+from repro.core.types import JoinConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw, warmup_cosine
+from repro.train.loop import TrainState, Trainer, make_train_step
+
+
+def main() -> None:
+    mc = get("tinyllama_1_1b").smoke
+    src = SyntheticLM(vocab=mc.vocab, seq_len=48, global_batch=16, seed=2)
+    opt = adamw()
+    lr = warmup_cosine(peak_lr=3e-3, warmup_steps=5, total_steps=60)
+    step_fn = jax.jit(make_train_step(mc, opt, lr))
+    params = M.init_params(jax.random.key(2), mc)
+    state, hist = Trainer(step_fn=step_fn, source=src, log_every=50).run(
+        TrainState(params=params, opt_state=opt.init(params)), 60)
+    print(f"trained: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # corpus: 600 base sequences + 200 near-duplicates (few tokens edited)
+    rng = np.random.default_rng(7)
+    base = src.batch_at(999)["inputs"]
+    seqs = [src.batch_at(1000 + i)["inputs"] for i in range(600 // 16 + 1)]
+    corpus = np.concatenate(seqs)[:600]
+    dup_src = rng.integers(0, 600, 200)
+    dups = corpus[dup_src].copy()
+    edit_pos = rng.integers(0, dups.shape[1], (200, 3))
+    for i in range(200):
+        dups[i, edit_pos[i]] = rng.integers(0, mc.vocab, 3)
+    del base
+
+    def embed(tokens):
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                               tokens.shape)
+        return np.asarray(M.embed_sequence(state.params, mc,
+                                           jnp.asarray(tokens), pos,
+                                           pool="mean"))
+
+    Y = embed(corpus)                      # data side: the corpus
+    X = embed(dups)                        # query side: suspected dups
+    # threshold at the 0.5% distance quantile — tight near-dup ball
+    d = np.linalg.norm(X[rng.integers(0, 200, 4000)]
+                       - Y[rng.integers(0, 600, 4000)], axis=1)
+    theta = float(np.quantile(d, 0.005))
+    res = vector_join(X, Y, JoinConfig(method="es_mi_adapt", theta=theta,
+                                       wave_size=128))
+    truth = exact_join_pairs(X, Y, theta)
+    rec = recall(res, truth)
+    # how many duplicates point back to their true source?
+    found_src = {int(q): int(y) for q, y in res.pairs}
+    hit = sum(found_src.get(i) == int(dup_src[i]) for i in range(200))
+    print(f"θ={theta:.4f}: {len(res.pairs)} pairs, recall {rec:.3f}, "
+          f"{hit}/200 duplicates matched to their source")
+
+
+if __name__ == "__main__":
+    main()

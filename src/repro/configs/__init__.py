@@ -1,0 +1,7 @@
+"""Config registry: 10 assigned architectures + vector-join presets."""
+from repro.configs.registry import (ARCH_IDS, SHAPES, ArchSpec, ShapeSpec,
+                                    all_specs, cells, get, input_specs,
+                                    supported)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchSpec", "ShapeSpec", "all_specs",
+           "cells", "get", "input_specs", "supported"]

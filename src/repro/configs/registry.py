@@ -1,0 +1,141 @@
+"""Architecture registry: the 10 assigned archs as selectable configs.
+
+Each ``src/repro/configs/<arch>.py`` defines ``spec() -> ArchSpec`` with the
+exact published configuration plus a reduced smoke config of the same
+family. ``input_specs`` builds ShapeDtypeStruct stand-ins for every model
+input of an (arch × shape) cell — weak-type-correct, shardable, and never
+allocating (the dry-run pattern).
+
+Shape set (assigned): train_4k, prefill_32k, decode_32k, long_500k.
+``supported`` encodes the assignment's skip rules: decode shapes skip for
+encoder-only archs; long_500k runs only for sub-quadratic archs
+(SSM / hybrid / SWA / local-global) — see DESIGN §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+ARCH_IDS = (
+    "rwkv6_7b",
+    "qwen2_vl_72b",
+    "qwen3_moe_235b_a22b",
+    "deepseek_v2_236b",
+    "h2o_danube_3_4b",
+    "llama3_405b",
+    "tinyllama_1_1b",
+    "gemma2_9b",
+    "hubert_xlarge",
+    "jamba_1_5_large_398b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # dense | moe | ssm | vlm | audio | hybrid
+    model: M.ModelConfig
+    smoke: M.ModelConfig              # reduced same-family config
+    subquadratic: bool = False        # can run long_500k
+    source: str = ""                  # [source; verified-tier]
+    notes: str = ""
+
+
+@functools.cache
+def get(arch_id: str) -> ArchSpec:
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; one of {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    spec = mod.spec()
+    assert spec.arch_id == arch_id, (spec.arch_id, arch_id)
+    return spec
+
+
+def all_specs() -> list[ArchSpec]:
+    return [get(a) for a in ARCH_IDS]
+
+
+def supported(spec: ArchSpec, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch × shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and spec.model.encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not spec.subquadratic:
+        return False, "pure full-attention arch: O(S^2) attention at 500k"
+    return True, ""
+
+
+def cells() -> list[tuple[str, str, bool, str]]:
+    """All 40 (arch, shape) cells with their skip status."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            ok, why = supported(get(a), s)
+            out.append((a, s, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pos_shape(mc: M.ModelConfig, b: int, s: int):
+    return (b, s) if mc.pos_dims == 1 else (b, s, mc.pos_dims)
+
+
+def _inputs_sds(mc: M.ModelConfig, b: int, s: int):
+    if mc.input_kind == "tokens":
+        return _sds((b, s), jnp.int32)
+    return _sds((b, s, mc.frontend_dim), jnp.bfloat16)
+
+
+def input_specs(mc: M.ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for every input of the cell's step function."""
+    b, s = shape.batch, shape.seq
+    if shape.kind == "train":
+        return dict(
+            inputs=_inputs_sds(mc, b, s),
+            targets=_sds((b, s), jnp.int32),
+            positions=_sds(_pos_shape(mc, b, s), jnp.int32),
+        )
+    if shape.kind == "prefill":
+        return dict(
+            inputs=_inputs_sds(mc, b, s),
+            positions=_sds(_pos_shape(mc, b, s), jnp.int32),
+        )
+    # decode: one new token against an s-long cache
+    caches = jax.eval_shape(
+        functools.partial(M.init_caches, mc, b, s))
+    return dict(
+        tokens=_sds((b, 1), jnp.int32),
+        positions=_sds(_pos_shape(mc, b, 1), jnp.int32),
+        caches=caches,
+        cache_index=_sds((b,), jnp.int32),
+    )

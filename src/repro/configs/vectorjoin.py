@@ -1,0 +1,69 @@
+"""Vector-join operator configs (the paper's contribution as a first-class
+framework feature).
+
+Presets name the paper's §5.1.2 baselines; ``JOIN_DRYRUN_CELLS`` defines the
+distributed-join dry-run cells recorded alongside the 40 model cells
+(X replicated per shard, Y sharded over the data axes — DESIGN §2.7).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.types import JoinConfig, TraversalConfig
+
+# paper §5.1.2 method presets (ES patience 10, L=256 defaults of [38])
+PRESETS = {
+    "nlj": JoinConfig(method="nlj"),
+    "index": JoinConfig(method="index"),
+    "es": JoinConfig(method="es"),
+    "es_hws": JoinConfig(method="es_hws"),          # == SIMJOIN
+    "es_sws": JoinConfig(method="es_sws"),
+    "es_mi": JoinConfig(method="es_mi"),
+    "es_mi_adapt": JoinConfig(method="es_mi_adapt"),
+}
+
+
+def preset(name: str, *, theta: float, **tcfg_kw) -> JoinConfig:
+    cfg = PRESETS[name]
+    tr = dataclasses.replace(cfg.traversal, **tcfg_kw) if tcfg_kw \
+        else cfg.traversal
+    return dataclasses.replace(cfg, theta=theta, traversal=tr)
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinCell:
+    """One distributed-join dry-run cell.
+
+    max_iters bounds the traversal while-loop; for the roofline it is set
+    to the *expected* per-wave iteration count (the production safety
+    bound of 4096 would make the static cost model 100× pessimistic —
+    measured CI waves converge in ≲64 iterations). dtype bf16 halves the
+    gather traffic of the distance hot-spot (beyond-paper; §Perf).
+    """
+    name: str
+    n_query: int
+    n_data: int          # global |Y| (sharded over data axes)
+    dim: int
+    degree: int          # index max out-degree R
+    wave_size: int
+    pool_cap: int
+    hybrid: bool = False
+    max_iters: int = 64
+    dtype: str = "float32"
+    # traversal loops exit data-dependently, so the static HLO cost model
+    # sees one iteration; the dry-run scales by this measured expectation
+    # (es_mi on CI data: ~3 iters/wave at θ1, ~52 at θ4)
+    expected_iters: int = 32
+
+
+JOIN_DRYRUN_CELLS = (
+    # embedding-scale joins: |Y| per shard × 256/512 shards ⇒ 0.1–1B rows
+    JoinCell("join_sift_like", 10_000, 524_288, 128, 32, 256, 512),
+    JoinCell("join_clip_like", 10_000, 524_288, 512, 32, 256, 512),
+    JoinCell("join_ood_hybrid", 10_000, 262_144, 512, 32, 256, 512,
+             hybrid=True),
+    JoinCell("join_lm_embed", 4_096, 1_048_576, 2048, 32, 256, 256),
+    # §Perf iteration: bf16 vectors (distances still f32-accumulated)
+    JoinCell("join_lm_embed_bf16", 4_096, 1_048_576, 2048, 32, 256, 256,
+             dtype="bfloat16"),
+)

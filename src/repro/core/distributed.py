@@ -1,0 +1,218 @@
+"""Distributed vector join over the production mesh (DESIGN §2.7).
+
+A threshold join decomposes exactly over data partitions:
+``X ⋈_θ Y = ∪_s (X ⋈_θ Y_s)`` — recall composes additively and no
+cross-shard traffic is needed *during* traversal. We therefore:
+
+  * shard Y (and its per-shard merged index G_{X∪Y_s}) over the flattened
+    ``(pod, data)`` mesh axes — each device owns an independent subgraph;
+  * replicate the query wave (one broadcast per wave — the only collective
+    on the traversal path);
+  * run the batched MI traversal per shard under ``shard_map``;
+  * concatenate per-shard result pools on the host (global ids =
+    ``shard * shard_size + local id``).
+
+The exact NLJ path additionally shards the *vector dimension* over the
+``model`` axis: partial squared-distance terms are accumulated with a
+``psum`` over model — a reduce-scatter-shaped collective that demonstrates
+the second-level parallelism used by the roofline analysis.
+
+Per-shard indexes are built independently (embarrassingly parallel
+offline); the merged-index offloading property is preserved per shard
+because RNG pruning is local to each subgraph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import traversal
+from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedMergedIndex:
+    """Per-shard merged indexes G_{X∪Y_s}, stacked on a leading shard dim."""
+    vecs: Array        # (S, M, d)   M = shard_size + n_query
+    nbrs: Array        # (S, M, R)
+    start: Array       # (S,)
+    mean_nbr_dist: Array  # (S, M)
+    shard_size: int = dataclasses.field(metadata=dict(static=True))
+    n_query: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_shards(self) -> int:
+        return self.vecs.shape[0]
+
+
+def build_sharded_merged_index(Y, X, n_shards: int, **build_kw
+                               ) -> ShardedMergedIndex:
+    """Build one merged index per Y-shard (offline, per-shard parallel)."""
+    from repro.core import graph
+
+    Y = np.asarray(Y)
+    X = np.asarray(X)
+    n = Y.shape[0]
+    shard_size = -(-n // n_shards)
+    pad = shard_size * n_shards - n
+    if pad:
+        # pad with far-away sentinel rows that can never join
+        Y = np.concatenate(
+            [Y, np.full((pad, Y.shape[1]), 1e3, Y.dtype)], axis=0)
+    vecs, nbrs, starts, mnds = [], [], [], []
+    for s in range(n_shards):
+        ys = Y[s * shard_size:(s + 1) * shard_size]
+        gi = graph.build_merged_index(ys, X, **build_kw)
+        vecs.append(np.asarray(gi.vecs))
+        nbrs.append(np.asarray(gi.nbrs))
+        starts.append(int(gi.start))
+        mnds.append(np.asarray(gi.mean_nbr_dist))
+    return ShardedMergedIndex(
+        vecs=jnp.asarray(np.stack(vecs)), nbrs=jnp.asarray(np.stack(nbrs)),
+        start=jnp.asarray(np.asarray(starts, np.int32)),
+        mean_nbr_dist=jnp.asarray(np.stack(mnds)),
+        shard_size=shard_size, n_query=X.shape[0])
+
+
+def _local_mi_join(vecs, nbrs, mnd, start, xw, qids, lane_valid, *,
+                   theta: float, cfg: TraversalConfig, shard_size: int,
+                   hybrid: bool, axis: str):
+    """Per-shard MI join body (runs under shard_map; all-local compute)."""
+    vecs, nbrs, mnd = vecs[0], nbrs[0], mnd[0]
+    index = GraphIndex(vecs=vecs, nbrs=nbrs, start=start[0],
+                       mean_nbr_dist=mnd, n_data=shard_size)
+    B = xw.shape[0]
+    W = traversal.bitmap_words(vecs.shape[0])
+    visited = jnp.zeros((B, W), jnp.uint32)
+    node_ids = qids + shard_size
+    lane = jnp.arange(B, dtype=jnp.int32)
+    visited = visited.at[lane, node_ids >> 5].add(
+        jnp.uint32(1) << (node_ids & 31).astype(jnp.uint32))
+    rows = nbrs[node_ids]
+    valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
+    dist, valid, visited, n_new = traversal._probe(
+        vecs, xw, rows, valid, visited, n_data=shard_size,
+        traverse_nondata=hybrid, dist_impl=cfg.dist_impl)
+    best = jnp.min(dist, axis=1)
+    besti = jnp.take_along_axis(jnp.where(valid, rows, NO_NODE),
+                                jnp.argmin(dist, axis=1)[:, None],
+                                axis=1)[:, 0]
+    r = traversal.range_expand(
+        index, xw, theta, cfg=cfg, n_data=shard_size, hybrid=hybrid,
+        traverse_nondata=hybrid, init_idx=rows, init_dist=dist,
+        init_valid=valid, visited=visited, best_dist=best, best_idx=besti,
+        n_dist=n_new)
+    # globalize result ids
+    rank = jax.lax.axis_index(axis).astype(jnp.int32)
+    gids = jnp.where(r.pool_idx != NO_NODE,
+                     r.pool_idx + rank * shard_size, NO_NODE)
+    return (gids[None], r.pool_dist[None], r.n_pool[None], r.overflow[None],
+            r.n_dist[None])
+
+
+def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
+                             *, theta: float, cfg: TraversalConfig,
+                             hybrid: bool = False):
+    """Build the pjit'd per-wave distributed join step.
+
+    shard_axes: mesh axis name (or tuple of names) the index is sharded
+    over — e.g. ``("pod", "data")`` on the production mesh.
+    """
+    axes = (shard_axes,) if isinstance(shard_axes, str) else tuple(shard_axes)
+    flat = axes if len(axes) == 1 else axes
+    axis_size = int(np.prod([dict(mesh.shape)[a] for a in axes]))
+    # one shard per device on the shard axes — a bigger stack would be
+    # silently truncated by the per-shard body (vecs[0])
+    assert smi.n_shards == axis_size, (
+        f"index has {smi.n_shards} shards but mesh axes {axes} provide "
+        f"{axis_size} devices")
+    spec_idx = P(flat)
+    body = functools.partial(
+        _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
+        hybrid=hybrid, axis=flat)
+
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_idx, spec_idx, spec_idx, spec_idx, P(), P(), P()),
+        out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx),
+        check_vma=False)
+
+    @jax.jit
+    def step(vecs, nbrs, mnd, start, xw, qids, lane_valid):
+        return mapped(vecs, nbrs, mnd, start, xw, qids, lane_valid)
+
+    return step
+
+
+def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
+                        *, theta: float, cfg: TraversalConfig,
+                        wave_size: int = 256, hybrid: bool = False):
+    """Host driver: waves of queries against all shards; assemble pairs."""
+    X = jnp.asarray(X)
+    nq = X.shape[0]
+    step = make_distributed_mi_join(mesh, shard_axes, smi, theta=theta,
+                                    cfg=cfg, hybrid=hybrid)
+    pairs_out = []
+    stats = dict(n_dist=0, n_overflow=0)
+    for q0 in range(0, nq, wave_size):
+        ids = np.arange(q0, min(q0 + wave_size, nq))
+        padded = np.zeros(wave_size, np.int32)
+        padded[:ids.size] = ids
+        lane_valid = np.zeros(wave_size, bool)
+        lane_valid[:ids.size] = True
+        with jax.set_mesh(mesh):
+            gids, gdist, n_pool, overflow, n_dist = step(
+                smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start,
+                X[jnp.asarray(padded)], jnp.asarray(padded),
+                jnp.asarray(lane_valid))
+        gids = np.asarray(gids)          # (S, B, C)
+        n_pool = np.asarray(n_pool)      # (S, B)
+        S, B, C = gids.shape
+        mask = np.arange(C)[None, None, :] < n_pool[:, :, None]
+        mask &= lane_valid[None, :, None]
+        sh, ln, sl = np.nonzero(mask)
+        pairs_out.append(np.stack([padded[ln], gids[sh, ln, sl]], axis=1))
+        stats["n_dist"] += int(np.asarray(n_dist)[:, lane_valid].sum())
+        stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
+    pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
+             else np.empty((0, 2), np.int64)).astype(np.int64)
+    return pairs, stats
+
+
+# ---------------------------------------------------------------------------
+# exact NLJ with 2-D (data × model) sharding — dimension-parallel distances
+# ---------------------------------------------------------------------------
+
+def make_distributed_nlj_count(mesh: Mesh, data_axes, model_axis: str,
+                               *, theta: float):
+    """Exact per-query counts with Y rows sharded over data axes and the
+    vector dimension sharded over the model axis (psum of partial dists)."""
+    data_axes = ((data_axes,) if isinstance(data_axes, str)
+                 else tuple(data_axes))
+
+    def body(x, y):  # x: (B, d/m), y: (N/s, d/m)
+        # partial squared-distance terms over the local dim slice
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)
+        yn = jnp.sum(y * y, axis=-1, keepdims=True).T
+        xy = x @ y.T
+        part = xn + yn - 2.0 * xy                      # (B, N/s)
+        d2 = jax.lax.psum(part, model_axis)            # full squared dists
+        cnt = jnp.sum(d2 < jnp.float32(theta) ** 2, axis=1).astype(jnp.int32)
+        return jax.lax.psum(cnt, data_axes)            # (B,) global counts
+
+    mapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, model_axis), P(data_axes, model_axis)),
+        out_specs=P(),
+        check_vma=False)
+    return jax.jit(mapped)

@@ -1,0 +1,285 @@
+"""Offline graph-index construction (paper §4.4, NSG [16] style) in JAX.
+
+Pipeline (all heavy compute jitted; thin numpy orchestration for the
+connectivity repair, which is offline and O(repairs)):
+
+  1. exact kNN graph — blocked pairwise distances (kernels.ops) with a
+     running top-k merge so memory stays O(block² + N·k).
+  2. RNG/MRNG edge pruning — the paper's Fig. 5 rule: walking candidates in
+     ascending distance from u, keep v iff no already-kept w has
+     dist(w, v) < dist(u, v). (Candidates are sorted, so dist(u,w) <
+     dist(u,v) holds for every kept w automatically.) This is the property
+     that guarantees each node's top-1 NN stays in its neighborhood — the
+     merged index's O(1)-seed offloading rests on it.
+  3. medoid navigating node.
+  4. connectivity repair — NSG's tree-span: nodes unreachable from the
+     medoid get attached to their nearest reachable node (extra edge slots
+     are reserved for this).
+
+The merged index G_{X∪Y} (paper §4.4) is the same construction over
+concat([Y, X]) with ``n_data = |Y|``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import NO_NODE, GraphIndex
+from repro.kernels import ops
+
+Array = jax.Array
+_INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# 1. exact kNN graph (blocked)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "dblock", "impl"))
+def _knn_block(qvecs: Array, vecs: Array, qoff: Array, *, k: int,
+               dblock: int, impl: str | None) -> tuple[Array, Array]:
+    """kNN of a query block against all vecs (excluding self), via scan."""
+    n = vecs.shape[0]
+    nblocks = -(-n // dblock)
+    npad = nblocks * dblock
+    vpad = jnp.pad(vecs, ((0, npad - n), (0, 0)))
+    bq = qvecs.shape[0]
+
+    def body(carry, j):
+        bd, bi = carry
+        yblk = jax.lax.dynamic_slice_in_dim(vpad, j * dblock, dblock)
+        d = ops.pairwise_sq_dists(qvecs, yblk, impl=impl)      # (bq, dblock)
+        ids = j * dblock + jnp.arange(dblock, dtype=jnp.int32)[None, :]
+        ids = jnp.broadcast_to(ids, d.shape)
+        valid = ids < n
+        # self-exclusion: query block rows are vecs[qoff + i]
+        self_ids = qoff + jnp.arange(bq, dtype=jnp.int32)
+        is_self = ids == self_ids[:, None]
+        d = jnp.where(valid & ~is_self, d, _INF)
+        bd, bi = ops.topk_merge(bd, bi, d, ids)
+        return (bd, bi), None
+
+    bd0 = jnp.full((bq, k), _INF)
+    bi0 = jnp.full((bq, k), NO_NODE, jnp.int32)
+    (bd, bi), _ = jax.lax.scan(body, (bd0, bi0), jnp.arange(nblocks))
+    return bd, bi
+
+
+def exact_knn(vecs: Array, k: int, *, qblock: int = 512, dblock: int = 8192,
+              impl: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Exact kNN graph: returns (dists (N,k) f32, ids (N,k) i32), ascending."""
+    n = vecs.shape[0]
+    out_d = np.empty((n, k), np.float32)
+    out_i = np.empty((n, k), np.int32)
+    for q0 in range(0, n, qblock):
+        q1 = min(q0 + qblock, n)
+        qv = vecs[q0:q1]
+        bd, bi = _knn_block(qv, vecs, jnp.int32(q0), k=k, dblock=dblock,
+                            impl=impl)
+        out_d[q0:q1] = np.asarray(bd)
+        out_i[q0:q1] = np.asarray(bi)
+    return out_d, out_i
+
+
+# ---------------------------------------------------------------------------
+# 2. RNG / MRNG pruning (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("R",))
+def _rng_prune_block(vecs: Array, cand_ids: Array, cand_d: Array, *, R: int
+                     ) -> Array:
+    """Prune candidate lists (ascending by distance) to RNG edges, max R.
+
+    Args:
+      vecs: (N, d) all vectors.
+      cand_ids: (b, k) candidate ids per node (NO_NODE padded, ascending d).
+      cand_d: (b, k) squared distances node→candidate.
+    Returns:
+      (b, R) pruned neighbor ids (NO_NODE padded, ascending by distance).
+    """
+    b, k = cand_ids.shape
+    cvecs = vecs[jnp.clip(cand_ids, 0)]                      # (b, k, d)
+    # pairwise squared distances among candidates of each node
+    cn = jnp.sum(cvecs.astype(jnp.float32) ** 2, axis=-1)    # (b, k)
+    cc = jnp.einsum("bkd,bjd->bkj", cvecs.astype(jnp.float32),
+                    cvecs.astype(jnp.float32))
+    pair = jnp.maximum(cn[:, :, None] + cn[:, None, :] - 2.0 * cc, 0.0)
+    valid = cand_ids != NO_NODE
+
+    def body(i, keep):
+        # v = candidate i; conflict if any kept w (w earlier => closer to u)
+        # with dist(w, v) < dist(u, v)
+        conflict = jnp.any(keep & (pair[:, :, i] < cand_d[:, i][:, None]),
+                           axis=1)
+        kept_so_far = jnp.sum(keep, axis=1)
+        ok = valid[:, i] & ~conflict & (kept_so_far < R)
+        return keep.at[:, i].set(ok)
+
+    keep = jax.lax.fori_loop(0, k, body, jnp.zeros((b, k), bool))
+    # compact kept ids to the left, preserving ascending order
+    pos = jnp.cumsum(keep, axis=1) - 1                        # target slot
+    pos = jnp.where(keep, pos, R)                             # dump to R
+    out = jnp.full((b, R + 1), NO_NODE, jnp.int32)
+    out = out.at[jnp.arange(b)[:, None], pos].set(
+        jnp.where(keep, cand_ids, NO_NODE))
+    return out[:, :R]
+
+
+# ---------------------------------------------------------------------------
+# 3.+4. medoid & connectivity repair
+# ---------------------------------------------------------------------------
+
+def _medoid(vecs: Array, sample: int = 4096, seed: int = 0) -> int:
+    n = vecs.shape[0]
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(n, size=min(sample, n), replace=False)
+    sub = vecs[jnp.asarray(idx)]
+    d = ops.pairwise_sq_dists(sub, sub)
+    return int(idx[int(np.argmin(np.asarray(jnp.sum(d, axis=1))))])
+
+
+def _reachable(nbrs: np.ndarray, start: int) -> np.ndarray:
+    """BFS reachability over the dense neighbor table (offline, numpy)."""
+    n = nbrs.shape[0]
+    seen = np.zeros(n, bool)
+    seen[start] = True
+    frontier = np.array([start])
+    while frontier.size:
+        nxt = nbrs[frontier].reshape(-1)
+        nxt = nxt[nxt >= 0]
+        nxt = nxt[~seen[nxt]]
+        if nxt.size == 0:
+            break
+        nxt = np.unique(nxt)
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+def _add_reverse_edges(nbrs: np.ndarray) -> np.ndarray:
+    """Insert backward edges into free slots (NSG post-pruning step).
+
+    RNG pruning yields directed edges; without back-edges a search seeded
+    inside a tight cluster cannot climb back out toward other regions
+    (DESIGN §2 — this is what makes work-sharing seeds navigable). For each
+    edge u→v we add v→u when v has room and the edge is absent.
+    """
+    n, R = nbrs.shape
+    u = np.repeat(np.arange(n, dtype=np.int64), R)
+    v = nbrs.reshape(-1).astype(np.int64)
+    ok = v >= 0
+    u, v = u[ok], v[ok]
+    order = np.argsort(v, kind="stable")
+    u, v = u[order], v[order]
+    starts = np.searchsorted(v, np.arange(n))
+    ends = np.searchsorted(v, np.arange(n) + 1)
+    for node in range(n):
+        s, e = starts[node], ends[node]
+        if s == e:
+            continue
+        row = nbrs[node]
+        free = np.flatnonzero(row == NO_NODE)
+        if free.size == 0:
+            continue
+        have = set(row[row >= 0].tolist())
+        j = 0
+        for cand in u[s:e]:
+            if j >= free.size:
+                break
+            if cand not in have:
+                nbrs[node, free[j]] = cand
+                have.add(int(cand))
+                j += 1
+    return nbrs
+
+
+def _repair_connectivity(vecs_np: np.ndarray, nbrs: np.ndarray, start: int,
+                         impl: str | None) -> np.ndarray:
+    """Attach unreachable nodes to their nearest reachable node (NSG §tree)."""
+    n, R = nbrs.shape
+    for _ in range(64):  # bounded repair rounds
+        seen = _reachable(nbrs, start)
+        missing = np.flatnonzero(~seen)
+        if missing.size == 0:
+            break
+        reach_ids = np.flatnonzero(seen)
+        # nearest reachable node for each missing node (blocked exact)
+        mv = jnp.asarray(vecs_np[missing])
+        rv = jnp.asarray(vecs_np[reach_ids])
+        d = np.asarray(ops.pairwise_sq_dists(mv, rv, impl=impl))
+        host = reach_ids[np.argmin(d, axis=1)]
+        for m, h in zip(missing, host):
+            row = nbrs[h]
+            free = np.flatnonzero(row == NO_NODE)
+            if free.size:
+                nbrs[h, free[0]] = m
+            else:
+                nbrs[h, R - 1] = m  # evict farthest edge (last slot)
+    return nbrs
+
+
+# ---------------------------------------------------------------------------
+# public builders
+# ---------------------------------------------------------------------------
+
+def build_index(vecs, *, k: int = 48, degree: int = 32, n_data: int | None = None,
+                prune_block: int = 1024, seed: int = 0,
+                impl: str | None = None, style: str = "nsg") -> GraphIndex:
+    """Build a graph index over ``vecs``.
+
+    Args:
+      vecs: (N, d) float array (numpy or jax).
+      k: candidate-list size for pruning (kNN width).
+      degree: max out-degree R after pruning; one slot is reserved headroom
+        for connectivity-repair edges.
+      n_data: number of *data* nodes (ids [0, n_data)); defaults to N
+        (plain data index). For a merged index pass |Y| with vecs =
+        concat([Y, X]).
+      style: "nsg" (RNG/MRNG pruning — the paper's default [16]) or "nsw"
+        (no diversity pruning: top-R kNN edges — the flat navigable-small-
+        world graph, our TPU-shape stand-in for HNSW in the paper's Fig. 15
+        index-type ablation; true HNSW hierarchy does not map to the dense
+        neighbor-table traversal, see DESIGN §2).
+    """
+    vecs = jnp.asarray(vecs)
+    n = vecs.shape[0]
+    k = min(k, n - 1)
+    cand_d, cand_i = exact_knn(vecs, k, impl=impl)
+    nbrs = np.empty((n, degree), np.int32)
+    cand_d_j = jnp.asarray(cand_d)
+    cand_i_j = jnp.asarray(cand_i)
+    if style == "nsw":
+        half = max(degree // 2, 1)   # leave slots for reverse edges
+        top = np.asarray(cand_i_j[:, :half], np.int32)
+        nbrs[:, :half] = top
+        nbrs[:, half:] = NO_NODE
+    else:
+        for b0 in range(0, n, prune_block):
+            b1 = min(b0 + prune_block, n)
+            nbrs[b0:b1] = np.asarray(_rng_prune_block(
+                vecs, cand_i_j[b0:b1], cand_d_j[b0:b1], R=degree))
+    start = _medoid(vecs, seed=seed)
+    vecs_np = np.asarray(vecs)
+    nbrs = _add_reverse_edges(nbrs)
+    nbrs = _repair_connectivity(vecs_np, nbrs, start, impl)
+    nbrs = _add_reverse_edges(nbrs)  # make repair spokes two-way as well
+    # OOD side table (paper §4.5): mean L2 (not squared) neighbor distance.
+    nbrs_j = jnp.asarray(nbrs)
+    nvecs = vecs[jnp.clip(nbrs_j, 0)]
+    nd = jnp.sqrt(ops.rowwise_sq_dists(vecs, nvecs, impl=impl))
+    mask = nbrs_j != NO_NODE
+    mnd = jnp.sum(jnp.where(mask, nd, 0.0), axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1)
+    return GraphIndex(vecs=vecs, nbrs=nbrs_j, start=jnp.int32(start),
+                      mean_nbr_dist=mnd,
+                      n_data=int(n if n_data is None else n_data))
+
+
+def build_merged_index(Y, X, **kw) -> GraphIndex:
+    """Merged index G_{X∪Y} (paper §4.4): data ids [0,|Y|), query ids after."""
+    Y = jnp.asarray(Y)
+    X = jnp.asarray(X)
+    return build_index(jnp.concatenate([Y, X], axis=0), n_data=Y.shape[0], **kw)

@@ -1,0 +1,46 @@
+"""Out-of-distribution query prediction (paper §4.5, Fig. 7).
+
+A query is predicted OOD when the mean distance d1 from the query to its
+neighboring *data* points (its neighbor row in the merged index) exceeds
+``factor``× the mean distance d2 from those neighbors to *their* neighbors
+(2-hop from the query). d2 is read from the per-node ``mean_nbr_dist`` side
+table stored at index-construction time (paper: <1% size/time overhead).
+
+All distances here are plain L2 (the paper's thresholds are L2), hence the
+sqrt on the squared-distance kernel output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NO_NODE, GraphIndex
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("factor",))
+def predict_ood(merged: GraphIndex, x: Array, qids: Array, *,
+                factor: float = 1.5) -> Array:
+    """OOD flags for queries.
+
+    Args:
+      merged: merged index G_{X∪Y} (query node ids ≥ n_data).
+      x: (B, d) query vectors; qids: (B,) their node ids in the merged index.
+    Returns:
+      (B,) bool — True ⇒ predicted OOD ⇒ use hybrid BBFS.
+    """
+    rows = merged.nbrs[qids]                                # (B, R)
+    is_data = (rows != NO_NODE) & (rows < merged.n_data)
+    nvecs = merged.vecs[jnp.clip(rows, 0)]                  # (B, R, d)
+    d1_all = jnp.sqrt(ops.rowwise_sq_dists(x, nvecs))       # (B, R) L2
+    cnt = jnp.maximum(jnp.sum(is_data, axis=1), 1)
+    d1 = jnp.sum(jnp.where(is_data, d1_all, 0.0), axis=1) / cnt
+    d2_all = merged.mean_nbr_dist[jnp.clip(rows, 0)]        # (B, R)
+    d2 = jnp.sum(jnp.where(is_data, d2_all, 0.0), axis=1) / cnt
+    # queries with no data neighbors at all are OOD by definition
+    none = jnp.sum(is_data, axis=1) == 0
+    return none | (d1 > factor * d2)

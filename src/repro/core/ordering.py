@@ -1,0 +1,104 @@
+"""MST query ordering for work sharing (paper §2.2.3 / Alg. 1 line 2).
+
+SIMJOIN builds a Minimum Spanning Tree over the query index G_X, augmented
+with a star of edges from the data index's navigating point s_Y to every
+query (re-ensuring connectivity and giving far-away queries a fallback
+parent). Parents are processed before children so a child can seed from its
+parent's cached results; the MST minimizes total parent-child distance, i.e.
+maximizes expected sharing benefit.
+
+TPU adaptation (DESIGN §2.4): the tree is computed with a dense Prim pass in
+JAX (O(|X|·(|X| + R)) — offline, once per join), then flattened into
+*wavefronts*: all queries at tree depth ℓ form wave ℓ and are processed as
+one batch. Parent results are always complete before a child's wave starts,
+so the sharing semantics are preserved while exposing batch parallelism.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import NO_NODE, GraphIndex
+from repro.kernels import ops
+
+Array = jax.Array
+_INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(jax.jit)
+def _prim(xvecs: Array, nbrs: Array, sy_vec: Array) -> Array:
+    """Prim's MST over G_X edges + star edges to s_Y.
+
+    Node -1 (s_Y) is the root. Returns parent[i] ∈ {-1} ∪ [0, n): the MST
+    parent of query i (-1 means "seed from s_Y").
+    """
+    n, R = nbrs.shape
+    # star-edge keys: dist(x_i, s_Y)
+    key = ops.rowwise_sq_dists(sy_vec[None, :], xvecs[None, :, :])[0]  # (n,)
+    parent = jnp.full((n,), NO_NODE, jnp.int32)
+    in_tree = jnp.zeros((n,), bool)
+    # precompute G_X edge lengths
+    nvecs = xvecs[jnp.clip(nbrs, 0)]                        # (n, R, d)
+    edge_d = ops.rowwise_sq_dists(xvecs, nvecs)             # (n, R)
+    edge_d = jnp.where(nbrs != NO_NODE, edge_d, _INF)
+
+    def body(_, carry):
+        key, parent, in_tree = carry
+        u = jnp.argmin(jnp.where(in_tree, _INF, key)).astype(jnp.int32)
+        in_tree = in_tree.at[u].set(True)
+        vids = nbrs[u]                                      # (R,)
+        vd = edge_d[u]
+        cur = key[jnp.clip(vids, 0)]
+        upd = (vids != NO_NODE) & ~in_tree[jnp.clip(vids, 0)] & (vd < cur)
+        tgt = jnp.where(upd, vids, n)                       # n = dump slot
+        key = jnp.pad(key, (0, 1)).at[tgt].min(
+            jnp.where(upd, vd, _INF))[:n]
+        parent = jnp.pad(parent, (0, 1)).at[tgt].set(u)[:n]
+        return key, parent, in_tree
+
+    _, parent, _ = jax.lax.fori_loop(
+        0, n, body, (key, parent, in_tree))
+    return parent
+
+
+def mst_order(index_x: GraphIndex, sy_vec: Array) -> np.ndarray:
+    """MST parents for every query (−1 ⇒ parent is s_Y)."""
+    return np.asarray(_prim(index_x.vecs, index_x.nbrs, jnp.asarray(sy_vec)))
+
+
+def wavefronts(parent: np.ndarray, wave_size: int) -> list[np.ndarray]:
+    """Group queries by MST depth; chunk each level to ≤ wave_size.
+
+    Returns a list of int arrays of query ids; every query's parent appears
+    in a strictly earlier wave (or is s_Y).
+    """
+    n = parent.shape[0]
+    level = np.full(n, -1, np.int64)
+    roots = np.flatnonzero(parent < 0)
+    level[roots] = 0
+    # children lists
+    order = np.argsort(parent, kind="stable")
+    frontier = roots
+    lv = 0
+    children: dict[int, list[int]] = {}
+    for i in range(n):
+        p = parent[i]
+        if p >= 0:
+            children.setdefault(int(p), []).append(i)
+    while frontier.size:
+        lv += 1
+        nxt: list[int] = []
+        for u in frontier:
+            nxt.extend(children.get(int(u), ()))
+        frontier = np.asarray(nxt, np.int64)
+        level[frontier] = lv
+    assert (level >= 0).all(), "MST parent array is not a spanning forest"
+    waves: list[np.ndarray] = []
+    for ell in range(level.max() + 1):
+        ids = np.flatnonzero(level == ell)
+        for c0 in range(0, ids.size, wave_size):
+            waves.append(ids[c0:c0 + wave_size])
+    return waves

@@ -1,0 +1,128 @@
+"""Shared types for the vector-join core."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Sentinel for "no neighbor" slots in padded neighbor tables.
+NO_NODE = -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphIndex:
+    """A graph-based ANN index in TPU-friendly dense form.
+
+    The adjacency is a padded neighbor table (the TPU analogue of NSG's
+    adjacency lists). ``mean_nbr_dist`` is the paper's §4.5 side table (one
+    f32 per node, <1% overhead) used by the OOD predictor.
+    """
+    vecs: Array                 # (N, d) node vectors
+    nbrs: Array                 # (N, R) int32 neighbor ids, NO_NODE padded
+    start: Array                # () int32 navigating node (medoid)
+    mean_nbr_dist: Array        # (N,) f32 mean L2 distance to neighbors
+    n_data: int = dataclasses.field(metadata=dict(static=True))
+    # Nodes with id < n_data are data points (Y). For a merged index
+    # G_{X∪Y}, ids in [n_data, N) are query nodes; for a plain data index,
+    # n_data == N.
+
+    @property
+    def n_nodes(self) -> int:
+        return self.vecs.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.nbrs.shape[1]
+
+    def is_data(self, ids: Array) -> Array:
+        return (ids >= 0) & (ids < self.n_data)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraversalConfig:
+    """Knobs for the batched traversal engine (paper Alg. 2 & 4).
+
+    beam_width       — L, the greedy-phase queue size (paper default 256).
+    expand_per_iter  — E, beam entries expanded per loop iteration (E=1 is
+                       the paper's sequential best-first; larger E trades
+                       faithfulness of the *work metric* for throughput;
+                       result semantics are unchanged).
+    patience         — ES plateau iterations (paper: 10); <0 disables ES
+                       (the INDEX baseline).
+    pool_cap         — C, capacity of the in-range result pool per query
+                       (the paper's unbounded BFS queue; overflow counted).
+    hybrid_beam      — L for the BBFS out-range queue (paper Alg. 4);
+                       0 = plain BFS.
+    hybrid_patience  — BBFS early-stop plateau (paper: 1).
+    seeds_max        — max seeds probed per query (caps HWS parent caches).
+    max_iters        — hard bound on loop iterations (safety net).
+    """
+    beam_width: int = 256
+    expand_per_iter: int = 4
+    patience: int = 10
+    pool_cap: int = 1024
+    hybrid_beam: int = 64
+    hybrid_patience: int = 1
+    seeds_max: int = 16
+    max_iters: int = 4096
+    dist_impl: str | None = None   # kernels.ops impl override
+
+
+METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinConfig:
+    method: str = "es_mi_adapt"
+    theta: float = 1.0
+    traversal: TraversalConfig = dataclasses.field(default_factory=TraversalConfig)
+    wave_size: int = 256           # queries processed per batched wave
+    ood_factor: float = 1.5        # paper §4.5 d1 > 1.5 * d2
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; one of {METHODS}")
+
+
+@dataclasses.dataclass
+class JoinStats:
+    n_dist: int = 0                # distance computations (paper's C4 metric)
+    n_iters: int = 0               # traversal loop iterations
+    n_overflow: int = 0            # in-range pool overflow (missed results)
+    greedy_seconds: float = 0.0
+    expand_seconds: float = 0.0    # BFS / BBFS phase
+    other_seconds: float = 0.0     # ordering, caching, assembly
+    n_ood: int = 0                 # queries predicted OOD (adapt only)
+    peak_cache_entries: int = 0    # work-sharing cache footprint
+
+    @property
+    def total_seconds(self) -> float:
+        return self.greedy_seconds + self.expand_seconds + self.other_seconds
+
+    def as_dict(self) -> dict[str, Any]:
+        return dict(dataclasses.asdict(self), total_seconds=self.total_seconds)
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """Join output: pairs[i] = (query_id, data_id)."""
+    pairs: np.ndarray              # (P, 2) int64
+    stats: JoinStats
+
+    def pair_set(self) -> set[tuple[int, int]]:
+        return set(map(tuple, self.pairs.tolist()))
+
+
+def recall(result: JoinResult, truth_pairs: np.ndarray) -> float:
+    """Global recall vs ground-truth pair array (paper §2.1)."""
+    if len(truth_pairs) == 0:
+        return 1.0
+    found = result.pair_set()
+    truth = set(map(tuple, np.asarray(truth_pairs).tolist()))
+    return len(found & truth) / len(truth)

@@ -1,0 +1,151 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Implementation selection:
+  * ``pallas``            — compiled Pallas (TPU target).
+  * ``pallas_interpret``  — Pallas interpret mode (CPU validation of the
+                            exact kernel bodies; used by tests).
+  * ``ref``               — pure-jnp oracle (fast on CPU; default off-TPU).
+
+Wrappers pad inputs to block-divisible shapes and slice results back, with
+padding arranged so it can never contaminate results (padded data rows get
++inf norms / +inf distances).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance as _distance
+from repro.kernels import nlj as _nlj
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+_BIG = jnp.float32(1e30)
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _pad_rows(a: Array, n: int, fill: float = 0.0) -> Array:
+    if a.shape[0] == n:
+        return a
+    pad = jnp.full((n - a.shape[0],) + a.shape[1:], fill, a.dtype)
+    return jnp.concatenate([a, pad], axis=0)
+
+
+def _pad_axis(a: Array, n: int, axis: int, fill: float = 0.0) -> Array:
+    if a.shape[axis] == n:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, n - a.shape[axis])
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pairwise_sq_dists(x: Array, y: Array, *, impl: str | None = None) -> Array:
+    """(B, d) × (N, d) → (B, N) f32 squared L2 distances."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.pairwise_sq_dists(x, y)
+    B, d = x.shape
+    N, _ = y.shape
+    bm, bn, bk = 256, 512, 512
+    Bp, Np, dp = _round_up(B, min(bm, _round_up(B, 8))), _round_up(
+        N, min(bn, _round_up(N, 128))), _round_up(d, min(bk, _round_up(d, 128)))
+    xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
+    yp = _pad_axis(_pad_rows(y, Np), dp, axis=1)
+    out = _distance.pairwise_sq_dists_pallas(
+        xp, yp, bm=bm, bn=bn, bk=bk, interpret=(impl == "pallas_interpret"))
+    return out[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rowwise_sq_dists(x: Array, cands: Array, *, impl: str | None = None) -> Array:
+    """(B, d) × (B, K, d) → (B, K) f32 per-query candidate distances."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.rowwise_sq_dists(x, cands)
+    B, d = x.shape
+    _, K, _ = cands.shape
+    bm, bkk, dk = 8, 128, 512
+    Bp = _round_up(B, min(bm, _round_up(B, 8)))
+    Kp = _round_up(K, min(bkk, _round_up(K, 128)))
+    dp = _round_up(d, min(dk, _round_up(d, 128)))
+    xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
+    cp = _pad_axis(_pad_axis(_pad_rows(cands, Bp), Kp, axis=1), dp, axis=2)
+    out = _distance.rowwise_sq_dists_pallas(
+        xp, cp, bm=bm, bkk=bkk, dk=dk, interpret=(impl == "pallas_interpret"))
+    return out[:B, :K]
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "impl"))
+def nlj_count(x: Array, y: Array, *, theta: float,
+              impl: str | None = None) -> Array:
+    """Exact per-query join counts |{j : dist(x_b, y_j) < theta}| → (B,) i32."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.nlj_count(x, y, theta)
+    B, d = x.shape
+    N, _ = y.shape
+    bm, bn, bk = 256, 512, 512
+    Bp = _round_up(B, min(bm, _round_up(B, 8)))
+    Np = _round_up(N, min(bn, _round_up(N, 128)))
+    dp = _round_up(d, min(bk, _round_up(d, 128)))
+    xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
+    # Padded data rows: shift them far away so they never match. Padding the
+    # *vector* with a huge coordinate inflates ‖y‖² to ~1e60 ≫ θ².
+    yp = _pad_axis(_pad_rows(y, Np, fill=1e30), dp, axis=1)
+    out = _nlj.nlj_count_pallas(xp, yp, float(theta), bm=bm, bn=bn, bk=bk,
+                                interpret=(impl == "pallas_interpret"))
+    return out[:B, 0]
+
+
+def nlj_mask(x: Array, y: Array, *, theta: float,
+             impl: str | None = None) -> Array:
+    """Exact boolean match matrix (B, N) — via pairwise kernel + compare."""
+    d = pairwise_sq_dists(x, y, impl=impl)
+    return d < jnp.float32(theta) ** 2
+
+
+def topk_merge(beam_dist: Array, beam_idx: Array, cand_dist: Array,
+               cand_idx: Array, *, impl: str | None = None
+               ) -> tuple[Array, Array]:
+    """Merge sorted beam with candidates; keep L smallest."""
+    impl = impl or "ref"   # argsort is fine on CPU; kernel is the TPU path
+    if impl == "ref":
+        return _ref.topk_merge(beam_dist, beam_idx, cand_dist, cand_idx)
+    from repro.kernels import topk_merge as _tk
+    return _tk.topk_merge_pallas(
+        beam_dist, beam_idx, cand_dist, cand_idx,
+        interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def gather_sq_dists(vecs: Array, x: Array, idx: Array, *,
+                    impl: str | None = None) -> Array:
+    """(N,d) vecs × (B,d) queries × (B,K) ids → (B,K) f32 sq dists.
+
+    NO_NODE (-1) slots come back +inf. The Pallas path fuses the gather
+    with the distance (ids scalar-prefetched; see kernels/gather_distance).
+    """
+    impl = impl or default_impl()
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    if impl == "ref":
+        d = _ref.rowwise_sq_dists(x, vecs[safe])
+    else:
+        from repro.kernels import gather_distance as _gd
+        d = _gd.gather_sq_dists_pallas(
+            vecs, x, safe, interpret=(impl == "pallas_interpret"))
+    return jnp.where(valid, d, jnp.float32(jnp.inf))

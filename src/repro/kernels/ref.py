@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantic ground truth: each kernel in this package must be
+allclose to the corresponding function here across shape/dtype sweeps
+(see tests/test_kernels.py). They are also the default implementation on
+CPU hosts, where Pallas runs in interpret mode (slow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_sq_dists(x: Array, y: Array) -> Array:
+    """Squared L2 distances between all rows of x and y.
+
+    Args:
+      x: (B, d) queries.
+      y: (N, d) data.
+    Returns:
+      (B, N) float32 squared distances.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)          # (B, 1)
+    yn = jnp.sum(y * y, axis=-1, keepdims=True).T        # (1, N)
+    xy = x @ y.T                                         # (B, N)
+    d = xn + yn - 2.0 * xy
+    return jnp.maximum(d, 0.0)
+
+
+def rowwise_sq_dists(x: Array, cands: Array) -> Array:
+    """Squared L2 distance between each query and its own candidate rows.
+
+    Args:
+      x: (B, d) queries.
+      cands: (B, K, d) per-query gathered candidate vectors.
+    Returns:
+      (B, K) float32 squared distances.
+    """
+    x = x.astype(jnp.float32)
+    cands = cands.astype(jnp.float32)
+    diff = cands - x[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def nlj_count(x: Array, y: Array, theta: float) -> Array:
+    """Exact nested-loop-join matched-pair count per query.
+
+    Returns (B,) int32: |{j : dist(x_b, y_j) < theta}| (theta on L2, not
+    squared — callers pass the paper's thresholds directly).
+    """
+    d = pairwise_sq_dists(x, y)
+    return jnp.sum(d < jnp.float32(theta) ** 2, axis=-1).astype(jnp.int32)
+
+
+def nlj_mask(x: Array, y: Array, theta: float) -> Array:
+    """Exact nested-loop-join boolean match matrix (B, N)."""
+    d = pairwise_sq_dists(x, y)
+    return d < jnp.float32(theta) ** 2
+
+
+def topk_merge(beam_dist: Array, beam_idx: Array, cand_dist: Array,
+               cand_idx: Array) -> tuple[Array, Array]:
+    """Merge a sorted beam with new candidates, keep the L smallest.
+
+    Args:
+      beam_dist/beam_idx: (B, L) current beam (ascending by dist).
+      cand_dist/cand_idx: (B, K) new candidates (any order; +inf = invalid).
+    Returns:
+      (B, L) merged beam, ascending.
+    """
+    L = beam_dist.shape[-1]
+    alld = jnp.concatenate([beam_dist, cand_dist], axis=-1)
+    alli = jnp.concatenate([beam_idx, cand_idx], axis=-1)
+    order = jnp.argsort(alld, axis=-1)
+    alld = jnp.take_along_axis(alld, order, axis=-1)
+    alli = jnp.take_along_axis(alli, order, axis=-1)
+    return alld[:, :L], alli[:, :L]

@@ -1,0 +1,107 @@
+"""Sort-free beam/candidate top-k merge Pallas kernel.
+
+The traversal engine merges a sorted beam (B, L) with new candidates
+(B, K) every iteration, keeping the L smallest. ``argsort`` lowers poorly
+inside TPU kernels; instead this kernel computes each element's *rank* in
+the merged order by counting strictly-smaller elements (rank-select), then
+scatters through one-hot matmuls — compare + matmul only, all MXU/VPU
+friendly, no data-dependent control flow.
+
+Total order (ties can't collide):
+  * beam elements keep their relative order (they are pre-sorted);
+  * beam elements win ties against candidates;
+  * candidates tie-break by their slot index.
+
+Ranks ≥ L fall off the end (one-hot row is all zeros — the element simply
+does not land). Indices are carried through the one-hot matmul in f32 —
+exact for ids < 2^24 (node ids are int32 < 16.7M per shard).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+_INF = jnp.float32(jnp.inf)
+
+
+_BIG = 1e37   # finite +inf stand-in: 0·inf = nan would poison the matmuls
+
+
+def _kernel(bd_ref, bi_ref, cd_ref, ci_ref, od_ref, oi_ref, *, L: int,
+            K: int):
+    bd = bd_ref[...].astype(jnp.float32)        # (bm, L) sorted ascending
+    bi = bi_ref[...].astype(jnp.float32)
+    cd = cd_ref[...].astype(jnp.float32)        # (bm, K)
+    ci = ci_ref[...].astype(jnp.float32)
+    bd = jnp.where(jnp.isfinite(bd), bd, _BIG)
+    cd = jnp.where(jnp.isfinite(cd), cd, _BIG)
+    # beam ranks: own position + #cands strictly smaller (beam wins ties)
+    lt_cb = (cd[:, None, :] < bd[:, :, None]).astype(jnp.float32)  # (bm,L,K)
+    pos_b = jax.lax.broadcasted_iota(jnp.float32, bd.shape, 1)
+    rank_b = pos_b + jnp.sum(lt_cb, axis=2)                        # (bm, L)
+    # candidate ranks: #beam ≤ + #cands smaller (slot-index tie-break)
+    le_bc = (bd[:, :, None] <= cd[:, None, :]).astype(jnp.float32)
+    lt_cc = (cd[:, None, :] < cd[:, :, None]).astype(jnp.float32)  # (bm,K,K)
+    kidx = jax.lax.broadcasted_iota(jnp.float32, (1, K, K), 2)
+    tie_cc = ((cd[:, None, :] == cd[:, :, None])
+              & (kidx < jax.lax.broadcasted_iota(jnp.float32, (1, K, K), 1))
+              ).astype(jnp.float32)
+    rank_c = jnp.sum(le_bc, axis=1) + jnp.sum(lt_cc + tie_cc, axis=2)
+    # scatter by rank through one-hot matmuls (ranks >= L drop off)
+    slot = jax.lax.broadcasted_iota(jnp.float32, (1, 1, L), 2)
+    oh_b = (rank_b[:, :, None] == slot).astype(jnp.float32)        # (bm,L,L)
+    oh_c = (rank_c[:, :, None] == slot).astype(jnp.float32)        # (bm,K,L)
+    od = (jnp.einsum("blk,bl->bk", oh_b, bd)
+          + jnp.einsum("blk,bl->bk", oh_c, cd))
+    oi = (jnp.einsum("blk,bl->bk", oh_b, bi)
+          + jnp.einsum("blk,bl->bk", oh_c, ci))
+    # empty slots (total valid < L never happens here: beam is L-long) —
+    # but +inf beam entries carry through as +inf naturally
+    filled = ((jnp.sum(oh_b, axis=1) + jnp.sum(oh_c, axis=1)) > 0) \
+        & (od < _BIG)
+    od_ref[...] = jnp.where(filled, od, float("inf"))
+    oi_ref[...] = jnp.where(filled, oi, -1.0).astype(jnp.float32)
+
+
+def topk_merge_pallas(beam_dist: Array, beam_idx: Array, cand_dist: Array,
+                      cand_idx: Array, *, bm: int = 8,
+                      interpret: bool = False) -> tuple[Array, Array]:
+    """Merge sorted beam with candidates; keep the L smallest.
+
+    Args:
+      beam_dist/beam_idx: (B, L), beam_dist ascending (+inf padded).
+      cand_dist/cand_idx: (B, K), any order (+inf = invalid).
+    Returns:
+      (dist (B, L) f32 ascending, idx (B, L) int32; -1 in empty slots).
+    """
+    B, L = beam_dist.shape
+    _, K = cand_dist.shape
+    bm = min(bm, B)
+    assert B % bm == 0, (B, bm)
+    grid = (B // bm,)
+    kernel = functools.partial(_kernel, L=L, K=K)
+    od, oi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+            pl.BlockSpec((bm, L), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(beam_dist, beam_idx.astype(jnp.float32), cand_dist,
+      cand_idx.astype(jnp.float32))
+    return od, oi.astype(jnp.int32)

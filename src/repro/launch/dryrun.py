@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: docstring placement and the missing `from __future__` are
+# deliberate — the two lines above MUST precede every other statement so
+# the 512 placeholder devices exist before jax initializes.
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production mesh and extract roofline terms from the compiled artifact.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+first two lines force 512 host platform devices before jax initializes.
+
+Per cell:
+  train_4k     → the full production train step (fwd+bwd+AdamW update,
+                 grad-accum microbatches) lowered with FSDP×TP shardings;
+  prefill_32k  → prefill (forward + KV-cache emit);
+  decode_32k   → one serve_step token with a seq-long KV cache;
+  long_500k    → serve_step with a 500k cache (sequence-sharded KV).
+
+``compiled.memory_analysis()`` proves the cell fits 16 GB/chip;
+``cost_analysis()`` + the HLO collective parse feed EXPERIMENTS §Roofline.
+
+Examples:
+  python -m repro.launch.dryrun --arch tinyllama_1_1b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+  python -m repro.launch.dryrun --join join_sift_like
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get, input_specs, supported
+from repro.configs.registry import ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.optim import adamw, warmup_cosine
+from repro.roofline import analyze, model_flops_estimate
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.train.loop import make_train_step
+
+# grad-accum microbatch counts sized so per-microbatch activations fit
+# (≈ global_batch·seq/(mb·dp) tokens in flight per device) — §Perf knob
+MICROBATCHES = {
+    "llama3_405b": 16, "qwen2_vl_72b": 8, "qwen3_moe_235b_a22b": 8,
+    "deepseek_v2_236b": 8, "jamba_1_5_large_398b": 8, "gemma2_9b": 4,
+    "rwkv6_7b": 4, "h2o_danube_3_4b": 4, "tinyllama_1_1b": 2,
+    "hubert_xlarge": 2,
+}
+
+# √G two-level remat — confirmed for the deep DENSE train cells (llama3
+# 79→38 GB/dev, qwen2-vl 38→14); refuted for MoE/hybrid (boundary
+# activations are not their footprint driver, and the extra forward
+# replays the dispatch all-reduces: +30% collective) — §Perf iter 8
+REMAT_2LEVEL = {"llama3_405b", "qwen2_vl_72b"}
+
+
+def _mb_sharding_fn(mesh):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def f(ndim):
+        return jax.NamedSharding(
+            mesh, jax.P(None, dp, *([None] * (ndim - 2))))
+
+    return f
+
+
+def _train_artifacts(mc, mesh, shape, *, microbatches,
+                     seq_parallel=False):
+    opt = adamw(moment_dtype=jnp.bfloat16)
+    lr = warmup_cosine(peak_lr=3e-4, warmup_steps=2000, total_steps=500_000)
+    pshape = jax.eval_shape(lambda k: M.init_params(k, mc),
+                            jax.random.key(0))
+    pspecs = S.param_shardings(pshape, mesh)
+    step_fn = make_train_step(
+        mc, opt, lr, microbatches=microbatches, grad_shardings=pspecs,
+        mb_sharding_fn=_mb_sharding_fn(mesh) if microbatches > 1 else None)
+    oshape = jax.eval_shape(opt.init, pshape)
+    ospecs = S.param_shardings(oshape, mesh)
+    batch = input_specs(mc, shape)
+    bspecs = jax.tree.map(lambda l: S.batch_sharding_for(mesh, l), batch)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(pspecs, ospecs, bspecs, None),
+                     out_shardings=(pspecs, ospecs, None),
+                     donate_argnums=(0, 1))
+    with M.activation_sharding(
+            S.make_act_sharder(mesh, seq_parallel=seq_parallel),
+            S.make_param_pinner(mesh)):
+        return jitted.lower(pshape, oshape, batch,
+                            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _prefill_artifacts(mc, mesh, shape, *, seq_parallel=False):
+    ins = input_specs(mc, shape)
+    pshape = jax.eval_shape(lambda k: M.init_params(k, mc),
+                            jax.random.key(0))
+    pspecs = S.param_shardings(pshape, mesh)
+    bspec = S.batch_sharding_for(mesh, ins["inputs"])
+    pspec_pos = S.batch_sharding_for(mesh, ins["positions"])
+    if mc.encoder_only:
+        # encoder forward: logits over the whole sequence
+        def enc_step(params, inputs, positions):
+            h, _ = M.forward(params, mc, inputs, positions)
+            return M.logits_fn(params, mc, h)
+        jitted = jax.jit(enc_step, in_shardings=(pspecs, bspec, pspec_pos))
+        with M.activation_sharding(
+            S.make_act_sharder(mesh, seq_parallel=seq_parallel),
+            S.make_param_pinner(mesh)):
+            return jitted.lower(pshape, ins["inputs"], ins["positions"])
+    cshape = jax.eval_shape(
+        functools.partial(M.init_caches, mc, shape.batch, shape.seq))
+    cspecs = jax.tree.map(
+        lambda sp: jax.NamedSharding(mesh, sp),
+        S.cache_specs(cshape, mesh, batch=shape.batch))
+
+    def pf(params, inputs, positions):
+        return M.prefill(params, mc, inputs, positions, shape.seq)
+
+    jitted = jax.jit(pf, in_shardings=(pspecs, bspec, pspec_pos),
+                     out_shardings=(None, cspecs))
+    with M.activation_sharding(
+            S.make_act_sharder(mesh, seq_parallel=seq_parallel),
+            S.make_param_pinner(mesh)):
+        return jitted.lower(pshape, ins["inputs"], ins["positions"])
+
+
+def _decode_artifacts(mc, mesh, shape, *, seq_parallel=False):
+    ins = input_specs(mc, shape)
+    pshape = jax.eval_shape(lambda k: M.init_params(k, mc),
+                            jax.random.key(0))
+    pspecs = S.param_shardings(pshape, mesh)
+    cspecs = jax.tree.map(
+        lambda sp: jax.NamedSharding(mesh, sp),
+        S.cache_specs(ins["caches"], mesh, batch=shape.batch))
+    bspec = S.batch_sharding_for(mesh, ins["tokens"])
+    posspec = S.batch_sharding_for(mesh, ins["positions"])
+    idxspec = S.batch_sharding_for(mesh, ins["cache_index"])
+
+    def serve_step(params, tokens, positions, caches, cache_index):
+        return M.decode_step(params, mc, tokens, positions, caches,
+                             cache_index)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(pspecs, bspec, posspec, cspecs, idxspec),
+                     out_shardings=(None, cspecs),
+                     donate_argnums=(3,))
+    with M.activation_sharding(
+            S.make_act_sharder(mesh, seq_parallel=seq_parallel),
+            S.make_param_pinner(mesh)):
+        return jitted.lower(pshape, ins["tokens"], ins["positions"],
+                            ins["caches"], ins["cache_index"])
+
+
+def _memory_bytes(compiled) -> float:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return 0.0
+    if ma is None:
+        return 0.0
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(ma, attr):
+            tmp = float(getattr(ma, attr))
+            args = float(getattr(ma, "argument_size_in_bytes", 0.0))
+            out = float(getattr(ma, "output_size_in_bytes", 0.0))
+            alias = float(getattr(ma, "alias_size_in_bytes", 0.0))
+            return tmp + args + max(out - alias, 0.0)
+    return 0.0
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             microbatches: int | None = None, verbose: bool = True,
+             skip_hlo: bool = False, seq_parallel: bool = False) -> dict:
+    spec = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supported(spec, shape_name)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, skipped=True, reason=why)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    mc = spec.model
+    mb = microbatches or MICROBATCHES.get(arch, 4)
+    t0 = time.time()
+    if shape.kind == "train":
+        if arch in REMAT_2LEVEL:
+            mc = mc.with_overrides(remat="2level")
+        lowered = _train_artifacts(mc, mesh, shape, microbatches=mb,
+                                   seq_parallel=seq_parallel)
+    elif shape.kind == "prefill":
+        lowered = _prefill_artifacts(mc, mesh, shape,
+                                     seq_parallel=seq_parallel)
+    else:
+        lowered = _decode_artifacts(mc, mesh, shape,
+                                    seq_parallel=seq_parallel)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = _memory_bytes(compiled)
+    # trip-count-aware HLO cost model (cost_analysis() counts scan bodies
+    # once — see roofline/hlo_cost.py)
+    hc = analyze_hlo(compiled.as_text())
+    n_active = M.active_param_count(mc)
+    tokens = (shape.batch * shape.seq if shape.kind != "decode"
+              else shape.batch)
+    mf = model_flops_estimate(kind=shape.kind, n_params_active=n_active,
+                              tokens=tokens)
+    r = analyze(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                n_devices=mesh.size, cost=hc.as_cost_dict(),
+                model_flops=mf, peak_memory=mem, collective_override=hc)
+    out = r.as_dict()
+    out.update(skipped=False, lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), microbatches=mb,
+               tokens=tokens)
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} on {mesh_name}: "
+              f"compile {t_compile:.0f}s, {mem / 1e9:.2f} GB/dev, "
+              f"bound={r.bottleneck}, step≈{r.step_s * 1e3:.1f} ms, "
+              f"roofline {100 * r.roofline_fraction:.1f}%", flush=True)
+        print(f"  memory_analysis: {compiled.memory_analysis()}", flush=True)
+        ck = {k: v for k, v in sorted(r.collectives.items())}
+        print(f"  cost: flops/dev={r.flops_per_device:.3g} "
+              f"bytes/dev={r.bytes_per_device:.3g} wire={ck}", flush=True)
+    return out
+
+
+def run_join_cell(name: str, *, multi_pod: bool = False,
+                  verbose: bool = True) -> dict:
+    """Distributed vector-join dry-run cell (the paper's operator on the
+    production mesh — X replicated, Y sharded over (pod,)data)."""
+    from repro.configs.vectorjoin import JOIN_DRYRUN_CELLS
+    from repro.core.distributed import ShardedMergedIndex, \
+        make_distributed_mi_join
+    from repro.core.types import TraversalConfig
+
+    cell = next(c for c in JOIN_DRYRUN_CELLS if c.name == name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    shard_axes = ("pod", "data") if multi_pod else ("data",)
+    n_shards = mesh.size // mesh.devices.shape[-1]     # data(,pod) product
+    m_total = cell.n_data // n_shards + cell.n_query
+    vdtype = jnp.dtype(cell.dtype)
+    smi_shape = ShardedMergedIndex(
+        vecs=jax.ShapeDtypeStruct((n_shards, m_total, cell.dim), vdtype),
+        nbrs=jax.ShapeDtypeStruct((n_shards, m_total, cell.degree),
+                                  jnp.int32),
+        start=jax.ShapeDtypeStruct((n_shards,), jnp.int32),
+        mean_nbr_dist=jax.ShapeDtypeStruct((n_shards, m_total), jnp.float32),
+        shard_size=cell.n_data // n_shards, n_query=cell.n_query)
+    tcfg = TraversalConfig(pool_cap=cell.pool_cap, max_iters=cell.max_iters)
+    step = make_distributed_mi_join(mesh, shard_axes, smi_shape, theta=1.0,
+                                    cfg=tcfg, hybrid=cell.hybrid)
+    xw = jax.ShapeDtypeStruct((cell.wave_size, cell.dim), vdtype)
+    qids = jax.ShapeDtypeStruct((cell.wave_size,), jnp.int32)
+    lv = jax.ShapeDtypeStruct((cell.wave_size,), jnp.bool_)
+    t0 = time.time()
+    lowered = step.lower(smi_shape.vecs, smi_shape.nbrs,
+                         smi_shape.mean_nbr_dist, smi_shape.start,
+                         xw, qids, lv)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = _memory_bytes(compiled)
+    hc = analyze_hlo(compiled.as_text())
+    # the traversal while-loop exits data-dependently (no static trip
+    # count): scale by the measured expected iteration count per wave
+    hc.flops *= cell.expected_iters
+    hc.bytes *= cell.expected_iters
+    hc.bytes_min *= cell.expected_iters
+    r = analyze(arch=name, shape="join_wave", mesh_name=mesh_name,
+                n_devices=mesh.size, cost=hc.as_cost_dict(),
+                model_flops=2.0 * cell.wave_size * cell.n_data * cell.dim,
+                peak_memory=mem, collective_override=hc)
+    out = r.as_dict()
+    out.update(skipped=False, compile_s=round(t_compile, 1))
+    if verbose:
+        print(f"[dryrun] join {name} on {mesh_name}: compile "
+              f"{t_compile:.0f}s, {mem / 1e9:.2f} GB/dev, "
+              f"bound={r.bottleneck}", flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--join")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--out")
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.join:
+        results.append(run_join_cell(args.join, multi_pod=args.multi_pod))
+    elif args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                try:
+                    results.append(run_cell(
+                        arch, shape, multi_pod=args.multi_pod,
+                        microbatches=args.microbatches,
+                        seq_parallel=args.seq_parallel))
+                except Exception as e:  # noqa: BLE001 — sweep must finish
+                    print(f"[dryrun] FAILED {arch} × {shape}: {e!r}",
+                          flush=True)
+                    results.append(dict(arch=arch, shape=shape,
+                                        error=repr(e)))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        results.append(run_cell(args.arch, args.shape,
+                                multi_pod=args.multi_pod,
+                                microbatches=args.microbatches,
+                                seq_parallel=args.seq_parallel))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    failed = [r for r in results if "error" in r]
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

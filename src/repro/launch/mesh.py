@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS *before* any jax
+initialization).
+
+  single-pod: (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16)     — 512 chips
+
+Parameters/optimizer-state FSDP-shard over (pod, data); tensor/expert
+parallelism over model; batch over (pod, data). See models/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,144 @@
+"""Memory-bounded attention for the 10-arch zoo.
+
+``chunked_attend`` is a flash-style online-softmax attention written in pure
+JAX (lax.scan over KV blocks, optionally over Q blocks): logits never
+materialize beyond a (q_blk, kv_blk) tile, which is what makes the 32k
+prefill and 500k-KV decode cells lowerable at all. Variants:
+
+  * GQA (n_kv_heads < n_heads) — grouped einsums, no KV repetition;
+  * causal masking, sliding windows (h2o-danube / gemma2 local layers),
+    logit soft-capping (gemma2), bidirectional (hubert encoder);
+  * decode (Sq == 1) against a big KV cache, with positions masked by
+    ``kv_len`` so one kernel serves both ragged prefill and decode.
+
+Position semantics: masks compare *absolute* positions (q_pos vs kv_pos), so
+callers can run with rotated/cached/sharded KV without re-deriving offsets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+_NEG = jnp.float32(-1e30)
+
+
+def _block_mask(qp: Array, kp: Array, *, causal: bool, window: int | None
+                ) -> Array:
+    """(q_blk, kv_blk) bool mask from absolute position vectors."""
+    m = kp[None, :] >= 0                       # padded/invalid kv slots get -1
+    if causal:
+        m = m & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        m = m & (kp[None, :] > qp[:, None] - window)
+    return m
+
+
+def chunked_attend(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
+                   *, causal: bool = True, window: int | None = None,
+                   softcap: float | None = None, q_blk: int = 512,
+                   kv_blk: int = 1024, scale: float | None = None,
+                   remat: bool = True) -> Array:
+    """Online-softmax attention.
+
+    Args:
+      q: (B, Sq, H, hd); k/v: (B, Skv, K, hd) with H % K == 0.
+      q_pos: (B, Sq) int32 absolute positions; kv_pos: (B, Skv) int32
+        absolute positions, -1 for empty cache slots.
+    Returns:
+      (B, Sq, H, hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                 # MLA latent values have hd_v != hd
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Skv)
+    qpad = (-Sq) % q_blk
+    kpad = (-Skv) % kv_blk
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0))) if qpad else q
+    qp = (jnp.pad(q_pos, ((0, 0), (0, qpad)), constant_values=-(2**30))
+          if qpad else q_pos)
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0))) if kpad else k
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0))) if kpad else v
+    kp = (jnp.pad(kv_pos, ((0, 0), (0, kpad)), constant_values=-1)
+          if kpad else kv_pos)
+    nq, nk = qf.shape[1] // q_blk, kf.shape[1] // kv_blk
+
+    # (nq, B, q_blk, K, G, hd) query tiles
+    qt = (qf.reshape(B, nq, q_blk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+          .astype(jnp.float32) * scale)
+    qpt = qp.reshape(B, nq, q_blk).transpose(1, 0, 2)
+    kt = kf.reshape(B, nk, kv_blk, K, hd).transpose(1, 0, 2, 3, 4)
+    vt = vf.reshape(B, nk, kv_blk, K, hd_v).transpose(1, 0, 2, 3, 4)
+    kpt = kp.reshape(B, nk, kv_blk).transpose(1, 0, 2)
+
+    def q_step(_, qi):
+        qb, qpb = qi                                  # (B,q_blk,K,G,hd), (B,q_blk)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kb, vb, kpb = ki
+            logits = jnp.einsum("bqkgh,bskh->bkgqs", qb,
+                                kb.astype(jnp.float32))
+            if softcap:
+                logits = softcap * jnp.tanh(logits / softcap)
+            mask = jax.vmap(functools.partial(
+                _block_mask, causal=causal, window=window))(qpb, kpb)
+            logits = jnp.where(mask[:, None, None, :, :], logits, _NEG)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        if remat:
+            # flash-attention backward: never save the (q_blk, kv_blk)
+            # probability tiles — recompute them per tile in the bwd pass
+            kv_step = jax.checkpoint(kv_step)
+        m0 = jnp.full((B, K, G, q_blk), _NEG)
+        l0 = jnp.zeros((B, K, G, q_blk))
+        a0 = jnp.zeros((B, K, G, q_blk, hd_v))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kt, vt, kpt))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,K,G,q_blk,hd_v)
+        return None, out.transpose(0, 3, 1, 2, 4)     # (B,q_blk,K,G,hd_v)
+
+    if remat:
+        q_step = jax.checkpoint(q_step)
+    _, outs = jax.lax.scan(q_step, None, (qt, qpt))   # (nq,B,q_blk,K,G,hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_blk, H, hd_v)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attend(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
+                  *, window: int | None = None, softcap: float | None = None,
+                  scale: float | None = None) -> Array:
+    """Single-step decode attention (Sq == 1) against a full KV cache.
+
+    One unchunked pass: logits are (B, H, Skv) — tiny even at 500k. The
+    KV cache may be sequence-sharded; the softmax reductions then lower to
+    the collectives the roofline analysis accounts for.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    hd_v = v.shape[-1]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qf = q.reshape(B, Sq, K, G, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = (kv_pos[:, None] >= 0) & (kv_pos[:, None] <= q_pos[:, :, None])
+    if window is not None:
+        mask = mask & (kv_pos[:, None] > q_pos[:, :, None] - window)
+    logits = jnp.where(mask[:, None, None, :, :], logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)

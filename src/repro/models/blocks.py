@@ -1,0 +1,406 @@
+"""Transformer-block compositions for the 10-arch zoo.
+
+A model is ``n_layers`` blocks arranged as repetitions of a *period* — a
+tuple of ``BlockCfg``s (e.g. gemma2's (local, global) alternation, jamba's
+(attn, mamba×7) interleave). Each block is mixer + FFN with pre-norms
+(optionally sandwich post-norms, gemma2):
+
+    h = h + [post_norm](mixer(norm(h)))
+    h = h + [post_norm](ffn(norm(h)))
+
+Mixers: ``attn`` (GQA / SWA / softcap / M-RoPE via layers.AttnConfig),
+``mla`` (DeepSeek-V2 multi-head latent attention — latent KV cache, absorbed
+decode), ``mamba`` (Jamba), ``rwkv`` (RWKV6). FFNs: gated MLP or MoE.
+
+Caches (decode): attn → (k, v, pos) with a ring buffer for windowed layers
+(SWA decode state is O(window), which is what makes h2o-danube/gemma2
+long_500k feasible); mla → latent (c ⊕ k_rope) — 576 f(p) per token instead
+of H·2·hd; mamba/rwkv → O(1) recurrent state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import shardctx, ssm
+from repro.models.attention import chunked_attend, decode_attend
+from repro.models.layers import (AttnConfig, MoEConfig, dense_init, matmul,
+                                 mlp_apply, mlp_init, moe_apply, moe_aux_loss,
+                                 moe_init, rms_norm, apply_rope, apply_mrope)
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention (paper arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def latent_dim(self) -> int:       # cached per token
+        return self.kv_lora_rank + self.qk_rope_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype) -> PyTree:
+    ks = jax.random.split(key, 7)
+    d, H, r = cfg.d_model, cfg.n_heads, cfg.kv_lora_rank
+    return dict(
+        q_a=dense_init(ks[0], (d, cfg.q_lora_rank), dtype),
+        q_norm=jnp.zeros((cfg.q_lora_rank,), jnp.float32),
+        q_b=dense_init(ks[1], (cfg.q_lora_rank, H * cfg.qk_dim), dtype,
+                       fan_in=cfg.q_lora_rank),
+        kv_a=dense_init(ks[2], (d, r + cfg.qk_rope_dim), dtype),
+        kv_norm=jnp.zeros((r,), jnp.float32),
+        k_b=dense_init(ks[3], (r, H * cfg.qk_nope_dim), dtype, fan_in=r),
+        v_b=dense_init(ks[4], (r, H * cfg.v_dim), dtype, fan_in=r),
+        o=dense_init(ks[5], (H * cfg.v_dim, d), dtype, fan_in=H * cfg.v_dim),
+    )
+
+
+def _mla_qc(params, cfg: MLAConfig, x: Array, positions: Array):
+    """Shared projections: rotated per-head q and the latent (c, k_rope)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = matmul(rms_norm(matmul(x, params["q_a"]), params["q_norm"]),
+               params["q_b"]).reshape(B, S, H, cfg.qk_dim)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    kv_low = matmul(x, params["kv_a"])
+    c = rms_norm(kv_low[..., :cfg.kv_lora_rank], params["kv_norm"])
+    k_rope = apply_rope(kv_low[..., None, cfg.kv_lora_rank:], positions,
+                        theta=cfg.rope_theta)                  # (B,S,1,rope)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_attend_full(params, cfg: MLAConfig, x: Array, positions: Array
+                    ) -> Array:
+    """Train/prefill path: expand the latent to per-head K/V (MXU-dense)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c, k_rope = _mla_qc(params, cfg, x, positions)
+    k_nope = matmul(c, params["k_b"]).reshape(B, S, H, cfg.qk_nope_dim)
+    v = matmul(c, params["v_b"]).reshape(B, S, H, cfg.v_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))],
+        axis=-1)
+    out = chunked_attend(q, k, v, positions, positions, causal=True,
+                         scale=1.0 / np.sqrt(cfg.qk_dim))
+    return matmul(out.reshape(B, S, H * cfg.v_dim), params["o"])
+
+
+def mla_prefill_cache(params, cfg: MLAConfig, x: Array, positions: Array,
+                      s_max: int) -> PyTree:
+    """Latent cache after consuming ``x`` (padded to s_max)."""
+    B, S, _ = x.shape
+    kv_low = matmul(x, params["kv_a"])
+    c = rms_norm(kv_low[..., :cfg.kv_lora_rank], params["kv_norm"])
+    k_rope = apply_rope(kv_low[..., None, cfg.kv_lora_rank:], positions,
+                        theta=cfg.rope_theta)[:, :, 0]         # (B,S,rope)
+    lat = jnp.concatenate([c, k_rope], axis=-1)                # (B,S,latent)
+    lat = jnp.pad(lat, ((0, 0), (0, s_max - S), (0, 0)))
+    pos = jnp.pad(positions, ((0, 0), (0, s_max - S)), constant_values=-1)
+    return dict(lat=lat, pos=pos)
+
+
+def mla_attend_decode(params, cfg: MLAConfig, x: Array, positions: Array,
+                      cache: PyTree, cache_index: Array
+                      ) -> tuple[Array, PyTree]:
+    """Decode path: absorbed attention directly over the latent cache.
+
+    Scores are q_abs·c + q_rope·k_rope — an MQA with one shared 576-dim key
+    and 512-dim value; values are re-expanded through v_b after the softmax.
+    ``cache_index`` is per-lane (B,) — lanes may be at different lengths
+    (continuous batching).
+    """
+    B, S, _ = x.shape
+    H, r = cfg.n_heads, cfg.kv_lora_rank
+    q_nope, q_rope, c, k_rope = _mla_qc(params, cfg, x, positions)
+    # append to latent cache (per-lane scatter; S == 1 at decode)
+    lat_new = jnp.concatenate([c, k_rope[:, :, 0, :]], axis=-1)
+    bidx = jnp.arange(B)
+    lat = cache["lat"].at[bidx, cache_index].set(
+        lat_new[:, 0].astype(cache["lat"].dtype))
+    pos = cache["pos"].at[bidx, cache_index].set(
+        positions[:, 0].astype(cache["pos"].dtype))
+    # absorb k_b into q:  q_abs[b,s,h,r] = Σ_n q_nope · k_b[r, h, n]
+    # (kept f32 — S == 1 at decode, and bf16-quantizing the absorbed query
+    # visibly perturbs logits vs the expanded prefill path)
+    k_b = params["k_b"].reshape(r, H, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       k_b.astype(jnp.float32))
+    q_eff = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)], axis=-1)
+    k_eff = lat[:, :, None, :]                                 # (B,Smax,1,·)
+    v_eff = lat[:, :, None, :r]
+    out_lat = decode_attend(q_eff, k_eff, v_eff, positions, pos,
+                            scale=1.0 / np.sqrt(cfg.qk_dim))   # (B,S,H,r)
+    v_b = params["v_b"].reshape(r, H, cfg.v_dim)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat.astype(jnp.float32),
+                     v_b.astype(jnp.float32)).astype(x.dtype)
+    out = matmul(out.reshape(B, S, H * cfg.v_dim), params["o"])
+    return out, dict(lat=lat, pos=pos)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention with chunked softmax + (ring-buffered) KV cache
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: AttnConfig, dtype) -> PyTree:
+    ks = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return dict(
+        q=dense_init(ks[0], (d, H * hd), dtype),
+        k=dense_init(ks[1], (d, K * hd), dtype),
+        v=dense_init(ks[2], (d, K * hd), dtype),
+        o=dense_init(ks[3], (H * hd, d), dtype, fan_in=H * hd),
+    )
+
+
+def _gqa_qkv(params, cfg: AttnConfig, x: Array, positions: Array):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # pin head-sharded layouts: left to propagation, GSPMD has been seen
+    # to replicate whole attention bodies (EXPERIMENTS §Perf iter 2)
+    q = shardctx.shard(matmul(x, params["q"]).reshape(B, S, H, hd), "qkv")
+    k = shardctx.shard(matmul(x, params["k"]).reshape(B, S, K, hd), "qkv")
+    v = shardctx.shard(matmul(x, params["v"]).reshape(B, S, K, hd), "qkv")
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _tpos(cfg: AttnConfig, positions: Array) -> Array:
+    """Temporal positions for masking (M-RoPE masks on the t stream)."""
+    return positions[..., 0] if cfg.mrope_sections is not None else positions
+
+
+def gqa_attend_full(params, cfg: AttnConfig, x: Array, positions: Array
+                    ) -> Array:
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    p = _tpos(cfg, positions)
+    out = chunked_attend(q, k, v, p, p, causal=cfg.causal, window=cfg.window,
+                         softcap=cfg.softcap)
+    return matmul(out.reshape(B, S, -1), params["o"])
+
+
+def gqa_cache_len(cfg: AttnConfig, s_max: int) -> int:
+    return min(s_max, cfg.window) if cfg.window is not None else s_max
+
+
+def gqa_prefill_cache(params, cfg: AttnConfig, x: Array, positions: Array,
+                      s_max: int) -> PyTree:
+    """KV cache after consuming x. Windowed layers keep the last W tokens
+    in ring order (slot = pos % W), so decode writes stay O(1)."""
+    B, S, _ = x.shape
+    _, k, v = _gqa_qkv(params, cfg, x, positions)
+    p = _tpos(cfg, positions)
+    W = gqa_cache_len(cfg, s_max)
+    if W == s_max:                       # full cache: slot = position
+        pad = s_max - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(p, ((0, 0), (0, pad)), constant_values=-1)
+        return dict(k=k, v=v, pos=pos)
+    # ring: scatter each token into slot pos % W; later tokens overwrite
+    slot = p % W
+    kc = jnp.zeros((B, W) + k.shape[2:], k.dtype)
+    vc = jnp.zeros((B, W) + v.shape[2:], v.dtype)
+    pc = jnp.full((B, W), -1, p.dtype)
+    bidx = jnp.arange(B)[:, None]
+    kc = kc.at[bidx, slot].set(k)
+    vc = vc.at[bidx, slot].set(v)
+    pc = pc.at[bidx, slot].set(p)
+    return dict(k=kc, v=vc, pos=pc)
+
+
+def gqa_attend_decode(params, cfg: AttnConfig, x: Array, positions: Array,
+                      cache: PyTree, cache_index: Array
+                      ) -> tuple[Array, PyTree]:
+    """One-token decode with per-lane cache_index (B,) — ragged lanes for
+    continuous batching. Windowed layers write slot ``index % W`` (ring)."""
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    p = _tpos(cfg, positions)
+    W = cache["k"].shape[1]
+    slot = cache_index % W               # == cache_index for full caches
+    bidx = jnp.arange(B)
+    kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    pc = cache["pos"].at[bidx, slot].set(p[:, 0].astype(cache["pos"].dtype))
+    out = decode_attend(q, kc, vc, p, pc, window=cfg.window,
+                        softcap=cfg.softcap)
+    return matmul(out.reshape(B, S, -1), params["o"]), dict(k=kc, v=vc, pos=pc)
+
+
+# ---------------------------------------------------------------------------
+# block = mixer + ffn (+ norms)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    mixer: str                          # attn | mla | mamba | rwkv
+    ffn: str = "mlp"                    # mlp | moe | none
+    d_model: int = 0
+    d_ff: int = 0
+    attn: AttnConfig | None = None
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    rwkv: ssm.RWKV6Config | None = None
+    mamba: ssm.MambaConfig | None = None
+    act: str = "silu"
+    post_norm: bool = False             # gemma2 sandwich norms
+
+
+def block_init(key, cfg: BlockCfg, dtype) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    p: dict[str, Any] = dict(norm1=jnp.zeros((d,), jnp.float32))
+    if cfg.mixer == "attn":
+        p["mixer"] = gqa_init(k1, cfg.attn, dtype)
+    elif cfg.mixer == "mla":
+        p["mixer"] = mla_init(k1, cfg.mla, dtype)
+    elif cfg.mixer == "mamba":
+        p["mixer"] = ssm.mamba_init(k1, cfg.mamba, dtype)
+    elif cfg.mixer == "rwkv":
+        p["mixer"] = ssm.rwkv6_init(k1, cfg.rwkv, dtype)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.ffn == "mlp":
+        p["norm2"] = jnp.zeros((d,), jnp.float32)
+        p["ffn"] = mlp_init(k2, d, cfg.d_ff, dtype)
+    elif cfg.ffn == "moe":
+        p["norm2"] = jnp.zeros((d,), jnp.float32)
+        p["ffn"] = moe_init(k2, cfg.moe, dtype)
+    if cfg.post_norm:
+        p["post1"] = jnp.zeros((d,), jnp.float32)
+        if cfg.ffn != "none":
+            p["post2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _ffn(params, cfg: BlockCfg, h: Array, *, with_aux: bool = False,
+         exact_moe: bool = False) -> tuple[Array, Array]:
+    """FFN residual branch. Returns (h, aux) — aux is the MoE load-balance
+    loss for this block (0.0 for dense blocks)."""
+    aux = jnp.float32(0.0)
+    if cfg.ffn == "none":
+        return h, aux
+    y = rms_norm(h, params["norm2"])
+    if cfg.ffn == "moe":
+        if with_aux:
+            aux = moe_aux_loss(params["ffn"], y, cfg.moe)
+        y = moe_apply(params["ffn"], cfg.moe, y, exact=exact_moe)
+    else:
+        y = mlp_apply(params["ffn"], y, act=cfg.act)
+    if cfg.post_norm:
+        y = rms_norm(y, params["post2"])
+    return h + y, aux
+
+
+def block_apply_full(params, cfg: BlockCfg, h: Array, positions: Array,
+                     *, with_aux: bool = False, exact_moe: bool = False
+                     ) -> tuple[Array, Array]:
+    """Full-sequence (train / prefill-no-cache) application → (h, moe_aux)."""
+    y = rms_norm(h, params["norm1"])
+    if cfg.mixer == "attn":
+        y = gqa_attend_full(params["mixer"], cfg.attn, y, positions)
+    elif cfg.mixer == "mla":
+        y = mla_attend_full(params["mixer"], cfg.mla, y, positions)
+    elif cfg.mixer == "mamba":
+        y, _ = ssm.mamba_apply(params["mixer"], cfg.mamba, y)
+    else:
+        y, _ = ssm.rwkv6_apply(params["mixer"], cfg.rwkv, y)
+    if cfg.post_norm:
+        y = rms_norm(y, params["post1"])
+    h = h + y
+    return _ffn(params, cfg, h, with_aux=with_aux, exact_moe=exact_moe)
+
+
+def block_init_cache(cfg: BlockCfg, batch: int, s_max: int, dtype) -> PyTree:
+    """Empty decode cache with static shapes (ShapeDtypeStruct-compatible)."""
+    if cfg.mixer == "attn":
+        a = cfg.attn
+        W = gqa_cache_len(a, s_max)
+        return dict(
+            k=jnp.zeros((batch, W, a.n_kv_heads, a.head_dim), dtype),
+            v=jnp.zeros((batch, W, a.n_kv_heads, a.head_dim), dtype),
+            pos=jnp.full((batch, W), -1, jnp.int32))
+    if cfg.mixer == "mla":
+        m = cfg.mla
+        return dict(lat=jnp.zeros((batch, s_max, m.latent_dim), dtype),
+                    pos=jnp.full((batch, s_max), -1, jnp.int32))
+    if cfg.mixer == "mamba":
+        m = cfg.mamba
+        return dict(h=jnp.zeros((batch, m.d_inner, m.d_state), jnp.float32),
+                    conv=jnp.zeros((batch, m.d_conv - 1, m.d_inner), dtype))
+    r = cfg.rwkv
+    return dict(s=jnp.zeros((batch, r.n_heads, r.head_dim, r.head_dim),
+                            jnp.float32),
+                shift=jnp.zeros((batch, r.d_model), dtype))
+
+
+def block_prefill_cache(params, cfg: BlockCfg, h: Array, positions: Array,
+                        s_max: int) -> tuple[Array, PyTree]:
+    """Full-sequence application that *also* returns the decode cache."""
+    y = rms_norm(h, params["norm1"])
+    if cfg.mixer == "attn":
+        cache = gqa_prefill_cache(params["mixer"], cfg.attn, y, positions, s_max)
+        y = gqa_attend_full(params["mixer"], cfg.attn, y, positions)
+    elif cfg.mixer == "mla":
+        cache = mla_prefill_cache(params["mixer"], cfg.mla, y, positions, s_max)
+        y = mla_attend_full(params["mixer"], cfg.mla, y, positions)
+    elif cfg.mixer == "mamba":
+        y, cache = ssm.mamba_apply(params["mixer"], cfg.mamba, y)
+    else:
+        y, cache = ssm.rwkv6_apply(params["mixer"], cfg.rwkv, y)
+    if cfg.post_norm:
+        y = rms_norm(y, params["post1"])
+    h = h + y
+    h, _ = _ffn(params, cfg, h, exact_moe=True)
+    return h, cache
+
+
+def block_apply_decode(params, cfg: BlockCfg, h: Array, positions: Array,
+                       cache: PyTree, cache_index: Array
+                       ) -> tuple[Array, PyTree]:
+    """Single-step decode with cache update."""
+    y = rms_norm(h, params["norm1"])
+    if cfg.mixer == "attn":
+        y, cache = gqa_attend_decode(params["mixer"], cfg.attn, y, positions,
+                                     cache, cache_index)
+    elif cfg.mixer == "mla":
+        y, cache = mla_attend_decode(params["mixer"], cfg.mla, y, positions,
+                                     cache, cache_index)
+    elif cfg.mixer == "mamba":
+        y, cache = ssm.mamba_apply(params["mixer"], cfg.mamba, y, state=cache)
+    else:
+        y, cache = ssm.rwkv6_apply(params["mixer"], cfg.rwkv, y, state=cache)
+    if cfg.post_norm:
+        y = rms_norm(y, params["post1"])
+    h = h + y
+    h, _ = _ffn(params, cfg, h, exact_moe=True)
+    return h, cache

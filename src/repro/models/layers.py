@@ -1,0 +1,368 @@
+"""Layer primitives shared by the 10-arch zoo.
+
+Pure-function style: every layer is ``init(key, cfg) -> params`` plus
+``apply(params, x, ...) -> y``. Sharding is expressed with
+``jax.lax.with_sharding_constraint`` on activations at block boundaries and
+via logical-axis metadata on parameters (see model.py / launch/mesh.py).
+
+All matmuls accumulate in f32 (``preferred_element_type``); parameters and
+activations default to bf16 at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import shardctx
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# initializers / common
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def matmul(x: Array, w: Array) -> Array:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, sections: tuple[int, ...], *,
+                theta: float = 1e6) -> Array:
+    """Qwen2-VL multimodal RoPE: positions3 (..., S, 3) = (t, h, w) ids;
+    the hd/2 frequency slots are partitioned into ``sections`` (e.g.
+    (16, 24, 24) for hd=128), each rotated by its own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    # build the per-slot position by section
+    sec_id = np.repeat(np.arange(len(sections)), sections)       # (hd/2,)
+    sec_idx = jnp.broadcast_to(jnp.asarray(sec_id, jnp.int32),
+                               positions3.shape[:-1] + (hd // 2,))
+    pos = jnp.take_along_axis(positions3.astype(jnp.float32), sec_idx,
+                              axis=-1)                            # (..., S, hd/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window / logit softcap / causal flag)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None          # sliding-window size (h2o-danube, gemma2 local)
+    softcap: float | None = None       # gemma2 logit soft-capping
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] | None = None   # qwen2-vl
+    # MLA (deepseek-v2): low-rank KV compression
+    q_lora_rank: int | None = None
+    kv_lora_rank: int | None = None
+
+
+def attn_init(key, cfg: AttnConfig, dtype) -> PyTree:
+    ks = jax.random.split(key, 8)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_lora_rank:  # MLA
+        r_q = cfg.q_lora_rank or d
+        return dict(
+            q_a=dense_init(ks[0], (d, r_q), dtype),
+            q_b=dense_init(ks[1], (r_q, H * hd), dtype, fan_in=r_q),
+            kv_a=dense_init(ks[2], (d, cfg.kv_lora_rank + hd), dtype),
+            kv_b=dense_init(ks[3], (cfg.kv_lora_rank, K * 2 * hd), dtype,
+                            fan_in=cfg.kv_lora_rank),
+            o=dense_init(ks[4], (H * hd, d), dtype, fan_in=H * hd),
+        )
+    return dict(
+        q=dense_init(ks[0], (d, H * hd), dtype),
+        k=dense_init(ks[1], (d, K * hd), dtype),
+        v=dense_init(ks[2], (d, K * hd), dtype),
+        o=dense_init(ks[3], (H * hd, d), dtype, fan_in=H * hd),
+    )
+
+
+def _qkv(params, cfg: AttnConfig, x: Array):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_lora_rank:  # MLA: compress, then expand
+        q = matmul(matmul(x, params["q_a"]), params["q_b"])
+        kv_low = matmul(x, params["kv_a"])            # (B,S,r_kv+hd)
+        kv_c, k_rope = kv_low[..., :cfg.kv_lora_rank], kv_low[..., cfg.kv_lora_rank:]
+        kv = matmul(kv_c, params["kv_b"])             # (B,S,K*2*hd)
+        k, v = jnp.split(kv.reshape(B, S, K, 2 * hd), 2, axis=-1)
+        # decoupled rope key: broadcast shared k_rope across kv heads, fold
+        # into k's rotary half (simplified MLA: rope applied below on k)
+        del k_rope
+    else:
+        q = matmul(x, params["q"])
+        k = matmul(x, params["k"])
+        v = matmul(x, params["v"])
+        k = k.reshape(B, S, K, hd)
+        v = v.reshape(B, S, K, hd)
+    q = q.reshape(B, S, H, hd)
+    return q, k.reshape(B, S, K, hd), v.reshape(B, S, K, hd)
+
+
+def _rotate(q, k, cfg: AttnConfig, positions):
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k
+
+
+def _attend(q, k, v, cfg: AttnConfig, q_positions, kv_positions):
+    """Core masked attention. q: (B,Sq,H,hd); k/v: (B,Skv,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if cfg.softcap:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+    # mask: causal and/or sliding window on *absolute* positions
+    qp = q_positions[:, None, None, :, None]          # (B,1,1,Sq,1)
+    kp = kv_positions[:, None, None, None, :]         # (B,1,1,1,Skv)
+    mask = jnp.ones((), bool)
+    if cfg.causal:
+        mask = mask & (kp <= qp)
+    if cfg.window is not None:
+        mask = mask & (kp > qp - cfg.window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def attn_apply(params, cfg: AttnConfig, x: Array, positions: Array,
+               cache: PyTree | None = None, cache_index: Array | None = None):
+    """Full-sequence (train/prefill) or single-step decode (cache given).
+
+    cache: dict(k=(B,S_max,K,hd), v=(B,S_max,K,hd)); cache_index: () int32 —
+    number of tokens already in the cache.
+    """
+    q, k, v = _qkv(params, cfg, x)
+    if cache is None:
+        q, k = _rotate(q, k, cfg, positions)
+        out = _attend(q, k, v, cfg, positions
+                      if cfg.mrope_sections is None else positions[..., 0],
+                      positions if cfg.mrope_sections is None
+                      else positions[..., 0])
+        # NOTE: for M-RoPE, masking uses the temporal stream (t) positions.
+        return matmul(out, params["o"]), None
+    # decode: append to cache at cache_index
+    q, k = _rotate(q, k, cfg, positions)
+    S_max = cache["k"].shape[1]
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+        cache["k"].dtype), cache_index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+        cache["v"].dtype), cache_index, axis=1)
+    kv_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.where(kv_pos <= cache_index, kv_pos, jnp.int32(2**30))
+    qpos = (positions if cfg.mrope_sections is None
+            else positions[..., 0])
+    out = _attend(q, ck, cv, cfg, qpos, kv_pos)
+    return matmul(out, params["o"]), dict(k=ck, v=cv)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, *, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = dict(
+        up=dense_init(ks[0], (d_model, d_ff), dtype),
+        down=dense_init(ks[1], (d_ff, d_model), dtype, fan_in=d_ff),
+    )
+    if gated:
+        p["gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params, x: Array, *, act: str = "silu") -> Array:
+    up = matmul(x, params["up"])
+    if "gate" in params:
+        g = matmul(x, params["gate"])
+        h = (jax.nn.silu(g.astype(jnp.float32)) if act == "silu"
+             else jax.nn.gelu(g.astype(jnp.float32))) * up.astype(jnp.float32)
+    else:
+        h = (jax.nn.gelu(up.astype(jnp.float32)) if act == "gelu"
+             else jax.nn.silu(up.astype(jnp.float32)))
+    return matmul(h.astype(x.dtype), params["down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch, capacity-bounded, EP-friendly)
+# ---------------------------------------------------------------------------
+
+_EXACT_CAP_LIMIT = 4096   # max T for drop-free (cap = T) MoE dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                     # per-expert ffn
+    n_shared: int = 0             # deepseek-v2 shared experts
+    capacity_factor: float = 1.25
+
+
+def moe_init(key, cfg: MoEConfig, dtype) -> PyTree:
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = dict(
+        router=dense_init(ks[0], (d, E), jnp.float32),
+        gate=dense_init(ks[1], (E, d, f), dtype),
+        up=dense_init(ks[2], (E, d, f), dtype),
+        down=dense_init(ks[3], (E, f, d), dtype, fan_in=f),
+    )
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks[4], d, f * cfg.n_shared, dtype)
+    return p
+
+
+def moe_apply(params, cfg: MoEConfig, x: Array, *,
+              exact: bool = False) -> Array:
+    """Capacity-bounded top-k MoE with sort-based dispatch.
+
+    Tokens beyond an expert's capacity are dropped (standard practice); the
+    dispatch is static-shaped: assignments are sorted by expert id, each
+    assignment's slot is its rank within its expert, ranks ≥ capacity drop.
+
+    ``exact=True`` (inference paths) sets capacity = T — a token
+    contributes at most one assignment per expert, so nothing can drop and
+    decode logits match the full forward regardless of batch shape. The
+    exact bound is only affordable for small T (decode steps, short
+    evals); above ``_EXACT_CAP_LIMIT`` tokens the dispatch buffer
+    (E·T·d) would dwarf the activations (a 32k-prefill would need a
+    128·1M·4096 buffer), so large-T inference falls back to a generous
+    2× capacity factor instead (drops are rare and prefill-only).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+    logits = matmul(xt.astype(jnp.float32), params["router"])   # (T,E) f32
+    weights, experts = jax.lax.top_k(jax.nn.softmax(logits, -1), k)  # (T,k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)
+    if exact and T <= _EXACT_CAP_LIMIT:
+        cap = T
+    else:
+        # large-T inference (32k prefill): standard capacity dropping —
+        # inflating the factor was measured to balloon the dispatch
+        # buffers past the activations (§Perf iter 8b)
+        cap = int(np.ceil(T * k / E * cfg.capacity_factor))
+    cap = max(cap, 1)
+    # flatten assignments
+    a_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)       # (T*k,)
+    a_exp = experts.reshape(-1).astype(jnp.int32)
+    a_w = weights.reshape(-1)
+    order = jnp.argsort(a_exp, stable=True)
+    s_exp = a_exp[order]
+    s_tok = a_tok[order]
+    s_w = a_w[order]
+    # rank within expert = index - first index of that expert
+    idx = jnp.arange(T * k, dtype=jnp.int32)
+    first = jnp.searchsorted(s_exp, jnp.arange(E, dtype=jnp.int32),
+                             side="left").astype(jnp.int32)
+    rank = idx - first[s_exp]
+    keep = rank < cap
+    slot = jnp.where(keep, s_exp * cap + rank, E * cap)         # drop sink
+    # gather expert inputs (E*cap+1, d)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xt[s_tok], 0))
+    eb = buf[:E * cap].reshape(E, cap, d)
+    # pin the dispatch buffer expert-sharded (EP): without this GSPMD has
+    # been observed to all-reduce the full (E, cap, d) buffer per layer —
+    # with the pin the scatter lowers to an all-to-all-shaped exchange
+    eb = shardctx.shard(eb, "moe_eb")
+    # expert FFN (batched over experts — shardable over the model axis)
+    g = jnp.einsum("ecd,edf->ecf", eb, params["gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", eb, params["up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    # combine path in bf16: the (E·cap,d)/(T·k,d) f32 intermediates were
+    # the largest HBM-traffic term of the MoE train cells (§Perf iter 5);
+    # per-token sums of ≤ top_k bf16 contributions lose no usable precision
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["down"],
+                       preferred_element_type=jnp.float32
+                       ).astype(x.dtype)                         # (E,cap,d)
+    out_e = shardctx.shard(out_e, "moe_out")
+    # combine back
+    flat = jnp.concatenate(
+        [out_e.reshape(E * cap, d),
+         jnp.zeros((1, d), out_e.dtype)], axis=0)
+    contrib = flat[slot] * s_w[:, None].astype(x.dtype)          # (T*k, d)
+    yt = jnp.zeros((T, d), jnp.float32).at[s_tok].add(
+        jnp.where(keep[:, None], contrib, 0))
+    y = yt.astype(x.dtype).reshape(B, S, d)
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x)
+    return y
+
+
+def moe_aux_loss(params, x: Array, cfg: MoEConfig) -> Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    T = x.shape[0] * x.shape[1]
+    logits = matmul(x.reshape(T, -1).astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, -1)
+    _, experts = jax.lax.top_k(probs, cfg.top_k)
+    onehot = jax.nn.one_hot(experts, cfg.n_experts).sum(1)       # (T,E)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,302 @@
+"""Unified language model over the block zoo.
+
+A model is: input embedding (token table, or a stub frontend projection for
+the [audio]/[vlm] archs) → ``n_layers`` blocks arranged as G repetitions of
+a *period* of BlockCfgs → final RMS-norm → output head.
+
+The layer stack is a ``lax.scan`` over the G period-groups with parameters
+stacked on a leading group axis (one compiled block body regardless of
+depth), with per-group ``jax.checkpoint`` (remat) so activation memory is
+O(G · boundary) instead of O(n_layers · intermediates).
+
+Decode uses per-layer caches (KV / latent / recurrent state) threaded
+through the same scan.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as B
+from repro.models.layers import dense_init, matmul, rms_norm
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# activation-sharding hook: launchers install a (x, tag) -> x constraint fn
+# (models/sharding.py::make_act_sharder) so GSPMD never drifts activations
+# into involuntary replication. Tags: "hidden" (B,S,d), "logits" (B,S,V).
+# ---------------------------------------------------------------------------
+
+from repro.models import shardctx as _ctx
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable[[Array, str], Array] | None,
+                        param_pin: Callable[[PyTree], PyTree] | None = None):
+    tok = _ctx.set_sharder(fn)
+    tok2 = _ctx.set_pin(param_pin)
+    try:
+        yield
+    finally:
+        _ctx.reset_sharder(tok)
+        _ctx.reset_pin(tok2)
+
+
+def shard_act(x: Array, tag: str) -> Array:
+    return _ctx.shard(x, tag)
+
+
+def pin_params(tree: PyTree) -> PyTree:
+    """Re-assert the FSDP×TP sharding of per-group param slices inside
+    scan bodies (see sharding.make_param_pinner)."""
+    return _ctx.pin(tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    period: tuple[B.BlockCfg, ...]
+    dtype: Any = jnp.bfloat16
+    input_kind: str = "tokens"        # tokens | embeddings (stub frontend)
+    frontend_dim: int | None = None   # raw frame/patch embedding width
+    encoder_only: bool = False        # hubert: no decode path
+    tie_embeddings: bool = False
+    final_softcap: float | None = None  # gemma2 final-logit soft-capping
+    emb_scale: bool = False             # gemma2 scales embeddings by √d
+    remat: str = "full"                 # none | full | 2level
+    pos_dims: int = 1                   # 3 ⇒ M-RoPE (t, h, w) position ids
+    moe_aux_weight: float = 0.01
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.period) == 0, (
+            self.n_layers, len(self.period))
+        return self.n_layers // len(self.period)
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    params: dict[str, Any] = {}
+    params["embed"] = dense_init(keys[0], (cfg.vocab, cfg.d_model), cfg.dtype)
+    if cfg.input_kind == "embeddings":
+        params["in_proj"] = dense_init(
+            keys[1], (cfg.frontend_dim, cfg.d_model), cfg.dtype)
+    layer_params = []
+    for m, bc in enumerate(cfg.period):
+        gkeys = jax.random.split(keys[2 + m], cfg.n_groups)
+        layer_params.append(
+            jax.vmap(lambda k, bc=bc: B.block_init(k, bc, cfg.dtype))(gkeys))
+    params["layers"] = tuple(layer_params)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[-1], (cfg.d_model, cfg.vocab),
+                                    cfg.dtype)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total (and active, for MoE) parameter counts without materializing."""
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.key(0))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of the routed experts)."""
+    moe = next((bc.moe for bc in cfg.period if bc.moe is not None), None)
+    total = 0
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.key(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        if (moe is not None and leaf.ndim >= 3
+                and len(leaf.shape) > 1 and leaf.shape[1] == moe.n_experts):
+            n = n // moe.n_experts * moe.top_k   # stacked (G, E, ..) tensor
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, inputs: Array) -> Array:
+    """Token ids → table lookup; float frame/patch embeddings → stub
+    frontend projection. Dispatch on dtype so [vlm]/[audio] archs can take
+    embeddings at train/prefill but text tokens at decode."""
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        h = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        h = matmul(inputs.astype(cfg.dtype), params["in_proj"])
+    if cfg.emb_scale:
+        h = (h.astype(jnp.float32) * np.sqrt(cfg.d_model)).astype(cfg.dtype)
+    return h
+
+
+def forward(params, cfg: ModelConfig, inputs: Array, positions: Array,
+            *, with_aux: bool = False, exact_moe: bool = False
+            ) -> tuple[Array, Array]:
+    """Full-sequence forward → (hidden (B,S,d), total moe aux loss).
+
+    exact_moe: capacity = T in MoE dispatch (no token drops) — inference
+    semantics; training keeps the capacity bound.
+    """
+    h = shard_act(_embed_inputs(params, cfg, inputs), "hidden")
+
+    def group(h, group_params):
+        group_params = pin_params(group_params)
+        aux = jnp.float32(0.0)
+        for m, bc in enumerate(cfg.period):
+            h, a = B.block_apply_full(group_params[m], bc, h, positions,
+                                      with_aux=with_aux,
+                                      exact_moe=exact_moe)
+            h = shard_act(h, "hidden")
+            aux = aux + a
+        return h, aux
+
+    if cfg.remat == "2level":
+        # √G-schedule: outer scan over chunks of ~√G groups (checkpointed)
+        # × inner scan over groups (checkpointed). Saved boundaries drop
+        # from G to G/c + c ≈ 2√G at the cost of ~one extra forward —
+        # the footprint lever for the 100B+ train cells (§Perf).
+        G = cfg.n_groups
+        c = max(int(np.sqrt(G)), 1)
+        while G % c:
+            c -= 1
+        inner = jax.checkpoint(group)
+
+        def chunk(h, chunk_params):
+            h, auxs = jax.lax.scan(inner, h, chunk_params)
+            return h, jnp.sum(auxs)
+
+        stacked = jax.tree.map(
+            lambda a: a.reshape((G // c, c) + a.shape[1:]),
+            params["layers"])
+        h, auxs = jax.lax.scan(jax.checkpoint(chunk), h, stacked)
+        return rms_norm(h, params["final_norm"]), jnp.sum(auxs)
+    if cfg.remat == "full":
+        group = jax.checkpoint(group)
+    h, auxs = jax.lax.scan(group, h, params["layers"])
+    return rms_norm(h, params["final_norm"]), jnp.sum(auxs)
+
+
+def logits_fn(params, cfg: ModelConfig, h: Array) -> Array:
+    if cfg.tie_embeddings:
+        out = jax.lax.dot_general(
+            h, params["embed"], (((h.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        out = jax.lax.dot_general(
+            h, params["head"], (((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if cfg.final_softcap:
+        out = cfg.final_softcap * jnp.tanh(out / cfg.final_softcap)
+    return shard_act(out, "logits")
+
+
+def loss_fn(params, cfg: ModelConfig, batch: PyTree) -> tuple[Array, PyTree]:
+    """Cross-entropy (+ MoE aux). batch: inputs, targets (B,S; -1 = pad),
+    positions (B,S) or (B,S,3)."""
+    h, aux = forward(params, cfg, batch["inputs"], batch["positions"],
+                     with_aux=True)
+    logits = logits_fn(params, cfg, h)                    # (B,S,V) f32
+    targets = batch["targets"]
+    valid = targets >= 0
+    tgt = jnp.where(valid, targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - gold, 0.0)
+    ntok = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / ntok
+    total = loss + cfg.moe_aux_weight * aux
+    return total, dict(loss=loss, aux=aux, ntok=ntok)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int) -> PyTree:
+    """Stacked empty caches, one pytree per period member, (G, ...) leaves."""
+    caches = []
+    for bc in cfg.period:
+        one = B.block_init_cache(bc, batch, s_max, cfg.dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one))
+    return tuple(caches)
+
+
+def prefill(params, cfg: ModelConfig, inputs: Array, positions: Array,
+            s_max: int) -> tuple[Array, PyTree]:
+    """Consume a prompt; return (last-position logits (B,V), caches)."""
+    h = _embed_inputs(params, cfg, inputs)
+
+    def group(h, group_params):
+        group_params = pin_params(group_params)
+        caches = []
+        for m, bc in enumerate(cfg.period):
+            h, c = B.block_prefill_cache(group_params[m], bc, h, positions,
+                                         s_max)
+            h = shard_act(h, "hidden")
+            caches.append(c)
+        return h, tuple(caches)
+
+    if cfg.remat == "full":
+        group = jax.checkpoint(group)
+    h, caches = jax.lax.scan(group, h, params["layers"])
+    h = rms_norm(h, params["final_norm"])
+    logits = logits_fn(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, positions: Array,
+                caches: PyTree, cache_index: Array
+                ) -> tuple[Array, PyTree]:
+    """One decode step. tokens (B,1) int32 (or (B,1,fd) embeddings);
+    positions (B,1) (or (B,1,3)); cache_index (B,) int32 = tokens so far
+    per lane (ragged — continuous batching).
+    Returns (logits (B,V), updated caches)."""
+    h = _embed_inputs(params, cfg, tokens)
+
+    def group(h, xs):
+        group_params, group_caches = xs
+        group_params = pin_params(group_params)
+        new = []
+        for m, bc in enumerate(cfg.period):
+            h, c = B.block_apply_decode(group_params[m], bc, h, positions,
+                                        group_caches[m], cache_index)
+            new.append(c)
+        return h, tuple(new)
+
+    h, new_caches = jax.lax.scan(group, h, (params["layers"], caches))
+    h = rms_norm(h, params["final_norm"])
+    return logits_fn(params, cfg, h[:, -1:, :])[:, 0], new_caches
+
+
+def embed_sequence(params, cfg: ModelConfig, inputs: Array, positions: Array,
+                   *, pool: str = "last") -> Array:
+    """Embedding-extraction surface for the vector-join examples: final
+    hidden states pooled to one vector per sequence (DESIGN §5)."""
+    h, _ = forward(params, cfg, inputs, positions)
+    if pool == "mean":
+        return jnp.mean(h.astype(jnp.float32), axis=1)
+    return h[:, -1, :].astype(jnp.float32)

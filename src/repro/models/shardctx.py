@@ -1,0 +1,49 @@
+"""Shared activation-sharding context (no jax.sharding import cycle).
+
+Layers deep inside the model (MoE dispatch buffers, attention internals)
+consult this hook to pin GSPMD shardings at tensors the propagation pass
+otherwise gets wrong (observed: MoE expert buffers all-reduced at 5 GB per
+layer per microbatch). Launchers install a tagged constraint function via
+``model.activation_sharding`` — everything else is a no-op by default.
+
+Tags:
+  hidden   (B, S, d)        batch → data axes [, seq → model if seq_parallel]
+  logits   (B, S, V)        batch → data, V → model
+  moe_eb   (E, cap, d)      experts → model (EP dispatch buffer)
+  moe_out  (E, cap, d)      experts → model (EP combine buffer)
+"""
+from __future__ import annotations
+
+from contextvars import ContextVar
+from typing import Any, Callable
+
+_SHARD: ContextVar[Callable[[Any, str], Any] | None] = ContextVar(
+    "repro_shard_hook", default=None)
+_PIN: ContextVar[Callable[[Any], Any] | None] = ContextVar(
+    "repro_param_pin", default=None)
+
+
+def set_sharder(fn):
+    return _SHARD.set(fn)
+
+
+def reset_sharder(tok):
+    _SHARD.reset(tok)
+
+
+def set_pin(fn):
+    return _PIN.set(fn)
+
+
+def reset_pin(tok):
+    _PIN.reset(tok)
+
+
+def shard(x, tag: str):
+    fn = _SHARD.get()
+    return fn(x, tag) if fn is not None else x
+
+
+def pin(tree):
+    fn = _PIN.get()
+    return fn(tree) if fn is not None else tree

@@ -1,0 +1,224 @@
+"""Parameter/activation sharding rules for the production mesh.
+
+Megatron-style tensor parallelism over the ``model`` axis plus FSDP
+(ZeRO-3) over the flattened data axes (``("pod", "data")`` multi-pod,
+``("data",)`` single-pod):
+
+  * column-parallel weights (out-features feed per-head / per-channel
+    compute): out dim → model, in dim → fsdp;
+  * row-parallel weights (in-features are per-head): in dim → model,
+    out dim → fsdp;
+  * MoE expert tensors: expert dim → model (expert parallelism), d_model
+    dim → fsdp;
+  * embedding (V, d): vocab → model, d → fsdp; untied head (d, V):
+    d → fsdp, V → model (logits arrive vocab-sharded — loss reductions
+    become the model-axis collectives in the roofline);
+  * 1-D scales/biases and small tables: replicated.
+
+Every rule is divisibility-checked against the actual mesh: a dim that
+does not divide its assigned axes falls back to replication for that dim
+(e.g. hubert's 504-way vocab head on a 16-way model axis).
+
+Leaves under ``params["layers"]`` are scan-stacked with a leading group
+axis, which is never sharded (prepended None).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+# leaf name → (kind) where kind picks the rule
+_COL = {"q", "k", "v", "up", "gate", "r", "g", "q_a", "q_b", "kv_a", "k_b",
+        "v_b", "x_proj", "dt_proj", "w_a", "in_proj"}
+_ROW = {"o", "down", "out_proj", "w_b"}
+_REPL = {"router", "mix", "u", "conv_b", "dt_bias"}
+
+
+def _axes_size(mesh_shape: dict[str, int], axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape[axes]
+    return int(np.prod([mesh_shape[a] for a in axes]))
+
+
+def _fit(spec: tuple, shape: tuple[int, ...],
+         mesh_shape: dict[str, int]) -> P:
+    """Drop any axis assignment whose size does not divide the dim."""
+    fixed = []
+    for dim, axes in zip(shape, spec):
+        fixed.append(axes if dim % _axes_size(mesh_shape, axes) == 0
+                     else None)
+    return P(*fixed)
+
+
+def _leaf_spec(path: tuple, shape: tuple[int, ...], fsdp, model: str,
+               mesh_shape: dict[str, int]) -> P:
+    keys = [getattr(p, "key", None) for p in path]
+    name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+    in_layers = "layers" in keys
+    lead = (None,) if in_layers else ()   # scan group axis
+    nd = len(shape) - len(lead)
+
+    def fit(*spec):
+        return _fit(lead + spec, shape, mesh_shape)
+
+    if name == "embed":
+        return fit(model, fsdp)
+    if name == "head":
+        return fit(fsdp, model)
+    if name == "in_proj" and not in_layers:     # stub frontend projection
+        return fit(None, model)
+    # MoE expert tensors: (E, d, f) / (E, f, d) — expert dim first
+    if name in ("gate", "up") and nd == 3:
+        return fit(model, fsdp, None)
+    if name == "down" and nd == 3:
+        return fit(model, None, fsdp)
+    if name in _REPL or any(k in _REPL for k in keys if isinstance(k, str)):
+        return fit(*([None] * nd))
+    if name in _COL and nd == 2:
+        return fit(fsdp, model)
+    if name in _ROW and nd == 2:
+        return fit(model, fsdp)
+    if name == "conv" and nd == 2:              # mamba depthwise conv
+        return fit(None, model)
+    if name == "A_log" and nd == 2:
+        return fit(model, None)
+    if name in ("D", "dt_bias") and nd == 1:
+        return fit(model)
+    return fit(*([None] * nd))                   # norms & leftovers
+
+
+def param_specs(params_shape: PyTree, mesh: Mesh, *,
+                fsdp=None, model: str = "model") -> PyTree:
+    """PartitionSpec tree matching ``params_shape`` (arrays or SDS)."""
+    mesh_shape = dict(mesh.shape)
+    if fsdp is None:
+        fsdp = tuple(a for a in mesh.axis_names if a != model)
+        fsdp = fsdp[0] if len(fsdp) == 1 else fsdp
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, fsdp, model,
+                                      mesh_shape),
+        params_shape)
+
+
+def param_shardings(params_shape: PyTree, mesh: Mesh, **kw) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh, **kw))
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, model: str = "model") -> P:
+    """Shard the leading (batch) dim over every non-model axis."""
+    dp = tuple(a for a in mesh.axis_names if a != model)
+    return P(dp if len(dp) > 1 else dp[0], *([None] * (ndim - 1)))
+
+
+def batch_sharding_for(mesh: Mesh, leaf, *, model: str = "model"
+                       ) -> NamedSharding:
+    """Like batch_spec but divisibility-checked against the leaf shape
+    (batch=1 long-context cells fall back to replication)."""
+    mesh_shape = dict(mesh.shape)
+    dp = tuple(a for a in mesh.axis_names if a != model)
+    dp = dp[0] if len(dp) == 1 else dp
+    spec = (dp,) + (None,) * (leaf.ndim - 1)
+    return NamedSharding(mesh, _fit(spec, leaf.shape, mesh_shape))
+
+
+def make_param_pinner(mesh: Mesh, *, model: str = "model"):
+    """Constraint fn for per-group param slices INSIDE scan bodies.
+
+    Without this, GSPMD may hoist the FSDP all-gather of the stacked
+    (G, ...) weights out of the layer scan — materializing every layer's
+    full weights at once (observed: llama3 train 79 GB/dev). Pinning the
+    sliced group params to their FSDP×TP spec forces the gather to happen
+    per-iteration at the point of use.
+    """
+    mesh_shape = dict(mesh.shape)
+    fsdp = tuple(a for a in mesh.axis_names if a != model)
+    fsdp = fsdp[0] if len(fsdp) == 1 else fsdp
+
+    def pin(tree):
+        def leaf(path, x):
+            spec = _leaf_spec(path, x.shape, fsdp, model, mesh_shape)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return jax.tree_util.tree_map_with_path(leaf, tree)
+
+    return pin
+
+
+def make_act_sharder(mesh: Mesh, *, model: str = "model",
+                     seq_parallel: bool = False, moe_ep: bool = False):
+    """(x, tag) -> with_sharding_constraint'd x for model.shard_act.
+
+    hidden (..., S, d): batch → data axes; with ``seq_parallel`` also
+      S → model (Korthikanti-style sequence parallelism: the row-parallel
+      all-reduce becomes reduce-scatter + all-gather and the saved
+      boundary activations shrink by the model-axis size);
+    logits (..., S, V): batch → data, V → model (vocab-parallel loss);
+    moe_eb/moe_out (E, cap, d): experts → model (EP dispatch/combine).
+    Dims that don't divide fall back to replication (long_500k's batch=1).
+    """
+    mesh_shape = dict(mesh.shape)
+    dp = tuple(a for a in mesh.axis_names if a != model)
+    dp = dp[0] if len(dp) == 1 else dp
+
+    def f(x, tag):
+        if tag == "logits":
+            spec = (dp,) + (None,) * (x.ndim - 2) + (model,)
+        elif tag in ("moe_eb", "moe_out"):
+            # measured HARMFUL with the scatter-based dispatch (EXPERIMENTS
+            # §Perf iter 3: data-dependent scatters cannot be resharded
+            # statically; GSPMD all-reduces the full buffer) — opt-in only
+            if not moe_ep:
+                return x
+            spec = (model,) + (None,) * (x.ndim - 1)
+        elif tag == "qkv":                  # (B, S, H|K, hd): heads → model
+            spec = (dp, None, model, None)
+        elif tag == "hidden" and seq_parallel and x.ndim >= 3:
+            spec = (dp, model) + (None,) * (x.ndim - 2)
+        else:
+            spec = (dp,) + (None,) * (x.ndim - 1)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, _fit(spec, x.shape, mesh_shape)))
+
+    return f
+
+
+def cache_specs(caches_shape: PyTree, mesh: Mesh, *, batch: int,
+                model: str = "model") -> PyTree:
+    """Decode-cache shardings: batch over data axes when it divides;
+    otherwise (long-context, batch=1) shard the sequence/cache axis over
+    data×model so a 500k KV cache fits a chip (flash-decode layout)."""
+    mesh_shape = dict(mesh.shape)
+    dp = tuple(a for a in mesh.axis_names if a != model)
+    dp_size = int(np.prod([mesh_shape[a] for a in dp]))
+    seq_axes = dp + (model,)
+
+    def spec(path, leaf) -> P:
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        # leading dims: (G, B, ...) — caches are scan-stacked
+        if batch % dp_size == 0 and batch > 1:
+            if name in ("k", "v"):      # (G,B,S,K,hd): B→data, S→model
+                s = (None, dp, model) + (None,) * (leaf.ndim - 3)
+            elif name == "lat":         # (G,B,S,r): B→data, S→model
+                s = (None, dp, model, None)
+            else:                        # pos/recurrent states: B→data
+                s = (None, dp) + (None,) * (leaf.ndim - 2)
+        else:                            # batch too small: shard sequence
+            if name in ("k", "v", "lat"):
+                s = (None, None, seq_axes) + (None,) * (leaf.ndim - 3)
+            elif name == "pos":
+                s = (None, None, seq_axes)
+            else:
+                s = (None,) * leaf.ndim
+        return _fit(s, leaf.shape, mesh_shape)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_shape)

@@ -1,0 +1,274 @@
+"""Linear-recurrence layers: RWKV6 (Finch) and Mamba-1 (Jamba's SSM).
+
+Both are O(seq) attention-free token mixers with a per-head/channel carried
+state, which is what makes the ``long_500k`` decode shape feasible (state is
+O(1) in sequence length).
+
+TPU adaptation (DESIGN §2): the sequential recurrences are *chunked* —
+an outer ``lax.scan`` over chunks carries boundary states; within a chunk,
+RWKV6 uses the closed-form decay-matrix formulation (all-matmul, MXU-
+friendly, overflow-safe because only *differences* of cumulative log-decays
+are exponentiated), while Mamba keeps an inner scan under ``jax.checkpoint``
+(its per-(channel, state) decay does not factorize), so only chunk-boundary
+states are saved for backward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, matmul, rms_norm
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    n_heads: int               # head_dim = d_model // n_heads
+    decay_lora: int = 64       # low-rank data-dependent decay (ddlerp-lite)
+    chunk: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rwkv6_init(key, cfg: RWKV6Config, dtype) -> PyTree:
+    ks = jax.random.split(key, 10)
+    d, hd = cfg.d_model, cfg.head_dim
+    return dict(
+        mix=(jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        r=dense_init(ks[1], (d, d), dtype),
+        k=dense_init(ks[2], (d, d), dtype),
+        v=dense_init(ks[3], (d, d), dtype),
+        g=dense_init(ks[4], (d, d), dtype),
+        o=dense_init(ks[5], (d, d), dtype),
+        w_base=(-5.0 + jax.random.normal(ks[6], (d,), jnp.float32) * 0.1
+                ).astype(jnp.float32),
+        w_a=dense_init(ks[7], (d, cfg.decay_lora), dtype),
+        w_b=dense_init(ks[8], (cfg.decay_lora, d), dtype,
+                       fan_in=cfg.decay_lora),
+        u=(jax.random.normal(ks[9], (cfg.n_heads, hd), jnp.float32) * 0.3
+           ).astype(jnp.float32),
+        ln=jnp.zeros((d,), jnp.float32),
+    )
+
+
+def _rwkv6_chunk(r, k, v, logw, u, state):
+    """One chunk of the wkv recurrence.
+
+    r/k/v: (B,H,Q,hd); logw: (B,H,Q,hd) per-channel log-decay (≤0);
+    u: (H,hd) bonus; state: (B,H,hd,hd) [k-dim × v-dim].
+    Semantics: S_t = diag(a_t) S_{t-1} + k_tᵀ v_t, a_t = exp(logw_t);
+               y_t = r_t·S_{t-1} + (r_t·(u ⊙ k_t)) v_t.
+    """
+    B, H, Q, hd = r.shape
+    L = jnp.cumsum(logw, axis=2)                          # inclusive (B,H,Q,hd)
+    Lprev = L - logw                                      # Σ_{τ<t} (exclusive)
+    # inter-chunk: y += (r_t ⊙ exp(Lprev_t)) · S_in
+    r_in = r * jnp.exp(Lprev)
+    y = jnp.einsum("bhqc,bhcv->bhqv", r_in, state)
+    # intra-chunk: D[t,s,c] = exp(Lprev_t - L_s) for s < t (≤0 ⇒ safe exp)
+    diff = Lprev[:, :, :, None, :] - L[:, :, None, :, :]  # (B,H,Q,Q,hd)
+    tri = (jnp.arange(Q)[:, None] > jnp.arange(Q)[None, :])
+    D = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bhtc,bhsc,bhtsc->bhts", r, k, D)
+    y = y + jnp.einsum("bhts,bhsv->bhtv", scores, v)
+    # bonus (current token)
+    y = y + jnp.einsum("bhqc,bhqc->bhq", r, u[None, :, None, :] * k)[
+        ..., None] * v
+    # state update: S_out = exp(L_Q)⊙S_in + Σ_s exp(L_Q - L_s) k_s v_s
+    Lq = L[:, :, -1:, :]                                  # (B,H,1,hd)
+    k_scaled = k * jnp.exp(Lq - L)
+    state = state * jnp.exp(Lq[:, :, 0, :, None]) + jnp.einsum(
+        "bhsc,bhsv->bhcv", k_scaled, v)
+    return y, state
+
+
+def rwkv6_apply(params, cfg: RWKV6Config, x: Array,
+                state: PyTree | None = None):
+    """Full-sequence (state=None) or streaming (state carried) application.
+
+    state: dict(s=(B,H,hd,hd) f32, shift=(B,d) last token).
+    Returns (y, new_state).
+    """
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    prev = (jnp.zeros((B, 1, d), x.dtype) if state is None
+            else state["shift"][:, None, :].astype(x.dtype))
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    mix = params["mix"].astype(jnp.float32)
+
+    def mixed(i):
+        m = mix[i][None, None, :]
+        return (x.astype(jnp.float32) * m
+                + xs.astype(jnp.float32) * (1 - m)).astype(x.dtype)
+
+    r = matmul(mixed(0), params["r"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = matmul(mixed(1), params["k"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = matmul(mixed(2), params["v"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = matmul(mixed(3), params["g"])
+    wx = mixed(4)
+    w = (params["w_base"][None, None, :].astype(jnp.float32)
+         + matmul(matmul(wx, params["w_a"]), params["w_b"]).astype(jnp.float32))
+    logw = -jnp.exp(w)                                     # ≤ 0 (decay < 1)
+    logw = logw.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    u = params["u"].astype(jnp.float32)
+
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["s"])
+    Q = min(cfg.chunk, S)
+    if S % Q:  # pad sequence to a chunk multiple (zero decay contribution)
+        pad = Q - S % Q
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        logw = jnp.pad(logw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nC = r.shape[2] // Q
+
+    def chunk_step(s, inputs):
+        rc, kc, vc, wc = inputs
+        y, s2 = _rwkv6_chunk(rc.astype(jnp.float32), kc.astype(jnp.float32),
+                             vc.astype(jnp.float32), wc, u, s)
+        return s2, y
+
+    rs = r.reshape(B, H, nC, Q, hd).transpose(2, 0, 1, 3, 4)
+    ks_ = k.reshape(B, H, nC, Q, hd).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nC, Q, hd).transpose(2, 0, 1, 3, 4)
+    ws = logw.reshape(B, H, nC, Q, hd).transpose(2, 0, 1, 3, 4)
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nC * Q, hd)[:, :, :S]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d)
+    y = rms_norm(y.astype(x.dtype), params["ln"])
+    y = (jax.nn.silu(g.astype(jnp.float32)) * y.astype(jnp.float32)
+         ).astype(x.dtype)
+    out = matmul(y, params["o"])
+    new_state = dict(s=s_fin, shift=x[:, -1, :])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (Jamba's SSM mixer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int | None = None
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or max(self.d_model // 16, 1)
+
+
+def mamba_init(key, cfg: MambaConfig, dtype) -> PyTree:
+    ks = jax.random.split(key, 7)
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return dict(
+        in_proj=dense_init(ks[0], (d, 2 * di), dtype),
+        conv=dense_init(ks[1], (cfg.d_conv, di), dtype, fan_in=cfg.d_conv),
+        conv_b=jnp.zeros((di,), jnp.float32),
+        x_proj=dense_init(ks[2], (di, r + 2 * n), dtype),
+        dt_proj=dense_init(ks[3], (r, di), dtype, fan_in=r),
+        dt_bias=(jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                    * (np.log(0.1) - np.log(0.001)) + np.log(0.001))))
+                 ).astype(jnp.float32),
+        A_log=jnp.log(A),
+        D=jnp.ones((di,), jnp.float32),
+        out_proj=dense_init(ks[5], (di, d), dtype, fan_in=di),
+    )
+
+
+def _mamba_inner_scan(h0, dt, B_in, C_in, xin, A):
+    """Sequential selective scan within a chunk (under remat).
+
+    h0: (B, di, n); dt/xin: (B, Q, di); B_in/C_in: (B, Q, n); A: (di, n).
+    """
+    def step(h, ins):
+        dt_t, b_t, c_t, x_t = ins
+        da = jnp.exp(dt_t[:, :, None] * A[None])              # (B,di,n)
+        h = da * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    ins = (dt.transpose(1, 0, 2), B_in.transpose(1, 0, 2),
+           C_in.transpose(1, 0, 2), xin.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, ins)
+    return h, ys.transpose(1, 0, 2)                           # (B,Q,di)
+
+
+def mamba_apply(params, cfg: MambaConfig, x: Array,
+                state: PyTree | None = None):
+    """Full-sequence or streaming Mamba mixer.
+
+    state: dict(h=(B,di,n) f32, conv=(B,d_conv-1,di)). Returns (y, state).
+    """
+    B, S, d = x.shape
+    di, n = cfg.d_inner, cfg.d_state
+    xz = matmul(x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di)
+    # causal depthwise conv
+    prev = (jnp.zeros((B, cfg.d_conv - 1, di), xi.dtype) if state is None
+            else state["conv"].astype(xi.dtype))
+    xc = jnp.concatenate([prev, xi], axis=1)
+    conv_w = params["conv"].astype(jnp.float32)
+    xi = sum(xc[:, i:i + S].astype(jnp.float32) * conv_w[i][None, None, :]
+             for i in range(cfg.d_conv))
+    xi = jax.nn.silu(xi + params["conv_b"][None, None, :]).astype(x.dtype)
+    new_conv = xc[:, S:, :] if cfg.d_conv > 1 else xc[:, :0, :]
+
+    proj = matmul(xi, params["x_proj"]).astype(jnp.float32)
+    dt_low, B_in, C_in = jnp.split(proj, [cfg.rank, cfg.rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        matmul(dt_low.astype(x.dtype), params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"][None, None, :])                   # (B,S,di)
+    A = -jnp.exp(params["A_log"])                             # (di,n) < 0
+
+    h0 = (jnp.zeros((B, di, n), jnp.float32) if state is None
+          else state["h"])
+    Q = min(cfg.chunk, S)
+    pad = (Q - S % Q) % Q
+    if pad:
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+        xp = jnp.pad(xi.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    else:
+        dtp, Bp, Cp, xp = dt, B_in, C_in, xi.astype(jnp.float32)
+    nC = (S + pad) // Q
+
+    inner = jax.checkpoint(functools.partial(_mamba_inner_scan, A=A))
+
+    def chunk_step(h, ins):
+        dt_c, b_c, c_c, x_c = ins
+        h2, y = inner(h, dt_c, b_c, c_c, x_c)
+        return h2, y
+
+    split = lambda a: a.reshape(B, nC, Q, -1).transpose(1, 0, 2, 3)
+    h_fin, ys = jax.lax.scan(chunk_step, h0,
+                             (split(dtp), split(Bp), split(Cp), split(xp)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nC * Q, di)[:, :S]
+    y = y + xp[:, :S] * params["D"][None, None, :]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = matmul(y, params["out_proj"])
+    return out, dict(h=h_fin, conv=new_conv)

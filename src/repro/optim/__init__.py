@@ -1,0 +1,5 @@
+"""Optimizers (ZeRO-sharded states) and LR schedules."""
+from repro.optim.adamw import Optimizer, adafactor, adamw
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "adafactor", "warmup_cosine"]

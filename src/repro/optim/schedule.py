@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(*, peak_lr: float, warmup_steps: int, total_steps: int,
+                  end_lr_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``end_lr_frac * peak_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = end_lr_frac * peak_lr + (1 - end_lr_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

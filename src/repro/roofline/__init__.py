@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (Roofline, analyze, collective_stats,
+                                     format_table, model_flops_estimate)
+from repro.roofline.hw import V5E, HWSpec
+
+__all__ = ["Roofline", "analyze", "collective_stats", "format_table",
+           "model_flops_estimate", "V5E", "HWSpec"]

@@ -1,0 +1,220 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = wire_bytes_per_device / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD-partitioned
+per-device module). Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO and account each collective's *wire* traffic per device with
+ring-algorithm factors:
+
+    all-reduce       2 · size · (g−1)/g      (reduce-scatter + all-gather)
+    all-gather       size · (g−1)/g          (size = result bytes)
+    reduce-scatter   size · (g−1)/g          (size = operand bytes)
+    all-to-all       size · (g−1)/g
+    collective-permute   size
+
+where g is the replica-group size parsed from the op. The dominant term is
+the bottleneck the §Perf loop iterates on; ``useful_ratio`` compares the
+analytic model FLOPs (6·N·D train / 2·N·D inference) against compiled
+FLOPs to expose remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.roofline.hw import HWSpec, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s2": 1, "u2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: "%name = <shape> <op>(...)" — shape may be a tuple
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [groups, group_size]<=[...]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    result_bytes: float = 0.0
+    count: int = 0
+    by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
+    by_kind_count: dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse per-device wire bytes of every collective in optimized HLO."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_text)
+        g = max(_group_size(line), 1)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * size * ring
+        elif kind == "all-gather":
+            wire = size * ring                       # size = gathered result
+        elif kind == "reduce-scatter":
+            wire = size * g * ring                   # size = scattered result
+        elif kind == "all-to-all":
+            wire = size * ring
+        else:                                        # collective-permute
+            wire = float(size)
+        st.wire_bytes += wire
+        st.result_bytes += size
+        st.count += 1
+        st.by_kind[kind] = st.by_kind.get(kind, 0.0) + wire
+        st.by_kind_count[kind] = st.by_kind_count.get(kind, 0) + 1
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float              # post-fusion traffic (pessimistic bound)
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # analytic 6·N·D or 2·N·D (global)
+    useful_ratio: float           # model_flops / (flops_per_device × devices)
+    peak_memory_bytes: float      # from memory_analysis
+    memory_min_s: float = 0.0    # write-once/read-once traffic (optimistic)
+    collectives: dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def step_s(self) -> float:
+        """Pessimistic roofline step estimate (max term; fusion-granular
+        memory bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_min_s(self) -> float:
+        """Optimistic estimate: perfect fusion (write-once/read-once
+        HBM traffic) + perfect overlap."""
+        return max(self.compute_s, self.memory_min_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline actually achieved if the step
+        ran at the modelled time: useful_flops / (devices·peak·step_s)."""
+        denom = self.n_devices * _hw(self).peak_flops_bf16 * self.step_min_s
+        return self.model_flops / denom if denom else 0.0
+
+    def as_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["step_s"] = self.step_s
+        d["step_min_s"] = self.step_min_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def _hw(_r) -> HWSpec:     # single target for now
+    return V5E
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, n_devices: int,
+            cost: dict, hlo_text: str = "", model_flops: float,
+            peak_memory: float = 0.0, hw: HWSpec = V5E,
+            collective_override: Any = None) -> Roofline:
+    """collective_override: object with wire_bytes/collectives/
+    collective_counts (e.g. hlo_cost.HloCost, already trip-scaled) —
+    otherwise collectives are parsed flat from ``hlo_text``."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    byts_min = float(cost.get("bytes min", byts))
+    if collective_override is not None:
+        st = CollectiveStats(
+            wire_bytes=collective_override.wire_bytes,
+            by_kind=dict(collective_override.collectives),
+            by_kind_count=dict(collective_override.collective_counts))
+    else:
+        st = collective_stats(hlo_text)
+    compute_s = flops / hw.peak_flops_bf16
+    memory_s = byts / hw.hbm_bw
+    memory_min_s = byts_min / hw.hbm_bw
+    collective_s = st.wire_bytes / hw.ici_link_bw
+    terms = dict(compute=compute_s, memory=memory_s,
+                 collective=collective_s)
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * n_devices, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=byts,
+        wire_bytes_per_device=st.wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        memory_min_s=memory_min_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, peak_memory_bytes=peak_memory,
+        collectives=st.by_kind, collective_counts=st.by_kind_count)
+
+
+def model_flops_estimate(*, kind: str, n_params_active: int, tokens: int
+                         ) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N·D forward."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * tokens
+
+
+def format_table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<10} {'comp_s':>9} "
+           f"{'mem_s':>9} {'coll_s':>9} {'bound':>7} {'useful':>7} "
+           f"{'roofl%':>7} {'GB/dev':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<22} {r.shape:<12} {r.mesh:<10} {r.compute_s:>9.3g} "
+            f"{r.memory_s:>9.3g} {r.collective_s:>9.3g} {r.bottleneck:>7} "
+            f"{r.useful_ratio:>7.2f} {100 * r.roofline_fraction:>6.1f}% "
+            f"{r.peak_memory_bytes / 1e9:>7.2f}")
+    return "\n".join(lines)

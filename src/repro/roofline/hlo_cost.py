@@ -1,0 +1,347 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — useless for
+scanned layer stacks (a 126-layer scan under-counts 126×). This module
+re-derives the three roofline inputs by walking the HLO call graph:
+
+  * **flops** — exact MXU flops of every ``dot`` (2·∏result·∏contracting,
+    from operand shapes + dimension numbers), scaled by the product of
+    enclosing while-loop trip counts (parsed from each loop condition's
+    ROOT compare against a constant — all lax.scan/fori loops are counted
+    loops);
+  * **bytes** — HBM traffic model: Σ (operand + result bytes) of every
+    *top-level* op in each computation (post-fusion, a fusion op's
+    params/outputs are exactly its HBM footprint — elementwise internals
+    are free), same trip scaling; bookkeeping ops (tuple plumbing,
+    parameters, constants, bitcasts) excluded;
+  * **collectives** — per-op wire bytes (ring factors, see analysis.py),
+    same trip scaling.
+
+Known over-count: a fusion both producing and consuming an operand counts
+it twice (matches HloCostAnalysis convention). Known under-count: we skip
+flops of elementwise ops (they are bandwidth-, not MXU-, limited; their
+traffic IS counted in bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?"
+    r"([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DIMNUM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCHNUM_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "get-dimension-size", "iota", "partition-id", "replica-id",
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    args: str          # text inside the op's own parentheses
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: list[_Instr] = dataclasses.field(default_factory=list)
+    shapes: dict[str, str] = dataclasses.field(default_factory=dict)
+    root_op: str = ""
+
+
+def _balanced(text: str) -> int:
+    """Index just past the closing paren matching text[0] == '('."""
+    depth = 0
+    for i, ch in enumerate(text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _parse_instr(line: str) -> _Instr | None:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or " = " not in s:
+        return None
+    name, rest = s.split(" = ", 1)
+    name = name.lstrip("%")
+    if rest.startswith("("):                       # tuple-shaped result
+        end = _balanced(rest)
+        shape, rest2 = rest[:end], rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest2 = rest[:sp], rest[sp:]
+    rest2 = rest2.strip()
+    par = rest2.find("(")
+    if par < 0:
+        return None
+    op = rest2[:par].strip()
+    args = rest2[par:par + _balanced(rest2[par:])]
+    return _Instr(name, shape, op, args, line)
+
+
+def _parse(hlo: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if (line.startswith("%") or line.startswith("ENTRY")) and \
+                ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line.replace("ENTRY ", "").strip())
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}" or cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.shape
+            if line.strip().startswith("ROOT"):
+                cur.root_op = ins.op
+    return comps
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    result_dims = _shape_dims(instr.shape)
+    ops = _OPERAND_RE.findall(instr.args)
+    if not ops:
+        return 0.0
+    lhs_shape = comp.shapes.get(ops[0], "")
+    lhs_dims = _shape_dims(lhs_shape)
+    m = _DIMNUM_RE.search(instr.line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    n_result = 1
+    for d in result_dims:
+        n_result *= d
+    return 2.0 * n_result * contract
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _collective_wire(instr: _Instr) -> float:
+    size = _shape_bytes(instr.shape)
+    g = max(_group_size(instr.line), 1)
+    ring = (g - 1) / g if g > 1 else 0.0
+    kind = instr.op.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * size * ring
+    if kind == "all-gather":
+        return size * ring
+    if kind == "reduce-scatter":
+        return size * g * ring
+    if kind == "all-to-all":
+        return size * ring
+    return float(size)                        # collective-permute
+
+
+def _trip_count(while_instr: _Instr, comps: dict[str, _Computation]) -> int:
+    # XLA annotates counted loops: backend_config known_trip_count
+    m = _TRIP_RE.search(while_instr.line)
+    if m:
+        return int(m.group(1))
+    # fallback: the constant bound in the loop condition's compare
+    m = re.search(r"condition=%?([\w\.\-]+)", while_instr.line)
+    if not m or m.group(1) not in comps:
+        return 1
+    cond = comps[m.group(1)]
+    root = next((i for i in cond.instrs if i.op == "compare"), None)
+    consts = {}
+    for i in cond.instrs:
+        c = _CONST_RE.search(i.line)
+        if c:
+            consts[i.name] = int(c.group(1))
+    if root is not None:
+        for ref in _OPERAND_RE.findall(root.args):
+            if ref in consts and consts[ref] > 0:
+                return consts[ref]
+    vals = [v for v in consts.values() if v > 0]
+    return max(vals) if vals else 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0          # post-fusion in+out traffic (pessimistic)
+    bytes_min: float = 0.0      # write-once/read-once bound (optimistic:
+    # every op's result written once; only dots also stream operands)
+    wire_bytes: float = 0.0
+    collectives: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def as_cost_dict(self) -> dict:
+        return {"flops": self.flops, "bytes accessed": self.bytes,
+                "bytes min": self.bytes_min}
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = _parse(hlo)
+    entry_name = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.replace("ENTRY", "").strip())
+            if m:
+                entry_name = m.group(1)
+            break
+    if entry_name is None or entry_name not in comps:
+        # fall back: computation named main*
+        entry_name = next((n for n in comps if n.startswith("main")),
+                          next(iter(comps), None))
+    cost = HloCost()
+    memo: dict[str, tuple] = {}
+
+    def comp_cost(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, 0.0, {}, {})
+        f = b = bm_ = w = 0.0
+        coll: dict[str, float] = defaultdict(float)
+        colln: dict[str, float] = defaultdict(float)
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f += _dot_flops(ins, comp)
+            if ins.op in _COLLECTIVES:
+                kind = ins.op.replace("-start", "")
+                wb = _collective_wire(ins)
+                w += wb
+                coll[kind] += wb
+                colln[kind] += 1
+            if ins.op == "while":
+                trips = _trip_count(ins, comps)
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if bm:
+                    bf, bb, bbm, bw, bc, bn = comp_cost(bm.group(1))
+                    f += trips * bf
+                    b += trips * bb
+                    bm_ += trips * bbm
+                    w += trips * bw
+                    for k, v in bc.items():
+                        coll[k] += trips * v
+                    for k, v in bn.items():
+                        colln[k] += trips * v
+                continue
+            # descend into non-loop callees (fusions, reducers, calls)
+            for attr in _CALL_ATTR_RE.finditer(ins.line):
+                if "condition=" in attr.group(0):
+                    continue
+                for callee in attr.group(1).replace("%", "").split(","):
+                    callee = callee.strip()
+                    if callee in comps:
+                        cf, cb, cbm, cw, cc, cn = comp_cost(callee)
+                        f += cf
+                        # bytes of callee internals NOT counted (fusion
+                        # params/result counted at this op below)
+                        w += cw
+                        for k, v in cc.items():
+                            coll[k] += v
+                        for k, v in cn.items():
+                            colln[k] += v
+            if ins.op not in _SKIP_BYTES_OPS:
+                opnd = 0
+                for ref in _OPERAND_RE.findall(ins.args):
+                    opnd += _shape_bytes(comp.shapes.get(ref, ""))
+                res = _shape_bytes(ins.shape)
+                # slice-update ops touch only the slice, not the aliased
+                # buffer: DUS (and fusions rooted in DUS) read+write the
+                # update; dynamic-slice/gather read+write the result.
+                eff_op = ins.op
+                if ins.op == "fusion":
+                    cm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                    if cm and cm.group(1) in comps:
+                        root = comps[cm.group(1)].root_op
+                        if root in ("dynamic-update-slice", "dynamic-slice",
+                                    "gather", "scatter"):
+                            eff_op = root
+                if eff_op in ("dynamic-update-slice", "scatter"):
+                    b += 2.0 * max(opnd - res, 0)    # slice in + slice out
+                    bm_ += max(opnd - res, 0)
+                elif eff_op in ("dynamic-slice", "gather"):
+                    b += 2.0 * res
+                    bm_ += res
+                else:
+                    b += opnd + res
+                    # optimistic bound: result written once; dots also
+                    # stream their operands (weights/activations from HBM)
+                    bm_ += res + (opnd if ins.op == "dot" else 0)
+        out = (f, b, bm_, w, dict(coll), dict(colln))
+        memo[name] = out
+        return out
+
+    f, b, bmin, w, coll, colln = comp_cost(entry_name)
+    cost.flops, cost.bytes, cost.bytes_min, cost.wire_bytes = f, b, bmin, w
+    cost.collectives = coll
+    cost.collective_counts = colln
+    return cost

@@ -1,0 +1,16 @@
+"""Target-hardware constants (TPU v5e) for the roofline analysis."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_link_bw: float = 50e9           # bytes/s per link (per direction)
+    hbm_bytes: float = 16e9             # per-chip capacity
+
+
+V5E = HWSpec()

@@ -1,0 +1,4 @@
+"""Batched serving engine (continuous batching over ragged KV lanes)."""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,165 @@
+"""Continuous-batching decode engine.
+
+Slots share one batched KV cache; lanes are *ragged* (per-lane cache
+lengths — models/blocks.py decode paths take (B,) cache_index), so a
+finished request's slot is refilled immediately by prefilling the next
+queued request into that slot (tree-scatter of its B=1 cache) without
+stalling the other lanes. This is vLLM-style continuous batching mapped
+onto fixed-shape JAX: one compiled decode step, one compiled per-slot
+prefill, zero recompilation at runtime.
+
+Greedy (temperature=0) or categorical sampling; per-request determinism
+from a (seed, uid, position) key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (S,) int32 tokens or (S, fd) frames
+    max_new: int = 16
+    eos: int | None = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    uid: int = -1
+    remaining: int = 0
+    eos: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def active(self) -> bool:
+        return self.uid >= 0
+
+
+class ServeEngine:
+    def __init__(self, mc: M.ModelConfig, params: PyTree, *, n_slots: int,
+                 s_max: int, temperature: float = 0.0, seed: int = 0):
+        if mc.encoder_only:
+            raise ValueError("encoder-only architectures have no decode step")
+        self.mc = mc
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.temperature = temperature
+        self.seed = seed
+        self.caches = M.init_caches(mc, n_slots, s_max)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: list[Request] = []
+        self.done: dict[int, list[int]] = {}
+        self.stats = dict(decode_steps=0, prefills=0, generated=0,
+                          occupancy_sum=0.0)
+
+        @functools.partial(jax.jit, static_argnames=())
+        def _decode(params, tokens, positions, caches, cache_index):
+            return M.decode_step(params, mc, tokens, positions, caches,
+                                 cache_index)
+
+        @jax.jit
+        def _prefill(params, inputs, positions):
+            return M.prefill(params, mc, inputs, positions, s_max)
+
+        self._decode = _decode
+        self._prefill = _prefill
+
+    # ------------------------------------------------------------------
+    def submit(self, reqs: list[Request]) -> None:
+        self.queue.extend(reqs)
+
+    def _positions(self, pos: np.ndarray) -> jnp.ndarray:
+        p = jnp.asarray(pos)
+        if self.mc.pos_dims > 1:
+            p = jnp.stack([p] * self.mc.pos_dims, axis=-1)
+        return p
+
+    def _insert(self, slot: int, req: Request) -> None:
+        """Prefill a request and scatter its cache into the batch."""
+        prompt = np.asarray(req.prompt)
+        S = prompt.shape[0]
+        assert S + req.max_new <= self.s_max, "prompt too long for cache"
+        inputs = jnp.asarray(prompt)[None]
+        pos = self._positions(np.arange(S, dtype=np.int32)[None])
+        logits, cache1 = self._prefill(self.params, inputs, pos)
+        self.caches = jax.tree.map(
+            lambda c, c1: c.at[:, slot].set(c1[:, 0].astype(c.dtype)),
+            self.caches, cache1)
+        tok = self._sample(logits, req.uid, S)
+        self.lengths[slot] = S
+        self.last_tok[slot] = tok
+        self.slots[slot] = _Slot(uid=req.uid, remaining=req.max_new,
+                                 eos=req.eos, out=[])
+        self.stats["prefills"] += 1
+        # the prefill's own next-token counts as the first generated token
+        self._commit_token(slot, int(tok))
+
+    def _sample(self, logits: jnp.ndarray, uid: int, position: int) -> int:
+        if self.temperature <= 0.0:
+            return int(jnp.argmax(logits[0]))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.seed), uid), position)
+        return int(jax.random.categorical(
+            key, logits[0] / self.temperature))
+
+    def _commit_token(self, slot: int, tok: int) -> None:
+        s = self.slots[slot]
+        s.out.append(tok)
+        s.remaining -= 1
+        self.stats["generated"] += 1
+        if s.remaining <= 0 or (s.eos is not None and tok == s.eos):
+            self.done[s.uid] = s.out
+            self.slots[slot] = _Slot()
+            self.lengths[slot] = 0
+
+    def _refill(self) -> None:
+        for i in range(self.n_slots):
+            if not self.slots[i].active and self.queue:
+                self._insert(i, self.queue.pop(0))
+
+    def step(self) -> None:
+        """One batched decode step over all active lanes."""
+        active = np.array([s.active for s in self.slots])
+        if not active.any():
+            return
+        tokens = jnp.asarray(self.last_tok[:, None])
+        pos = self._positions(self.lengths[:, None].astype(np.int32))
+        # append position == lengths; inactive lanes write slot 0 then get
+        # overwritten on refill (their pos rows are ignored by masks)
+        logits, self.caches = self._decode(
+            self.params, tokens, pos, self.caches,
+            jnp.asarray(self.lengths))
+        self.stats["decode_steps"] += 1
+        self.stats["occupancy_sum"] += float(active.mean())
+        new_len = self.lengths + 1
+        for i in range(self.n_slots):
+            if not active[i]:
+                continue
+            self.lengths[i] = new_len[i]
+            tok = self._sample(logits[i:i + 1], self.slots[i].uid,
+                               int(new_len[i]))
+            self.last_tok[i] = tok
+            self._commit_token(i, tok)
+
+    def run(self, reqs: list[Request]) -> dict[int, list[int]]:
+        """Serve to completion; returns uid → generated tokens."""
+        self.submit(reqs)
+        self._refill()
+        while any(s.active for s in self.slots) or self.queue:
+            self.step()
+            self._refill()
+        return self.done

@@ -1,0 +1,4 @@
+"""Fault-tolerant training loop."""
+from repro.train.loop import Trainer, TrainState, make_train_step
+
+__all__ = ["Trainer", "TrainState", "make_train_step"]

@@ -1,0 +1,43 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests must see the
+real single CPU device; only launch/dryrun.py forces 512 host devices."""
+import numpy as np
+import pytest
+
+from repro.core import build_index, build_merged_index, exact_join_pairs
+from repro.data.vectors import make_dataset, thresholds
+
+
+@pytest.fixture(scope="session")
+def ds_manifold():
+    return make_dataset("manifold", n_data=2000, n_query=128, dim=32, seed=7)
+
+
+@pytest.fixture(scope="session")
+def ds_ood():
+    return make_dataset("ood", n_data=2000, n_query=96, dim=32,
+                        n_clusters=12, seed=9)
+
+
+@pytest.fixture(scope="session")
+def index_y(ds_manifold):
+    return build_index(ds_manifold.Y, k=32, degree=16)
+
+
+@pytest.fixture(scope="session")
+def index_x(ds_manifold):
+    return build_index(ds_manifold.X, k=32, degree=16)
+
+
+@pytest.fixture(scope="session")
+def index_merged(ds_manifold):
+    return build_merged_index(ds_manifold.Y, ds_manifold.X, k=32, degree=16)
+
+
+@pytest.fixture(scope="session")
+def theta_mid(ds_manifold):
+    return float(thresholds(ds_manifold, 3)[1])
+
+
+@pytest.fixture(scope="session")
+def truth_mid(ds_manifold, theta_mid):
+    return exact_join_pairs(ds_manifold.X, ds_manifold.Y, theta_mid)

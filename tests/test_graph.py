@@ -1,0 +1,97 @@
+"""Index-construction properties: exact kNN, RNG pruning, reachability,
+merged-index top-1 guarantee (the paper's §4.4 offloading property)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import NO_NODE, build_index, build_merged_index, exact_knn
+from repro.core.graph import _reachable
+
+
+def test_exact_knn_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    Y = rng.normal(size=(500, 24)).astype(np.float32)
+    d, i = exact_knn(jnp.asarray(Y), 10, qblock=128, dblock=100)
+    full = ((Y[:, None, :] - Y[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(full, np.inf)
+    want = np.argsort(full, axis=1)[:, :10]
+    # distances must match exactly (ids can tie)
+    np.testing.assert_allclose(
+        d, np.take_along_axis(full, want, axis=1), rtol=1e-4, atol=1e-4)
+
+
+def test_all_nodes_reachable_from_start(index_y):
+    nbrs = np.asarray(index_y.nbrs)
+    seen = _reachable(nbrs, int(index_y.start))
+    assert seen.all(), f"{(~seen).sum()} nodes unreachable"
+
+
+def test_degree_bounds(index_y):
+    nbrs = np.asarray(index_y.nbrs)
+    deg = (nbrs >= 0).sum(1)
+    assert deg.max() <= index_y.degree
+    assert deg.min() >= 1
+    # no self-loops, no duplicate edges
+    n = nbrs.shape[0]
+    for u in range(0, n, 97):
+        row = nbrs[u][nbrs[u] >= 0]
+        assert u not in row
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_merged_index_top1_property(ds_manifold, index_merged):
+    """Paper §4.4: each query's (approx) top-1 NN data point should be in
+    its merged-index neighborhood. RNG-approximation ⇒ allow ≥90% hit rate
+    counting the 1-hop neighborhood."""
+    X, Y = ds_manifold.X, ds_manifold.Y
+    n_data = index_merged.n_data
+    nbrs = np.asarray(index_merged.nbrs)
+    hits = 0
+    for qi in range(X.shape[0]):
+        node = n_data + qi
+        row = nbrs[node]
+        row = row[(row >= 0) & (row < n_data)]
+        nn = np.argmin(((Y - X[qi]) ** 2).sum(-1))
+        hits += int(nn in row)
+    assert hits / X.shape[0] >= 0.9, f"top-1 hit rate {hits / X.shape[0]}"
+
+
+def test_mean_nbr_dist_side_table(index_y):
+    vecs = np.asarray(index_y.vecs)
+    nbrs = np.asarray(index_y.nbrs)
+    mnd = np.asarray(index_y.mean_nbr_dist)
+    for u in [0, 17, 123]:
+        row = nbrs[u][nbrs[u] >= 0]
+        want = np.linalg.norm(vecs[row] - vecs[u], axis=1).mean()
+        np.testing.assert_allclose(mnd[u], want, rtol=1e-3)
+
+
+def test_rng_prune_rule_small():
+    """On a tiny exact instance, verify the Fig. 5 rule: for each kept edge
+    (u, v) there is no kept w closer to u with dist(w, v) < dist(u, v)."""
+    rng = np.random.default_rng(3)
+    Y = rng.normal(size=(60, 8)).astype(np.float32)
+    gi = build_index(jnp.asarray(Y), k=20, degree=20)
+    # reverse-edge/repair insertion can add non-RNG edges; verify the rule
+    # on the first-pass pruned edges: recompute prune from exact candidates
+    from repro.core.graph import _rng_prune_block
+    d, i = exact_knn(jnp.asarray(Y), 20)
+    nbrs = np.asarray(_rng_prune_block(jnp.asarray(Y), jnp.asarray(i),
+                                       jnp.asarray(d), R=20))
+    dist = ((Y[:, None, :] - Y[None, :, :]) ** 2).sum(-1)
+    for u in range(60):
+        kept = nbrs[u][nbrs[u] >= 0]
+        for a, v in enumerate(kept):
+            for w in kept[:a]:           # w kept before v ⇒ closer to u
+                assert not (dist[u, w] < dist[u, v]
+                            and dist[w, v] < dist[u, v]), (u, v, w)
+
+
+def test_merged_index_data_flags(index_merged, ds_manifold):
+    ny = ds_manifold.Y.shape[0]
+    assert index_merged.n_data == ny
+    assert index_merged.n_nodes == ny + ds_manifold.X.shape[0]
+    ids = jnp.asarray([0, ny - 1, ny, index_merged.n_nodes - 1, -1])
+    np.testing.assert_array_equal(
+        np.asarray(index_merged.is_data(ids)),
+        [True, True, False, False, False])

@@ -1,0 +1,109 @@
+"""End-to-end join behaviour: soundness, recall floors, method invariants,
+and the paper's qualitative claims at test scale."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (JoinConfig, TraversalConfig, exact_join_pairs, recall,
+                        vector_join)
+
+TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                     hybrid_beam=64, seeds_max=8, max_iters=2048)
+ALL = ["index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt"]
+
+
+def _run(method, ds, theta, **idx):
+    cfg = JoinConfig(method=method, theta=theta, traversal=TC, wave_size=64)
+    return vector_join(ds.X, ds.Y, cfg, **idx)
+
+
+@pytest.mark.parametrize("method", ALL)
+def test_soundness_and_dedup(method, ds_manifold, theta_mid, index_y,
+                             index_x, index_merged):
+    """Approximation may MISS pairs but can never fabricate or duplicate."""
+    r = _run(method, ds_manifold, theta_mid, index_y=index_y,
+             index_x=index_x, index_merged=index_merged)
+    p = r.pairs
+    assert len(p) > 0
+    d = np.linalg.norm(ds_manifold.X[p[:, 0]] - ds_manifold.Y[p[:, 1]],
+                       axis=1)
+    assert (d < theta_mid).all()
+    assert len(set(map(tuple, p.tolist()))) == len(p)
+
+
+def test_nlj_is_exact(ds_manifold, theta_mid, truth_mid):
+    r = _run("nlj", ds_manifold, theta_mid)
+    assert r.pair_set() == set(map(tuple, truth_mid.tolist()))
+
+
+@pytest.mark.parametrize("method", ALL)
+def test_recall_floor(method, ds_manifold, theta_mid, truth_mid, index_y,
+                      index_x, index_merged):
+    r = _run(method, ds_manifold, theta_mid, index_y=index_y,
+             index_x=index_x, index_merged=index_merged)
+    assert recall(r, truth_mid) >= 0.8, method
+
+
+def test_work_sharing_reduces_distance_computations(
+        ds_manifold, theta_mid, index_y, index_x, index_merged):
+    """Paper Fig. 10/12: ES ≥ SWS ≥ MI in distance computations."""
+    nd = {}
+    for m in ["es", "es_sws", "es_mi"]:
+        r = _run(m, ds_manifold, theta_mid, index_y=index_y, index_x=index_x,
+                 index_merged=index_merged)
+        nd[m] = r.stats.n_dist
+    assert nd["es_sws"] < nd["es"]
+    assert nd["es_mi"] < nd["es_sws"]
+
+
+def test_sws_cache_smaller_than_hws(ds_manifold, index_y, index_x,
+                                    ds_manifold_theta_hi=None):
+    """Paper §4.3: SWS caches 1 entry/query; HWS caches all in-range."""
+    from repro.data.vectors import thresholds
+    th = float(thresholds(ds_manifold, 3)[2])      # larger θ ⇒ fat caches
+    r_h = _run("es_hws", ds_manifold, th, index_y=index_y, index_x=index_x)
+    r_s = _run("es_sws", ds_manifold, th, index_y=index_y, index_x=index_x)
+    assert r_s.stats.peak_cache_entries <= ds_manifold.X.shape[0]
+    assert r_s.stats.peak_cache_entries < r_h.stats.peak_cache_entries
+
+
+def test_adapt_recovers_ood_recall(ds_ood):
+    """Paper §5.2.1: ES+MI+ADAPT ≫ ES+MI on OOD-heavy data."""
+    from repro.core import build_merged_index
+    from repro.data.vectors import thresholds
+    im = build_merged_index(ds_ood.Y, ds_ood.X, k=24, degree=12)
+    th = float(thresholds(ds_ood, 3)[1])
+    truth = exact_join_pairs(ds_ood.X, ds_ood.Y, th)
+    r_mi = _run("es_mi", ds_ood, th, index_merged=im)
+    r_ad = _run("es_mi_adapt", ds_ood, th, index_merged=im)
+    rec_mi, rec_ad = recall(r_mi, truth), recall(r_ad, truth)
+    assert rec_ad >= rec_mi + 0.1, (rec_mi, rec_ad)
+    assert rec_ad >= 0.85
+    # the detector should flag most midpoint queries (Table 1 OOD ratio)
+    assert r_ad.stats.n_ood >= 0.5 * ds_ood.X.shape[0]
+
+
+def test_visited_invariant_distance_budget(ds_manifold, theta_mid, index_y):
+    """No (query, node) distance is ever computed twice ⇒ n_dist ≤ |X|·|Y|
+    and, for INDEX on this scale, strictly fewer than brute force."""
+    r = _run("index", ds_manifold, theta_mid, index_y=index_y)
+    assert r.stats.n_dist < ds_manifold.X.shape[0] * ds_manifold.Y.shape[0]
+
+
+def test_empty_result_threshold(ds_manifold, index_y):
+    cfg = JoinConfig(method="es", theta=1e-6, traversal=TC, wave_size=64)
+    r = vector_join(ds_manifold.X, ds_manifold.Y, cfg, index_y=index_y)
+    assert len(r.pairs) == 0
+
+
+def test_wave_size_invariance(ds_manifold, theta_mid, index_merged):
+    """Result set must not depend on wave batching (MI has no ordering)."""
+    out = []
+    for ws in [32, 128]:
+        cfg = JoinConfig(method="es_mi", theta=theta_mid, traversal=TC,
+                         wave_size=ws)
+        r = vector_join(ds_manifold.X, ds_manifold.Y, cfg,
+                        index_merged=index_merged)
+        out.append(r.pair_set())
+    assert out[0] == out[1]

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline
+(dataset → offline index build → online join across methods) plus the
+paper's qualitative claims at CI scale."""
+import numpy as np
+import pytest
+
+from repro.core import (JoinConfig, TraversalConfig, build_index,
+                        build_merged_index, exact_join_pairs, predict_ood,
+                        recall, vector_join)
+from repro.data.vectors import make_dataset, thresholds
+
+
+def test_end_to_end_pipeline():
+    ds = make_dataset("manifold", n_data=1500, n_query=64, dim=24, seed=13)
+    iy = build_index(ds.Y, k=24, degree=12)
+    ix = build_index(ds.X, k=24, degree=12)
+    im = build_merged_index(ds.Y, ds.X, k=24, degree=12)
+    ths = thresholds(ds, 3)
+    tc = TraversalConfig(beam_width=48, expand_per_iter=4, pool_cap=512,
+                         hybrid_beam=48, seeds_max=8, max_iters=1024)
+    for theta in [float(ths[0]), float(ths[2])]:
+        truth = exact_join_pairs(ds.X, ds.Y, theta)
+        for m in ["es", "es_hws", "es_sws", "es_mi", "es_mi_adapt"]:
+            cfg = JoinConfig(method=m, theta=theta, traversal=tc,
+                             wave_size=32)
+            r = vector_join(ds.X, ds.Y, cfg, index_y=iy, index_x=ix,
+                            index_merged=im)
+            # soundness always; recall floor only when join is non-trivial
+            if len(r.pairs):
+                d = np.linalg.norm(ds.X[r.pairs[:, 0]] - ds.Y[r.pairs[:, 1]],
+                                   axis=1)
+                assert (d < theta).all()
+            if len(truth) > 20:
+                assert recall(r, truth) > 0.7, (m, theta)
+
+
+def test_ood_predictor_separates_regimes():
+    """Paper Table 1: ID datasets ≈0% OOD; midpoint-query datasets ≳90%."""
+    import jax.numpy as jnp
+    id_ds = make_dataset("manifold", n_data=1500, n_query=64, dim=24, seed=3)
+    ood_ds = make_dataset("ood", n_data=1500, n_query=64, dim=24,
+                          n_clusters=12, seed=3)
+    out = {}
+    for name, ds in [("id", id_ds), ("ood", ood_ds)]:
+        im = build_merged_index(ds.Y, ds.X, k=24, degree=12)
+        qids = im.n_data + jnp.arange(ds.X.shape[0], dtype=jnp.int32)
+        flags = np.asarray(predict_ood(im, jnp.asarray(ds.X), qids))
+        out[name] = flags.mean()
+    assert out["id"] <= 0.2, out
+    assert out["ood"] >= 0.6, out
+
+
+def test_stats_accounting():
+    ds = make_dataset("manifold", n_data=1000, n_query=32, dim=24, seed=21)
+    iy = build_index(ds.Y, k=24, degree=12)
+    theta = float(thresholds(ds, 3)[1])
+    tc = TraversalConfig(beam_width=32, expand_per_iter=2, pool_cap=256,
+                         seeds_max=4, max_iters=512)
+    cfg = JoinConfig(method="es", theta=theta, traversal=tc, wave_size=32)
+    r = vector_join(ds.X, ds.Y, cfg, index_y=iy)
+    s = r.stats
+    assert s.n_dist > 0
+    assert s.n_iters > 0
+    assert s.total_seconds > 0
+    assert s.n_dist <= ds.X.shape[0] * ds.Y.shape[0]
+    d = s.as_dict()
+    assert "greedy_seconds" in d and "total_seconds" in d

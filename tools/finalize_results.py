@@ -1,0 +1,81 @@
+"""Merge cell re-runs into the sweep JSONs and emit EXPERIMENTS tables.
+
+  PYTHONPATH=src python tools/finalize_results.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = "results"
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def merge(sweep_path: str, fix_glob: str) -> list[dict]:
+    rows = load(sweep_path)
+    by_key = {(r.get("arch"), r.get("shape")): i for i, r in enumerate(rows)}
+    for fp in sorted(glob.glob(fix_glob)):
+        for r in load(fp):
+            key = (r.get("arch"), r.get("shape"))
+            if key in by_key:
+                rows[by_key[key]] = r
+            else:
+                rows.append(r)
+    with open(sweep_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def table(rows: list[dict], *, caption: str) -> str:
+    out = [f"**{caption}**", ""]
+    out.append("| arch | shape | mesh | GB/dev | comp_s | mem_s [min–max] | "
+               "coll_s | bound | useful | roofl% |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"*{r['reason']}* | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        mm = r.get("memory_min_s", r["memory_s"])
+        # MXU-dot 'useful' ratio is meaningless for the dot-free join waves
+        useful = ("—" if r["flops_per_device"] == 0
+                  else f"{r['useful_ratio']:.2f}")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['peak_memory_bytes'] / 1e9:.2f} | {r['compute_s']:.3g} | "
+            f"{mm:.3g}–{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['bottleneck']} | {useful} | "
+            f"{100 * r['roofline_fraction']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    sp = merge(os.path.join(RESULTS, "dryrun_single_pod_opt.json"),
+               "/tmp/fix_*_sp.json")
+    mp = merge(os.path.join(RESULTS, "dryrun_multi_pod.json"),
+               "/tmp/fix_*_mp.json")
+    print(table(sp, caption="Optimized single-pod (16×16 = 256 chips)"))
+    print()
+    print(table(mp, caption="Multi-pod (2×16×16 = 512 chips)"))
+    print()
+    # join cells (single-pod first, then the multi-pod proof cell)
+    join_rows = []
+    for fp in sorted(glob.glob(os.path.join(RESULTS, "cell_*.json"))):
+        if "cell_mp_" in fp:
+            continue
+        join_rows.extend(load(fp))
+    for fp in sorted(glob.glob(os.path.join(RESULTS, "cell_mp_*.json"))):
+        join_rows.extend(load(fp))
+    print(table(join_rows, caption="Distributed-join cells"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON results.
+
+  PYTHONPATH=src python tools/make_tables.py results/dryrun_single_pod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 1e9:.2f}"
+
+
+def render(rows: list[dict]) -> str:
+    out = []
+    hdr = ("| arch | shape | mesh | GB/dev | comp_s | mem_s | coll_s | "
+           "bound | useful | mb |")
+    sep = "|" + "---|" * 10
+    out.append(hdr)
+    out.append(sep)
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"skip: {r['reason']} | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | ERROR "
+                       f"{r['error'][:40]} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_bytes(r['peak_memory_bytes'])} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r.get('microbatches', '—')} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            rows = json.load(f)
+        print(f"### {path}\n")
+        print(render(rows))
+        print()
+
+
+if __name__ == "__main__":
+    main()
