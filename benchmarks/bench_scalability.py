@@ -4,11 +4,10 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit
-from repro.core import (build_index, build_merged_index, exact_join_pairs,
-                        recall)
-from repro.core.join import vector_join
+from repro.core import exact_join_pairs, recall
 from repro.core.types import JoinConfig
 from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
 
 METHODS = ("nlj", "es", "es_sws", "es_mi")
 SIZES_CI = (4_000, 8_000, 16_000, 32_000)
@@ -21,15 +20,13 @@ def run(scale: str = "ci") -> list[dict]:
     for n in sizes:
         ds = make_dataset("manifold", n_data=n, n_query=256, dim=48, seed=3)
         theta = float(thresholds(ds, 7)[0])
-        iy = build_index(ds.Y, k=32, degree=24)
-        ix = build_index(ds.X, k=32, degree=24)
-        im = build_merged_index(ds.Y, ds.X, k=32, degree=24)
+        eng = JoinEngine(ds.Y, build_kw=dict(k=32, degree=24))
+        eng.index_y(), eng.index_x(ds.X), eng.merged_index(ds.X)  # offline
         tr = exact_join_pairs(ds.X, ds.Y, theta)
         for method in METHODS:
             cfg = JoinConfig(method=method, theta=theta, wave_size=128)
             t0 = time.perf_counter()
-            res = vector_join(ds.X, ds.Y, cfg, index_y=iy, index_x=ix,
-                              index_merged=im)
+            res = eng.join(ds.X, cfg)
             dt = time.perf_counter() - t0
             rows.append(dict(n_data=n, method=method, seconds=dt,
                              recall=recall(res, tr),

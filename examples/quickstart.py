@@ -1,45 +1,53 @@
-"""Quickstart: the paper's approximate threshold-based vector join.
+"""Quickstart: the paper's approximate threshold-based vector join,
+served from a persistent JoinEngine.
 
-Builds a merged index over queries∪data (work offloading, §4.4), runs the
-full method stack on one synthetic Table-1-regime dataset, and compares
-latency / recall / distance computations — the paper's Fig. 10 in
-miniature.
+The engine builds each index artifact once (here eagerly, as the offline
+phase; lazily on first use otherwise) and reuses it across the whole
+method matrix and a threshold sweep — the paper's Fig. 10 in miniature,
+plus the serving layer's index-reuse story.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
-from repro.core import (build_index, build_merged_index, exact_join_pairs,
-                        recall, vector_join)
+from repro.core import exact_join_pairs, recall
 from repro.core.types import JoinConfig
 from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
 
 
 def main() -> None:
     ds = make_dataset("manifold", n_data=10_000, n_query=256, dim=48, seed=0)
-    theta = float(thresholds(ds, 7)[1])
+    grid = thresholds(ds, 7)
+    theta = float(grid[1])
     print(f"|X|={ds.X.shape[0]} |Y|={ds.Y.shape[0]} dim={ds.X.shape[1]} "
           f"θ={theta:.3f}")
 
+    engine = JoinEngine(ds.Y, build_kw=dict(k=32, degree=24))
     print("building indexes (offline)...")
     t0 = time.perf_counter()
-    index_y = build_index(ds.Y, k=32, degree=24)
-    index_x = build_index(ds.X, k=32, degree=24)
-    merged = build_merged_index(ds.Y, ds.X, k=32, degree=24)
-    print(f"  built in {time.perf_counter() - t0:.1f}s")
+    engine.index_y(), engine.index_x(ds.X), engine.merged_index(ds.X)
+    print(f"  built in {time.perf_counter() - t0:.1f}s "
+          f"(counts: {engine.build_counts})")
 
     truth = exact_join_pairs(ds.X, ds.Y, theta)
     print(f"ground truth: {len(truth)} pairs\n")
+
     print(f"{'method':<14}{'seconds':>9}{'recall':>8}{'dists':>12}")
     for method in ("nlj", "index", "es", "es_hws", "es_sws", "es_mi",
                    "es_mi_adapt"):
         cfg = JoinConfig(method=method, theta=theta, wave_size=128)
         t0 = time.perf_counter()
-        res = vector_join(ds.X, ds.Y, cfg, index_y=index_y, index_x=index_x,
-                          index_merged=merged)
+        res = engine.join(ds.X, cfg)
         dt = time.perf_counter() - t0
         rec = recall(res, truth)
         print(f"{method:<14}{dt:>9.2f}{rec:>8.3f}{res.stats.n_dist:>12,}")
+
+    print(f"\nindex builds so far: {engine.build_counts}")
+    print("threshold sweep on the cached merged index:")
+    for i, r in enumerate(engine.sweep(ds.X, grid[:3], method="es_mi")):
+        print(f"  θ{i + 1}={float(grid[i]):.3f}: {len(r.pairs)} pairs")
+    print(f"index builds after sweep: {engine.build_counts}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,56 @@ def preset(name: str, *, theta: float, **tcfg_kw) -> JoinConfig:
     return dataclasses.replace(cfg, theta=theta, traversal=tr)
 
 
+# ---------------------------------------------------------------------------
+# engine presets — how a serving deployment instantiates JoinEngine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Constructor recipe for a ``repro.engine.JoinEngine`` deployment.
+
+    ``n_shards=0`` means "one shard per visible device" (resolved at
+    ``make_engine`` time); 1 pins single-device execution.
+    """
+    k: int = 48                    # kNN candidates per node at build time
+    degree: int = 32               # index max out-degree R
+    style: str = "nsg"
+    n_shards: int = 1
+    carry_window: int = 4096       # streaming work-sharing donor window
+    max_cached_indexes: int = 4    # per-X artifact LRU capacity
+
+    def build_kw(self) -> dict:
+        return dict(k=self.k, degree=self.degree, style=self.style)
+
+
+ENGINE_PRESETS = {
+    # single-device defaults matching the paper's offline build
+    "default": EngineSpec(),
+    # CI-scale: smaller graphs, fast builds
+    "ci": EngineSpec(k=32, degree=24),
+    # serving: data side sharded over every visible device
+    "serving": EngineSpec(n_shards=0, carry_window=16_384,
+                          max_cached_indexes=8),
+}
+
+
+def make_engine(Y, spec: str | EngineSpec = "default", *,
+                default: JoinConfig | None = None, **overrides):
+    """Instantiate a ``JoinEngine`` from a named (or explicit) spec."""
+    import jax
+
+    from repro.engine import JoinEngine
+
+    if isinstance(spec, str):
+        spec = ENGINE_PRESETS[spec]
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    n_shards = spec.n_shards or len(jax.devices())
+    return JoinEngine(Y, build_kw=spec.build_kw(), default=default,
+                      n_shards=n_shards, carry_window=spec.carry_window,
+                      max_cached_indexes=spec.max_cached_indexes)
+
+
 @dataclasses.dataclass(frozen=True)
 class JoinCell:
     """One distributed-join dry-run cell.

@@ -1,0 +1,56 @@
+"""Version bridge for the JAX sharding API.
+
+The codebase targets the modern spellings (``jax.shard_map``,
+``jax.set_mesh``, ``jax.P``, ``check_vma=``); older jaxlibs (< 0.5) ship
+the same functionality as ``jax.experimental.shard_map.shard_map`` with
+``check_rep=`` and have no ambient-mesh context manager. Route every
+sharded call site through this module so one import works on both.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P  # noqa: F401  (re-export)
+
+__all__ = ["P", "shard_map", "set_mesh", "abstract_mesh", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (new) with a ``psum(1)`` fallback (old) —
+    both must run inside a shard_map/pmap body."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """``jax.sharding.AbstractMesh`` across its two signatures: modern
+    ``(sizes, names)`` vs the older ``(((name, size), ...),)`` form."""
+    try:
+        return jax.sharding.AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` where available, else the experimental spelling
+    (whose ``check_rep`` plays the role of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` / ``sharding.use_mesh`` when
+    present; a no-op otherwise (old shard_map binds its mesh explicitly,
+    so nothing ambient is needed)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext()

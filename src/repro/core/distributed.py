@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import traversal
+from repro.core import compat, traversal
 from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
 from repro.kernels import ref as kref
 
@@ -141,7 +141,7 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
         hybrid=hybrid, axis=flat)
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(spec_idx, spec_idx, spec_idx, spec_idx, P(), P(), P()),
         out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx),
@@ -170,7 +170,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         padded[:ids.size] = ids
         lane_valid = np.zeros(wave_size, bool)
         lane_valid[:ids.size] = True
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             gids, gdist, n_pool, overflow, n_dist = step(
                 smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
@@ -210,7 +210,7 @@ def make_distributed_nlj_count(mesh: Mesh, data_axes, model_axis: str,
         cnt = jnp.sum(d2 < jnp.float32(theta) ** 2, axis=1).astype(jnp.int32)
         return jax.lax.psum(cnt, data_axes)            # (B,) global counts
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, model_axis), P(data_axes, model_axis)),
         out_specs=P(),

@@ -1,4 +1,4 @@
-"""Vector-join driver (paper Alg. 1) — all methods of §5.1.2 in one framework.
+"""Vector-join entry points (paper Alg. 1) — all methods of §5.1.2.
 
   nlj          exact nested-loop join (kernels/nlj.py)
   index        INLJ: per-query search from s_Y, no early stopping
@@ -8,28 +8,19 @@
   es_mi        merged index, greedy phase offloaded to construction (§4.4)
   es_mi_adapt  + adaptive hybrid BBFS for predicted-OOD queries (§4.5)
 
-Queries are processed in *waves* (DESIGN §2.4): MST wavefronts for the
-work-sharing methods (parents always complete before children), arbitrary
-chunks otherwise. Lanes beyond a short final wave are padded with invalid
-seeds and masked throughout.
+The wave runners live in ``repro.engine.waves``; the persistent serving
+layer (index caching, streaming batches, sharded execution) is
+``repro.engine.JoinEngine``. ``vector_join`` below is the one-shot
+compatibility wrapper: it spins up a transient engine per call, so the
+old build-per-invocation semantics are preserved exactly.
 """
 from __future__ import annotations
 
-import functools
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ordering, traversal
-from repro.core.ood import predict_ood
-from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinResult,
-                              JoinStats)
+from repro.core.types import GraphIndex, JoinConfig, JoinResult
 from repro.kernels import ops
-
-Array = jax.Array
-_INF = jnp.float32(jnp.inf)
 
 
 # ---------------------------------------------------------------------------
@@ -53,55 +44,8 @@ def exact_join_pairs(X, Y, theta: float, *, block: int = 1024,
 
 
 # ---------------------------------------------------------------------------
-# MI seed probing (greedy phase offloaded to the index — paper §4.4)
+# one-shot compatibility wrapper over the engine
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("traverse_nondata", "dist_impl"))
-def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
-              traverse_nondata: bool, dist_impl: str | None):
-    """Probe each query's own neighborhood row in the merged index."""
-    B = x.shape[0]
-    W = traversal.bitmap_words(merged.n_nodes)
-    visited = jnp.zeros((B, W), jnp.uint32)
-    # mark the query's own node visited so traversal never loops back
-    lane = jnp.arange(B, dtype=jnp.int32)
-    visited = visited.at[lane, (qids >> 5)].add(
-        jnp.uint32(1) << (qids & 31).astype(jnp.uint32))
-    rows = merged.nbrs[qids]                                 # (B, R)
-    valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
-    dist, valid, visited, n_new = traversal._probe(
-        merged.vecs, x, rows, valid, visited,
-        n_data=merged.n_data, traverse_nondata=traverse_nondata,
-        dist_impl=dist_impl)
-    best = jnp.min(dist, axis=1)
-    besti = jnp.take_along_axis(
-        jnp.where(valid, rows, NO_NODE),
-        jnp.argmin(dist, axis=1)[:, None], axis=1)[:, 0]
-    return rows, dist, valid, visited, n_new, best, besti
-
-
-# ---------------------------------------------------------------------------
-# wave runners
-# ---------------------------------------------------------------------------
-
-def _pad_wave(ids: np.ndarray, wave_size: int) -> tuple[np.ndarray, np.ndarray]:
-    n = ids.shape[0]
-    if n == wave_size:
-        return ids, np.ones(n, bool)
-    pad = np.zeros(wave_size - n, ids.dtype)
-    return np.concatenate([ids, pad]), np.concatenate(
-        [np.ones(n, bool), np.zeros(wave_size - n, bool)])
-
-
-def _collect_pairs(qids: np.ndarray, lane_valid: np.ndarray,
-                   pool_idx: np.ndarray, n_pool: np.ndarray) -> np.ndarray:
-    C = pool_idx.shape[1]
-    n_pool = np.where(lane_valid, n_pool, 0)
-    mask = np.arange(C)[None, :] < n_pool[:, None]
-    lanes, slots = np.nonzero(mask)
-    return np.stack([qids[lanes], pool_idx[lanes, slots]], axis=1).astype(
-        np.int64)
-
 
 def vector_join(X, Y, cfg: JoinConfig, *,
                 index_y: GraphIndex | None = None,
@@ -109,197 +53,10 @@ def vector_join(X, Y, cfg: JoinConfig, *,
                 index_merged: GraphIndex | None = None,
                 build_kw: dict | None = None) -> JoinResult:
     """Run the configured join method. Indexes are built if not supplied
-    (offline phase; supply prebuilt ones to amortize across thresholds)."""
-    from repro.core import graph  # local import to avoid cycles
+    (offline phase; supply prebuilt ones — or hold a
+    ``repro.engine.JoinEngine`` — to amortize across thresholds)."""
+    from repro.engine import JoinEngine  # local import to avoid cycles
 
-    X = jnp.asarray(X)
-    Y = jnp.asarray(Y)
-    nq = X.shape[0]
-    tcfg = cfg.traversal
-    stats = JoinStats()
-    build_kw = build_kw or {}
-
-    if cfg.method == "nlj":
-        t0 = time.perf_counter()
-        pairs = exact_join_pairs(X, Y, cfg.theta, impl=tcfg.dist_impl)
-        stats.other_seconds = time.perf_counter() - t0
-        stats.n_dist = int(nq) * int(Y.shape[0])
-        return JoinResult(pairs=pairs, stats=stats)
-
-    needs_merged = cfg.method in ("es_mi", "es_mi_adapt")
-    needs_mst = cfg.method in ("es_hws", "es_sws")
-    t0 = time.perf_counter()
-    if needs_merged:
-        if index_merged is None:
-            index_merged = graph.build_merged_index(Y, X, **build_kw)
-    else:
-        if index_y is None:
-            index_y = graph.build_index(Y, **build_kw)
-        if needs_mst and index_x is None:
-            index_x = graph.build_index(X, **build_kw)
-    stats.other_seconds += time.perf_counter() - t0
-
-    all_pairs: list[np.ndarray] = []
-
-    if needs_merged:
-        _run_mi(X, index_merged, cfg, stats, all_pairs)
-    else:
-        _run_search(X, index_y, index_x, cfg, stats, all_pairs)
-
-    pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
-             else np.empty((0, 2), np.int64))
-    return JoinResult(pairs=pairs, stats=stats)
-
-
-def _run_search(X: Array, index_y: GraphIndex, index_x: GraphIndex | None,
-                cfg: JoinConfig, stats: JoinStats,
-                all_pairs: list[np.ndarray]) -> None:
-    """index / es / es_hws / es_sws paths (greedy from seeds + BFS)."""
-    import dataclasses
-    nq = X.shape[0]
-    tcfg = cfg.traversal
-    if cfg.method == "index" and tcfg.patience >= 0:
-        tcfg = dataclasses.replace(tcfg, patience=-1)  # INDEX: no ES
-    needs_mst = cfg.method in ("es_hws", "es_sws")
-    sy = int(index_y.start)
-
-    t0 = time.perf_counter()
-    if needs_mst:
-        parent = ordering.mst_order(index_x, index_y.vecs[sy])
-        waves = ordering.wavefronts(parent, cfg.wave_size)
-    else:
-        parent = np.full(nq, -1, np.int64)
-        order = np.arange(nq)
-        waves = [order[i:i + cfg.wave_size]
-                 for i in range(0, nq, cfg.wave_size)]
-    stats.other_seconds += time.perf_counter() - t0
-
-    S = tcfg.seeds_max
-    cache_ids: dict[int, np.ndarray] = {}
-    cache_n = 0
-
-    for wave in waves:
-        qids, lane_valid = _pad_wave(wave, cfg.wave_size)
-        xw = X[jnp.asarray(qids)]
-        # --- seeds from parent caches (Alg. 1 lines 5–9) ---
-        t0 = time.perf_counter()
-        seeds = np.full((cfg.wave_size, S), sy, np.int32)
-        seeds_valid = np.zeros((cfg.wave_size, S), bool)
-        seeds_valid[:, 0] = True
-        for i, q in enumerate(qids):
-            p = int(parent[q]) if lane_valid[i] else -1
-            c = cache_ids.get(p)
-            if p >= 0 and c is not None and c.size > 0:
-                k = min(S, c.size)
-                seeds[i, :k] = c[:k]
-                seeds_valid[i, :k] = True
-        seeds_j = jnp.asarray(seeds)
-        sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
-        stats.other_seconds += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        g = traversal.greedy_search(
-            index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
-            n_data=index_y.n_data, traverse_nondata=True)
-        jax.block_until_ready(g.beam_dist)
-        stats.greedy_seconds += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        init_valid = (g.beam_idx != NO_NODE) & jnp.isfinite(g.beam_dist)
-        r = traversal.range_expand(
-            index_y, xw, cfg.theta, cfg=tcfg, n_data=index_y.n_data,
-            hybrid=False, traverse_nondata=True,
-            init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
-            visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
-            n_dist=g.n_dist)
-        jax.block_until_ready(r.pool_idx)
-        stats.expand_seconds += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        pool_idx = np.asarray(r.pool_idx)
-        pool_dist = np.asarray(r.pool_dist)
-        n_pool = np.asarray(r.n_pool)
-        lv = np.asarray(lane_valid)
-        all_pairs.append(_collect_pairs(qids, lv, pool_idx, n_pool))
-        stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
-        stats.n_iters += int(g.n_iters) + int(r.n_iters)
-        stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
-        # --- SelectDataToCache (Alg. 3) ---
-        if cfg.method == "es_hws":
-            for i, q in enumerate(qids):
-                if not lv[i]:
-                    continue
-                k = n_pool[i]
-                o = np.argsort(pool_dist[i, :k])
-                cache_ids[int(q)] = pool_idx[i, :k][o]
-                cache_n += int(k)
-        elif cfg.method == "es_sws":
-            best_i = np.asarray(r.best_idx)
-            for i, q in enumerate(qids):
-                if not lv[i]:
-                    continue
-                b = int(best_i[i])
-                cache_ids[int(q)] = (np.asarray([b], np.int32)
-                                     if b != NO_NODE else
-                                     np.empty(0, np.int32))
-                cache_n += 1
-        stats.peak_cache_entries = max(stats.peak_cache_entries, cache_n)
-        stats.other_seconds += time.perf_counter() - t0
-
-
-def _run_mi(X: Array, merged: GraphIndex, cfg: JoinConfig, stats: JoinStats,
-            all_pairs: list[np.ndarray]) -> None:
-    """es_mi / es_mi_adapt paths (greedy offloaded; BFS or adaptive BBFS)."""
-    nq = X.shape[0]
-    tcfg = cfg.traversal
-    n_data = merged.n_data
-
-    # adaptive split: predict OOD once, vectorized (paper §4.5)
-    t0 = time.perf_counter()
-    if cfg.method == "es_mi_adapt":
-        flags = []
-        for q0 in range(0, nq, 4096):
-            q1 = min(q0 + 4096, nq)
-            qid = n_data + jnp.arange(q0, q1, dtype=jnp.int32)
-            flags.append(np.asarray(predict_ood(
-                merged, X[q0:q1], qid, factor=cfg.ood_factor)))
-        ood = np.concatenate(flags)
-        stats.n_ood = int(ood.sum())
-    else:
-        ood = np.zeros(nq, bool)
-    groups = [(np.flatnonzero(~ood), False), (np.flatnonzero(ood), True)]
-    stats.other_seconds += time.perf_counter() - t0
-
-    for ids_all, hybrid in groups:
-        for c0 in range(0, ids_all.size, cfg.wave_size):
-            wave = ids_all[c0:c0 + cfg.wave_size]
-            qids, lane_valid = _pad_wave(wave, cfg.wave_size)
-            xw = X[jnp.asarray(qids)]
-            node_ids = jnp.asarray(qids, jnp.int32) + n_data
-            lv_j = jnp.asarray(lane_valid)
-
-            t0 = time.perf_counter()
-            rows, dist, valid, visited, n_new, best, besti = _mi_probe(
-                merged, xw, node_ids, lv_j,
-                traverse_nondata=hybrid, dist_impl=tcfg.dist_impl)
-            jax.block_until_ready(dist)
-            stats.greedy_seconds += time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            r = traversal.range_expand(
-                merged, xw, cfg.theta, cfg=tcfg, n_data=n_data,
-                hybrid=hybrid, traverse_nondata=hybrid,
-                init_idx=rows, init_dist=dist, init_valid=valid,
-                visited=visited, best_dist=best, best_idx=besti,
-                n_dist=n_new)
-            jax.block_until_ready(r.pool_idx)
-            stats.expand_seconds += time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            lv = np.asarray(lane_valid)
-            all_pairs.append(_collect_pairs(
-                qids, lv, np.asarray(r.pool_idx), np.asarray(r.n_pool)))
-            stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
-            stats.n_iters += int(r.n_iters)
-            stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
-            stats.other_seconds += time.perf_counter() - t0
+    eng = JoinEngine(Y, build_kw=build_kw, default=cfg)
+    return eng.join(X, cfg, index_y=index_y, index_x=index_x,
+                    index_merged=index_merged)

@@ -1,0 +1,7 @@
+"""Persistent join serving layer (engine.JoinEngine) and its wave runners."""
+from repro.engine.engine import JoinEngine
+from repro.engine.waves import (run_mi_join, run_search_join,
+                                run_search_wave)
+
+__all__ = ["JoinEngine", "run_mi_join", "run_search_join",
+           "run_search_wave"]

@@ -1,0 +1,449 @@
+"""JoinEngine — a persistent, sharded serving layer for threshold joins.
+
+The paper's framework is a one-shot ``vector_join()`` call: every
+invocation rebuilds its indexes and runs on one device. The engine turns
+it into a long-lived service object (the substrate for the ROADMAP's
+production north star):
+
+  * **Index caching** — ``GraphIndex`` artifacts (data index, query index,
+    merged index, per-shard merged indexes) are built once and reused
+    across repeated joins, threshold sweeps, and method switches. Builds
+    are counted in ``build_counts`` so callers (and tests) can assert
+    reuse. Per-query-set artifacts are keyed by a content fingerprint of
+    X and held in a small LRU.
+  * **Streaming** — ``submit(X_batch)`` pads each incoming batch into
+    waves and joins it against Y under *global* query ids. For the
+    work-sharing methods the cache of completed queries is carried
+    forward between batches: each new query seeds from the cache entry of
+    the nearest already-completed query (the streaming analogue of the
+    paper's MST parent order, where the MST cannot be known up front).
+  * **Sharding** — with ``n_shards > 1`` the data side is partitioned
+    across devices via ``shard_map`` (core/distributed.py): one merged
+    subgraph per device, query waves replicated, per-shard in-range pools
+    merged on the host. ``X ⋈_θ Y = ∪_s (X ⋈_θ Y_s)`` holds exactly, so
+    recall composes additively across shards.
+
+``vector_join()`` remains as a thin compatibility wrapper over a
+transient engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import (GraphIndex, JoinConfig, JoinResult, JoinStats)
+from repro.engine import waves as W
+
+Array = jax.Array
+
+_MI_METHODS = ("es_mi", "es_mi_adapt")
+_SEARCH_METHODS = ("index", "es", "es_hws", "es_sws")
+_CACHING_METHODS = ("es_hws", "es_sws")
+
+
+def _fingerprint(a) -> str:
+    """Content hash of a vector set — the cache key for per-X artifacts."""
+    a = np.ascontiguousarray(np.asarray(a))
+    h = hashlib.sha1()
+    h.update(repr((a.shape, str(a.dtype))).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+class _LRU(OrderedDict):
+    def __init__(self, cap: int):
+        super().__init__()
+        self.cap = cap
+
+    def touch(self, key):
+        if key in self:
+            self.move_to_end(key)
+            return self[key]
+        return None
+
+    def put(self, key, value):
+        self[key] = value
+        self.move_to_end(key)
+        while len(self) > self.cap:
+            self.popitem(last=False)
+
+
+class JoinEngine:
+    """Persistent join service over one data side Y.
+
+    Parameters
+    ----------
+    Y : (N, d) data vectors (the side that gets indexed / sharded).
+    build_kw : kwargs forwarded to ``graph.build_index`` /
+        ``build_merged_index`` (``k``, ``degree``, ``style``, ...).
+    default : the ``JoinConfig`` used when a call supplies none.
+    n_shards : >1 shards Y (and its merged indexes) over that many
+        devices for the MI methods. Requires ≥ n_shards JAX devices.
+    mesh, shard_axes : optionally supply an existing mesh (e.g. the
+        production ``(pod, data, model)`` mesh) instead of the default
+        1-D ``("data",)`` mesh the engine builds on demand.
+    carry_window : how many completed queries the streaming path keeps
+        as seed donors for future batches.
+    max_cached_indexes : LRU capacity for per-X artifacts (query index,
+        merged index, sharded index — each keyed by X's fingerprint).
+    """
+
+    def __init__(self, Y, *, build_kw: dict | None = None,
+                 default: JoinConfig | None = None, n_shards: int = 1,
+                 mesh=None, shard_axes=("data",), carry_window: int = 4096,
+                 max_cached_indexes: int = 4):
+        self.Y = jnp.asarray(Y)
+        self.build_kw = dict(build_kw or {})
+        self.default = default or JoinConfig()
+        self.n_shards = int(n_shards)
+        self._mesh = mesh
+        self._shard_axes = shard_axes
+        self.carry_window = int(carry_window)
+
+        self._index_y: GraphIndex | None = None
+        self._index_x = _LRU(max_cached_indexes)
+        self._merged = _LRU(max_cached_indexes)
+        self._sharded = _LRU(max_cached_indexes)
+        self.build_counts: dict[str, int] = {
+            "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0}
+        self.build_seconds = 0.0
+        self.serve_stats: dict[str, int] = {
+            "joins": 0, "batches": 0, "queries": 0, "pairs": 0}
+
+        # streaming state (global query ids, carried work-sharing cache)
+        self._stream_n = 0
+        self._stream_cache: dict[int, np.ndarray] = {}
+        self._stream_entry_n = 0         # cached ids, not cached queries
+        self._carry_vecs: np.ndarray | None = None
+        self._carry_qids = np.empty(0, np.int64)
+
+    # -- index lifecycle ----------------------------------------------------
+
+    @property
+    def n_index_builds(self) -> int:
+        return sum(self.build_counts.values())
+
+    def index_y(self) -> GraphIndex:
+        """The data-side index G_Y (built once, reused forever)."""
+        if self._index_y is None:
+            from repro.core import graph
+            t0 = time.perf_counter()
+            self._index_y = graph.build_index(self.Y, **self.build_kw)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["index_y"] += 1
+        return self._index_y
+
+    def index_x(self, X) -> GraphIndex:
+        """Query-side index G_X (MST ordering for the HWS/SWS methods)."""
+        fp = _fingerprint(X)
+        hit = self._index_x.touch(fp)
+        if hit is None:
+            from repro.core import graph
+            t0 = time.perf_counter()
+            hit = graph.build_index(jnp.asarray(X), **self.build_kw)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["index_x"] += 1
+            self._index_x.put(fp, hit)
+        return hit
+
+    def merged_index(self, X) -> GraphIndex:
+        """Merged index G_{X∪Y} (greedy phase offloaded, paper §4.4)."""
+        fp = _fingerprint(X)
+        hit = self._merged.touch(fp)
+        if hit is None:
+            from repro.core import graph
+            t0 = time.perf_counter()
+            hit = graph.build_merged_index(self.Y, jnp.asarray(X),
+                                           **self.build_kw)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["merged"] += 1
+            self._merged.put(fp, hit)
+        return hit
+
+    def sharded_index(self, X):
+        """Per-shard merged indexes G_{X∪Y_s} (core/distributed.py)."""
+        from repro.core import distributed
+        fp = _fingerprint(X)
+        hit = self._sharded.touch(fp)
+        if hit is None:
+            t0 = time.perf_counter()
+            hit = distributed.build_sharded_merged_index(
+                self.Y, np.asarray(X), self.n_shards, **self.build_kw)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["sharded"] += 1
+            self._sharded.put(fp, hit)
+        return hit
+
+    def adopt(self, *, index_y: GraphIndex | None = None, X=None,
+              index_x: GraphIndex | None = None,
+              index_merged: GraphIndex | None = None) -> None:
+        """Install prebuilt artifacts (no build counted) — the compat path
+        for callers that constructed indexes themselves."""
+        if index_y is not None:
+            self._index_y = index_y
+        if index_x is not None:
+            if X is None:
+                raise ValueError("adopting index_x requires X")
+            self._index_x.put(_fingerprint(X), index_x)
+        if index_merged is not None:
+            if X is None:
+                raise ValueError("adopting index_merged requires X")
+            self._merged.put(_fingerprint(X), index_merged)
+
+    # -- configuration ------------------------------------------------------
+
+    def _resolve(self, cfg: JoinConfig | None, method: str | None,
+                 theta: float | None) -> JoinConfig:
+        cfg = cfg or self.default
+        rep: dict[str, Any] = {}
+        if method is not None:
+            rep["method"] = method
+        if theta is not None:
+            rep["theta"] = float(theta)
+        return dataclasses.replace(cfg, **rep) if rep else cfg
+
+    def _mesh_axes(self):
+        if self._mesh is None:
+            devs = jax.devices()
+            if len(devs) < self.n_shards:
+                raise ValueError(
+                    f"n_shards={self.n_shards} but only {len(devs)} "
+                    f"device(s) visible")
+            self._mesh = jax.make_mesh((self.n_shards,), ("data",))
+            self._shard_axes = ("data",)
+        return self._mesh, self._shard_axes
+
+    # -- one-shot joins -----------------------------------------------------
+
+    def join(self, X, cfg: JoinConfig | None = None, *,
+             method: str | None = None, theta: float | None = None,
+             index_y: GraphIndex | None = None,
+             index_x: GraphIndex | None = None,
+             index_merged: GraphIndex | None = None) -> JoinResult:
+        """Join X against the engine's Y. Cached indexes are reused;
+        whatever the method needs and is missing is built (and counted)."""
+        from repro.core.join import exact_join_pairs
+
+        cfg = self._resolve(cfg, method, theta)
+        X = jnp.asarray(X)
+        stats = JoinStats()
+        if index_y is not None or index_x is not None \
+                or index_merged is not None:
+            self.adopt(index_y=index_y, X=X if (index_x is not None or
+                                                index_merged is not None)
+                       else None,
+                       index_x=index_x, index_merged=index_merged)
+
+        if cfg.method == "nlj":
+            t0 = time.perf_counter()
+            pairs = exact_join_pairs(X, self.Y, cfg.theta,
+                                     impl=cfg.traversal.dist_impl)
+            stats.other_seconds = time.perf_counter() - t0
+            stats.n_dist = int(X.shape[0]) * int(self.Y.shape[0])
+            return self._done(JoinResult(pairs=pairs, stats=stats), X)
+
+        if self.n_shards > 1:
+            return self._done(self._join_sharded(X, cfg, stats), X)
+
+        all_pairs: list[np.ndarray] = []
+        t0 = time.perf_counter()
+        if cfg.method in _MI_METHODS:
+            merged = self.merged_index(X)
+            stats.other_seconds += time.perf_counter() - t0
+            W.run_mi_join(X, merged, cfg, stats, all_pairs)
+        else:
+            iy = self.index_y()
+            ix = (self.index_x(X)
+                  if cfg.method in ("es_hws", "es_sws") else None)
+            stats.other_seconds += time.perf_counter() - t0
+            W.run_search_join(X, iy, ix, cfg, stats, all_pairs)
+
+        pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
+                 else np.empty((0, 2), np.int64))
+        return self._done(JoinResult(pairs=pairs, stats=stats), X)
+
+    def sweep(self, X, thetas, cfg: JoinConfig | None = None, *,
+              method: str | None = None) -> list[JoinResult]:
+        """Threshold sweep: one index build amortized over all thetas."""
+        return [self.join(X, cfg, method=method, theta=float(t))
+                for t in thetas]
+
+    def _join_sharded(self, X: Array, cfg: JoinConfig,
+                      stats: JoinStats) -> JoinResult:
+        """shard_map MI join: Y partitioned over devices, waves replicated,
+        per-shard pair pools merged on the host."""
+        from repro.core import distributed
+        if cfg.method not in _MI_METHODS:
+            raise NotImplementedError(
+                f"sharded execution supports {_MI_METHODS}, not "
+                f"{cfg.method!r} (work-sharing caches are per-device)")
+        mesh, axes = self._mesh_axes()
+        smi = self.sharded_index(X)
+        # adapt ⇒ hybrid BBFS for every query: a sound superset of the
+        # per-query adaptive split (per-shard OOD prediction would need
+        # per-shard side tables; the hybrid path subsumes the BFS one).
+        hybrid = cfg.method == "es_mi_adapt"
+        t0 = time.perf_counter()
+        pairs, dstats = distributed.distributed_mi_join(
+            X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
+            wave_size=cfg.wave_size, hybrid=hybrid)
+        stats.expand_seconds += time.perf_counter() - t0
+        stats.n_dist += int(dstats["n_dist"])
+        stats.n_overflow += int(dstats["n_overflow"])
+        # drop padded sentinel rows (Y padded up to shard_size * n_shards)
+        pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
+        return JoinResult(pairs=pairs, stats=stats)
+
+    # -- streaming ----------------------------------------------------------
+
+    @property
+    def n_submitted(self) -> int:
+        return self._stream_n
+
+    def reset_stream(self) -> None:
+        self._stream_n = 0
+        self._stream_cache.clear()
+        self._stream_entry_n = 0
+        self._carry_vecs = None
+        self._carry_qids = np.empty(0, np.int64)
+
+    def submit(self, X_batch, cfg: JoinConfig | None = None, *,
+               method: str | None = None,
+               theta: float | None = None) -> JoinResult:
+        """Join one streaming batch; result pairs carry *global* query ids
+        (``engine.n_submitted`` at call time + local position).
+
+        Batches are padded into waves. For ``es_sws``/``es_hws`` the
+        work-sharing cache persists across calls: each query seeds from
+        the cache entry of the nearest previously-completed query instead
+        of s_Y, so later batches keep getting cheaper (the streaming form
+        of the paper's MST parent order).
+        """
+        from repro.core.join import exact_join_pairs
+
+        if self.n_shards > 1:
+            raise NotImplementedError(
+                "streaming submit() runs single-device; use join() for "
+                "sharded execution (or n_shards=1 for a streaming engine)")
+        cfg = self._resolve(cfg, method, theta)
+        X_batch = jnp.asarray(X_batch)
+        nb = int(X_batch.shape[0])
+        offset = self._stream_n
+        stats = JoinStats()
+
+        if cfg.method == "nlj":
+            t0 = time.perf_counter()
+            pairs = exact_join_pairs(X_batch, self.Y, cfg.theta,
+                                     impl=cfg.traversal.dist_impl)
+            pairs = pairs.copy()
+            pairs[:, 0] += offset
+            stats.other_seconds = time.perf_counter() - t0
+            stats.n_dist = nb * int(self.Y.shape[0])
+            result = JoinResult(pairs=pairs, stats=stats)
+        elif cfg.method in _MI_METHODS:
+            # the merged index must contain the batch's query nodes, so MI
+            # streaming pays one (cached, fingerprint-keyed) build per
+            # distinct batch — greedy work offloaded to construction.
+            all_pairs: list[np.ndarray] = []
+            merged = self.merged_index(X_batch)
+            W.run_mi_join(X_batch, merged, cfg, stats, all_pairs,
+                          qid_offset=offset)
+            pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
+                     else np.empty((0, 2), np.int64))
+            result = JoinResult(pairs=pairs, stats=stats)
+        else:
+            result = self._submit_search(X_batch, cfg, stats, offset)
+
+        self._stream_n = offset + nb
+        self.serve_stats["batches"] += 1
+        self.serve_stats["queries"] += nb
+        self.serve_stats["pairs"] += len(result.pairs)
+        return result
+
+    def _submit_search(self, X_batch: Array, cfg: JoinConfig,
+                       stats: JoinStats, offset: int) -> JoinResult:
+        iy = self.index_y()
+        sy = int(iy.start)
+        S = cfg.traversal.seeds_max
+        nb = int(X_batch.shape[0])
+        X_np = np.asarray(X_batch, np.float32)
+        caching = cfg.method in _CACHING_METHODS
+        all_pairs: list[np.ndarray] = []
+
+        for c0 in range(0, nb, cfg.wave_size):
+            local = np.arange(c0, min(c0 + cfg.wave_size, nb))
+            qids_l, lane_valid = W.pad_wave(local, cfg.wave_size)
+            qids_g = qids_l + offset
+            xw = X_batch[jnp.asarray(qids_l)]
+
+            t0 = time.perf_counter()
+            parent = self._assign_parents(X_np[qids_l], qids_g, lane_valid,
+                                          caching)
+            seeds, seeds_valid = W.seeds_from_cache(
+                qids_g, lane_valid, parent, self._stream_cache, sy,
+                cfg.wave_size, S)
+            stats.other_seconds += time.perf_counter() - t0
+
+            out = W.run_search_wave(iy, xw, qids_g, lane_valid, cfg, stats,
+                                    seeds=seeds, seeds_valid=seeds_valid)
+            all_pairs.append(out.pairs)
+
+            if caching:
+                t0 = time.perf_counter()
+                self._stream_entry_n = W.update_sws_cache(
+                    self._stream_cache, out, qids_g, cfg, stats,
+                    self._stream_entry_n)
+                self._remember(X_np[qids_l[lane_valid]],
+                               qids_g[lane_valid])
+                stats.other_seconds += time.perf_counter() - t0
+
+        pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
+                 else np.empty((0, 2), np.int64))
+        return JoinResult(pairs=pairs, stats=stats)
+
+    def _assign_parents(self, xw: np.ndarray, qids_g: np.ndarray,
+                        lane_valid: np.ndarray,
+                        caching: bool) -> dict[int, int]:
+        """Streaming parent = nearest completed query in the carry window."""
+        if not caching or self._carry_vecs is None \
+                or not len(self._carry_qids):
+            return {}
+        C = self._carry_vecs
+        d2 = (np.sum(xw * xw, axis=1, keepdims=True)
+              + np.sum(C * C, axis=1)[None, :] - 2.0 * xw @ C.T)
+        nearest = self._carry_qids[np.argmin(d2, axis=1)]
+        return {int(q): int(p)
+                for q, p, v in zip(qids_g, nearest, lane_valid) if v}
+
+    def _remember(self, vecs: np.ndarray, qids: np.ndarray) -> None:
+        if self._carry_vecs is None:
+            self._carry_vecs = vecs.copy()
+            self._carry_qids = qids.astype(np.int64).copy()
+        else:
+            self._carry_vecs = np.concatenate([self._carry_vecs, vecs])
+            self._carry_qids = np.concatenate(
+                [self._carry_qids, qids.astype(np.int64)])
+        if len(self._carry_qids) > self.carry_window:
+            keep = len(self._carry_qids) - self.carry_window
+            evicted = self._carry_qids[:keep]
+            for q in evicted:
+                gone = self._stream_cache.pop(int(q), None)
+                if gone is not None:
+                    self._stream_entry_n -= len(gone)
+            self._carry_vecs = self._carry_vecs[keep:]
+            self._carry_qids = self._carry_qids[keep:]
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _done(self, result: JoinResult, X) -> JoinResult:
+        self.serve_stats["joins"] += 1
+        self.serve_stats["queries"] += int(X.shape[0])
+        self.serve_stats["pairs"] += len(result.pairs)
+        return result

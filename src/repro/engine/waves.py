@@ -1,0 +1,309 @@
+"""Wave runners — the online traversal phase of every join method.
+
+Queries are processed in *waves* (DESIGN §2.4): MST wavefronts for the
+work-sharing methods (parents always complete before children), arbitrary
+chunks otherwise. Lanes beyond a short final wave are padded with invalid
+seeds and masked throughout.
+
+This module is the shared substrate of both entry points:
+
+  * ``run_search_join`` / ``run_mi_join`` — one-shot full-batch joins
+    (what ``vector_join`` and ``JoinEngine.join`` execute);
+  * ``run_search_wave`` — a single padded wave with caller-supplied seeds,
+    used by ``JoinEngine.submit`` to stream query batches while carrying
+    the soft-work-sharing cache forward between batches.
+
+All functions mutate the ``JoinStats`` they are handed and append
+``(query_id, data_id)`` int64 pair blocks to ``all_pairs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ordering, traversal
+from repro.core.ood import predict_ood
+from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
+                              TraversalConfig)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# padding / assembly helpers
+# ---------------------------------------------------------------------------
+
+def pad_wave(ids: np.ndarray, wave_size: int) -> tuple[np.ndarray, np.ndarray]:
+    n = ids.shape[0]
+    if n == wave_size:
+        return ids, np.ones(n, bool)
+    pad = np.zeros(wave_size - n, ids.dtype)
+    return np.concatenate([ids, pad]), np.concatenate(
+        [np.ones(n, bool), np.zeros(wave_size - n, bool)])
+
+
+def collect_pairs(qids: np.ndarray, lane_valid: np.ndarray,
+                  pool_idx: np.ndarray, n_pool: np.ndarray) -> np.ndarray:
+    C = pool_idx.shape[1]
+    n_pool = np.where(lane_valid, n_pool, 0)
+    mask = np.arange(C)[None, :] < n_pool[:, None]
+    lanes, slots = np.nonzero(mask)
+    return np.stack([qids[lanes], pool_idx[lanes, slots]], axis=1).astype(
+        np.int64)
+
+
+# ---------------------------------------------------------------------------
+# MI seed probing (greedy phase offloaded to the index — paper §4.4)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("traverse_nondata", "dist_impl"))
+def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
+              traverse_nondata: bool, dist_impl: str | None):
+    """Probe each query's own neighborhood row in the merged index."""
+    B = x.shape[0]
+    W = traversal.bitmap_words(merged.n_nodes)
+    visited = jnp.zeros((B, W), jnp.uint32)
+    # mark the query's own node visited so traversal never loops back
+    lane = jnp.arange(B, dtype=jnp.int32)
+    visited = visited.at[lane, (qids >> 5)].add(
+        jnp.uint32(1) << (qids & 31).astype(jnp.uint32))
+    rows = merged.nbrs[qids]                                 # (B, R)
+    valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
+    dist, valid, visited, n_new = traversal._probe(
+        merged.vecs, x, rows, valid, visited,
+        n_data=merged.n_data, traverse_nondata=traverse_nondata,
+        dist_impl=dist_impl)
+    best = jnp.min(dist, axis=1)
+    besti = jnp.take_along_axis(
+        jnp.where(valid, rows, NO_NODE),
+        jnp.argmin(dist, axis=1)[:, None], axis=1)[:, 0]
+    return rows, dist, valid, visited, n_new, best, besti
+
+
+# ---------------------------------------------------------------------------
+# search-path waves (index / es / es_hws / es_sws)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WaveOutput:
+    """Everything a caller needs to both assemble pairs and feed the
+    work-sharing cache after one wave."""
+    pairs: np.ndarray          # (P, 2) int64, already offset to global qids
+    pool_idx: np.ndarray       # (B, C) int32
+    pool_dist: np.ndarray      # (B, C) f32
+    n_pool: np.ndarray         # (B,)  int32
+    best_idx: np.ndarray       # (B,)  int32 — closest data node per lane
+    lane_valid: np.ndarray     # (B,)  bool
+
+
+def effective_tcfg(cfg: JoinConfig) -> TraversalConfig:
+    """The INDEX baseline is ES with early stopping disabled."""
+    tcfg = cfg.traversal
+    if cfg.method == "index" and tcfg.patience >= 0:
+        tcfg = dataclasses.replace(tcfg, patience=-1)
+    return tcfg
+
+
+def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
+                    lane_valid: np.ndarray, cfg: JoinConfig,
+                    stats: JoinStats, *, seeds: np.ndarray,
+                    seeds_valid: np.ndarray) -> WaveOutput:
+    """One padded wave of greedy search + range expansion (Alg. 1 online).
+
+    ``seeds``/``seeds_valid`` are (B, S) arrays the caller filled from
+    whatever work-sharing cache applies (parent caches for the MST order,
+    the streaming carry cache for ``JoinEngine.submit``).
+    """
+    tcfg = effective_tcfg(cfg)
+    seeds_j = jnp.asarray(seeds)
+    sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
+
+    t0 = time.perf_counter()
+    g = traversal.greedy_search(
+        index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
+        n_data=index_y.n_data, traverse_nondata=True)
+    jax.block_until_ready(g.beam_dist)
+    stats.greedy_seconds += time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    init_valid = (g.beam_idx != NO_NODE) & jnp.isfinite(g.beam_dist)
+    r = traversal.range_expand(
+        index_y, xw, cfg.theta, cfg=tcfg, n_data=index_y.n_data,
+        hybrid=False, traverse_nondata=True,
+        init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
+        visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
+        n_dist=g.n_dist)
+    jax.block_until_ready(r.pool_idx)
+    stats.expand_seconds += time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    pool_idx = np.asarray(r.pool_idx)
+    pool_dist = np.asarray(r.pool_dist)
+    n_pool = np.asarray(r.n_pool)
+    lv = np.asarray(lane_valid)
+    pairs = collect_pairs(qids, lv, pool_idx, n_pool)
+    stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
+    stats.n_iters += int(g.n_iters) + int(r.n_iters)
+    stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
+    stats.other_seconds += time.perf_counter() - t0
+    return WaveOutput(pairs=pairs, pool_idx=pool_idx, pool_dist=pool_dist,
+                      n_pool=n_pool, best_idx=np.asarray(r.best_idx),
+                      lane_valid=lv)
+
+
+def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
+                     qids: np.ndarray, cfg: JoinConfig,
+                     stats: JoinStats, cache_n: int) -> int:
+    """SelectDataToCache (Alg. 3) — HWS caches the whole in-range pool,
+    SWS the single closest node. Returns the updated entry count."""
+    if cfg.method == "es_hws":
+        for i, q in enumerate(qids):
+            if not out.lane_valid[i]:
+                continue
+            k = out.n_pool[i]
+            o = np.argsort(out.pool_dist[i, :k])
+            cache[int(q)] = out.pool_idx[i, :k][o]
+            cache_n += int(k)
+    elif cfg.method == "es_sws":
+        for i, q in enumerate(qids):
+            if not out.lane_valid[i]:
+                continue
+            b = int(out.best_idx[i])
+            cache[int(q)] = (np.asarray([b], np.int32) if b != NO_NODE
+                             else np.empty(0, np.int32))
+            cache_n += 1
+    stats.peak_cache_entries = max(stats.peak_cache_entries, cache_n)
+    return cache_n
+
+
+def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
+                     parent: np.ndarray | dict[int, int],
+                     cache: dict[int, np.ndarray], sy: int,
+                     wave_size: int, seeds_max: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Seed lanes from parent caches (Alg. 1 lines 5–9); s_Y fallback."""
+    seeds = np.full((wave_size, seeds_max), sy, np.int32)
+    seeds_valid = np.zeros((wave_size, seeds_max), bool)
+    seeds_valid[:, 0] = True
+    get = (parent.get if isinstance(parent, dict)
+           else lambda q: int(parent[q]))
+    for i, q in enumerate(qids):
+        p = get(int(q)) if lane_valid[i] else -1
+        p = -1 if p is None else int(p)
+        c = cache.get(p)
+        if p >= 0 and c is not None and c.size > 0:
+            k = min(seeds_max, c.size)
+            seeds[i, :k] = c[:k]
+            seeds_valid[i, :k] = True
+    return seeds, seeds_valid
+
+
+def run_search_join(X: Array, index_y: GraphIndex,
+                    index_x: GraphIndex | None, cfg: JoinConfig,
+                    stats: JoinStats, all_pairs: list[np.ndarray]) -> None:
+    """Full-batch index / es / es_hws / es_sws join (greedy + BFS)."""
+    nq = X.shape[0]
+    needs_mst = cfg.method in ("es_hws", "es_sws")
+    sy = int(index_y.start)
+
+    t0 = time.perf_counter()
+    if needs_mst:
+        parent = ordering.mst_order(index_x, index_y.vecs[sy])
+        waves = ordering.wavefronts(parent, cfg.wave_size)
+    else:
+        parent = np.full(nq, -1, np.int64)
+        order = np.arange(nq)
+        waves = [order[i:i + cfg.wave_size]
+                 for i in range(0, nq, cfg.wave_size)]
+    stats.other_seconds += time.perf_counter() - t0
+
+    S = cfg.traversal.seeds_max
+    cache: dict[int, np.ndarray] = {}
+    cache_n = 0
+
+    for wave in waves:
+        qids, lane_valid = pad_wave(wave, cfg.wave_size)
+        xw = X[jnp.asarray(qids)]
+        t0 = time.perf_counter()
+        seeds, seeds_valid = seeds_from_cache(
+            qids, lane_valid, parent, cache, sy, cfg.wave_size, S)
+        stats.other_seconds += time.perf_counter() - t0
+        out = run_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
+                              seeds=seeds, seeds_valid=seeds_valid)
+        all_pairs.append(out.pairs)
+        t0 = time.perf_counter()
+        cache_n = update_sws_cache(cache, out, qids, cfg, stats, cache_n)
+        stats.other_seconds += time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# merged-index waves (es_mi / es_mi_adapt)
+# ---------------------------------------------------------------------------
+
+def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
+                stats: JoinStats, all_pairs: list[np.ndarray], *,
+                qid_offset: int = 0) -> None:
+    """es_mi / es_mi_adapt join (greedy offloaded; BFS or adaptive BBFS).
+
+    ``qid_offset`` shifts the emitted query ids — used by the streaming
+    engine, where a batch of local queries carries global ids.
+    """
+    nq = X.shape[0]
+    tcfg = cfg.traversal
+    n_data = merged.n_data
+
+    # adaptive split: predict OOD once, vectorized (paper §4.5)
+    t0 = time.perf_counter()
+    if cfg.method == "es_mi_adapt":
+        flags = []
+        for q0 in range(0, nq, 4096):
+            q1 = min(q0 + 4096, nq)
+            qid = n_data + jnp.arange(q0, q1, dtype=jnp.int32)
+            flags.append(np.asarray(predict_ood(
+                merged, X[q0:q1], qid, factor=cfg.ood_factor)))
+        ood = np.concatenate(flags)
+        stats.n_ood = int(ood.sum())
+    else:
+        ood = np.zeros(nq, bool)
+    groups = [(np.flatnonzero(~ood), False), (np.flatnonzero(ood), True)]
+    stats.other_seconds += time.perf_counter() - t0
+
+    for ids_all, hybrid in groups:
+        for c0 in range(0, ids_all.size, cfg.wave_size):
+            wave = ids_all[c0:c0 + cfg.wave_size]
+            qids, lane_valid = pad_wave(wave, cfg.wave_size)
+            xw = X[jnp.asarray(qids)]
+            node_ids = jnp.asarray(qids, jnp.int32) + n_data
+            lv_j = jnp.asarray(lane_valid)
+
+            t0 = time.perf_counter()
+            rows, dist, valid, visited, n_new, best, besti = _mi_probe(
+                merged, xw, node_ids, lv_j,
+                traverse_nondata=hybrid, dist_impl=tcfg.dist_impl)
+            jax.block_until_ready(dist)
+            stats.greedy_seconds += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            r = traversal.range_expand(
+                merged, xw, cfg.theta, cfg=tcfg, n_data=n_data,
+                hybrid=hybrid, traverse_nondata=hybrid,
+                init_idx=rows, init_dist=dist, init_valid=valid,
+                visited=visited, best_dist=best, best_idx=besti,
+                n_dist=n_new)
+            jax.block_until_ready(r.pool_idx)
+            stats.expand_seconds += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            lv = np.asarray(lane_valid)
+            all_pairs.append(collect_pairs(
+                qids + qid_offset, lv, np.asarray(r.pool_idx),
+                np.asarray(r.n_pool)))
+            stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
+            stats.n_iters += int(r.n_iters)
+            stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
+            stats.other_seconds += time.perf_counter() - t0

@@ -1,8 +1,11 @@
 """Vector-join launcher — the paper's operator as a first-class command.
 
 Runs any §5.1.2 method on a synthetic Table-1-regime dataset (or .npy
-inputs), reporting latency / recall / distance computations — and, with
-``--distributed``, the shard_map MI join over a local device mesh.
+inputs) through a persistent ``JoinEngine``, reporting latency / recall /
+distance computations. ``--shards N`` shards the data side over N local
+devices; ``--stream B`` feeds queries as streaming batches of B through
+``engine.submit`` (carrying the work-sharing cache between batches);
+``--sweep`` reruns every Table-2 threshold against the same cached index.
 
   PYTHONPATH=src python -m repro.launch.join --method es_mi_adapt \\
       --regime ood --n-data 20000 --n-query 500 --theta-q 2
@@ -10,13 +13,13 @@ inputs), reporting latency / recall / distance computations — and, with
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.configs.vectorjoin import preset
-from repro.core import (build_index, build_merged_index, exact_join_pairs,
-                        recall, vector_join)
+from repro.configs.vectorjoin import make_engine, preset
+from repro.core import exact_join_pairs
 from repro.core.types import METHODS
 from repro.data.vectors import make_dataset, thresholds
 
@@ -34,40 +37,62 @@ def main(argv=None) -> int:
                     help="1-based index into the 7 Table-2-style thresholds")
     ap.add_argument("--wave", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine-spec", default="default",
+                    help="EngineSpec preset (default|ci|serving)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the data side over N local devices (MI "
+                         "methods); 0 = one shard per device")
+    ap.add_argument("--stream", type=int, default=0, metavar="B",
+                    help="submit queries as streaming batches of B")
+    ap.add_argument("--sweep", action="store_true",
+                    help="rerun all 7 thresholds on the cached index")
     ap.add_argument("--distributed", action="store_true",
-                    help="shard_map MI join over the local device mesh")
+                    help="alias for --shards 0 (all local devices)")
     ap.add_argument("--no-truth", action="store_true",
                     help="skip the exact NLJ ground truth (big inputs)")
     args = ap.parse_args(argv)
 
     ds = make_dataset(args.regime, n_data=args.n_data, n_query=args.n_query,
                       dim=args.dim, seed=args.seed)
-    theta = args.theta or float(thresholds(ds, 7)[args.theta_q - 1])
-    print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
-          f"dim={args.dim} θ={theta:.4f} method={args.method}")
+    grid = [float(t) for t in thresholds(ds, 7)]
+    theta = args.theta or grid[args.theta_q - 1]
+    cfg = preset(args.method, theta=theta)
+    cfg = dataclasses.replace(cfg, wave_size=args.wave)
 
-    if args.distributed:
-        import jax
-        from repro.core.distributed import (build_sharded_merged_index,
-                                            distributed_mi_join)
-        from repro.core.types import TraversalConfig
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-        smi = build_sharded_merged_index(ds.Y, ds.X, mesh.size)
-        t0 = time.perf_counter()
-        pairs, stats = distributed_mi_join(
-            ds.X, smi, mesh, ("data",), theta=theta,
-            cfg=TraversalConfig(), wave_size=args.wave)
+    n_shards = 0 if args.distributed else args.shards
+    eng = make_engine(ds.Y, args.engine_spec, default=cfg,
+                      n_shards=n_shards)
+    if args.stream and eng.n_shards > 1:
+        ap.error("--stream runs single-device; drop --shards/--distributed")
+    print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
+          f"dim={args.dim} θ={theta:.4f} method={args.method} "
+          f"shards={eng.n_shards}")
+
+    t0 = time.perf_counter()
+    if args.stream:
+        parts = [eng.submit(ds.X[b0:b0 + args.stream], cfg)
+                 for b0 in range(0, args.n_query, args.stream)]
+        pairs = np.concatenate([r.pairs for r in parts], axis=0)
+        n_dist = sum(r.stats.n_dist for r in parts)
         dt = time.perf_counter() - t0
-        print(f"[join] distributed over {mesh.size} shard(s): "
-              f"{len(pairs)} pairs in {dt:.2f}s, n_dist={stats['n_dist']}")
+        print(f"[join] {len(parts)} streamed batches: {len(pairs)} pairs "
+              f"in {dt:.2f}s (n_dist={n_dist})")
     else:
-        cfg = preset(args.method, theta=theta)
-        t0 = time.perf_counter()
-        res = vector_join(ds.X, ds.Y, cfg)
+        res = eng.join(ds.X, cfg)
         dt = time.perf_counter() - t0
         print(f"[join] {len(res.pairs)} pairs in {dt:.2f}s "
-              f"(n_dist={res.stats.n_dist}, ood={res.stats.n_ood})")
+              f"(n_dist={res.stats.n_dist}, ood={res.stats.n_ood}, "
+              f"builds={eng.n_index_builds})")
         pairs = res.pairs
+
+    if args.sweep:
+        for i, th in enumerate(grid):
+            t0 = time.perf_counter()
+            r = eng.join(ds.X, cfg, theta=th)
+            print(f"[sweep] θ{i + 1}={th:.4f}: {len(r.pairs)} pairs in "
+                  f"{time.perf_counter() - t0:.2f}s "
+                  f"(builds={eng.n_index_builds})")
+
     if not args.no_truth:
         truth = exact_join_pairs(ds.X, ds.Y, theta)
         got = set(map(tuple, pairs.tolist()))

@@ -53,6 +53,8 @@ def _fit(spec: tuple, shape: tuple[int, ...],
     """Drop any axis assignment whose size does not divide the dim."""
     fixed = []
     for dim, axes in zip(shape, spec):
+        if isinstance(axes, tuple) and len(axes) == 1:
+            axes = axes[0]   # canonical singleton form on every jax version
         fixed.append(axes if dim % _axes_size(mesh_shape, axes) == 0
                      else None)
     return P(*fixed)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 Array = jax.Array
 PyTree = Any
 
@@ -61,7 +63,7 @@ def ef_quantized_psum(flat_grad: Array, err: Array, axes) -> tuple[Array,
     n = flat_grad.shape[0]
     dp = 1
     for a in (axes if isinstance(axes, tuple) else (axes,)):
-        dp *= jax.lax.axis_size(a)
+        dp *= compat.axis_size(a)
     target = flat_grad / dp + err
     q, scale = _quantize(target)
     sent = _dequantize(q, scale, n)
@@ -81,7 +83,7 @@ def make_compressed_allreduce(mesh: Mesh, axes, n: int):
     """jit'd (flat_grad, err) -> (reduced, new_err) over ``axes``."""
     spec = P()  # grads replicated within reduction group entry-wise
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         functools.partial(ef_quantized_psum, axes=axes),
         mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
         check_vma=False)

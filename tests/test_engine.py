@@ -1,0 +1,156 @@
+"""JoinEngine serving-layer behaviour: index reuse across thresholds and
+method switches, streaming submit with a carried work-sharing cache, and
+sharded execution matching single-device results."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import JoinConfig, TraversalConfig, exact_join_pairs, recall
+from repro.core.join import vector_join
+from repro.data.vectors import thresholds
+from repro.engine import JoinEngine
+
+TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                     hybrid_beam=64, seeds_max=8, max_iters=2048)
+BK = dict(k=24, degree=12)
+
+
+@pytest.fixture(scope="module")
+def engine(ds_manifold):
+    return JoinEngine(ds_manifold.Y, build_kw=BK)
+
+
+def _cfg(method, theta, wave=64):
+    return JoinConfig(method=method, theta=theta, traversal=TC,
+                      wave_size=wave)
+
+
+def test_index_reused_across_thresholds(ds_manifold, engine):
+    """Two thresholds, one build per artifact kind — and the pair sets are
+    identical to fresh per-call builds (the vector_join compat path)."""
+    ths = [float(t) for t in thresholds(ds_manifold, 3)[:2]]
+    for method, kinds in [("es_sws", ("index_y", "index_x")),
+                          ("es_mi", ("merged",))]:
+        before = dict(engine.build_counts)
+        results = engine.sweep(ds_manifold.X, ths, _cfg(method, 1.0))
+        for kind in kinds:
+            assert engine.build_counts[kind] - before[kind] <= 1, (
+                method, kind, engine.build_counts)
+        for theta, res in zip(ths, results):
+            fresh = vector_join(ds_manifold.X, ds_manifold.Y,
+                                _cfg(method, theta), build_kw=BK)
+            assert res.pair_set() == fresh.pair_set(), (method, theta)
+    # a full second sweep over both methods must not build anything new
+    snapshot = dict(engine.build_counts)
+    engine.sweep(ds_manifold.X, ths, _cfg("es_sws", 1.0))
+    engine.sweep(ds_manifold.X, ths, _cfg("es_mi", 1.0))
+    assert engine.build_counts == snapshot
+
+
+def test_method_switch_shares_artifacts(ds_manifold, engine):
+    """es / es_hws / es_sws all reuse one G_Y; es_mi_adapt reuses es_mi's
+    merged index."""
+    th = float(thresholds(ds_manifold, 3)[1])
+    for m in ("es", "es_hws", "es_sws", "es_mi", "es_mi_adapt"):
+        engine.join(ds_manifold.X, _cfg(m, th))
+    assert engine.build_counts["index_y"] <= 1
+    assert engine.build_counts["merged"] <= 1
+
+
+def test_streaming_matches_batch_soundness(ds_manifold, engine):
+    """submit() in batches: global query ids, sound pairs, recall close to
+    the one-shot join, and the carried SWS cache is actually populated."""
+    th = float(thresholds(ds_manifold, 3)[1])
+    cfg = _cfg("es_sws", th, wave=32)
+    truth = exact_join_pairs(ds_manifold.X, ds_manifold.Y, th)
+    tset = set(map(tuple, truth.tolist()))
+
+    engine.reset_stream()
+    got = set()
+    for b0 in range(0, ds_manifold.X.shape[0], 48):
+        r = engine.submit(ds_manifold.X[b0:b0 + 48], cfg)
+        got |= r.pair_set()
+    assert engine.n_submitted == ds_manifold.X.shape[0]
+    assert len(engine._stream_cache) > 0          # cache carried forward
+    # soundness: no fabricated pairs
+    assert not (got - tset)
+    # streaming recall within a few points of the one-shot MST-ordered run
+    rec = len(got & tset) / max(len(tset), 1)
+    assert rec >= 0.85, rec
+
+
+def test_streaming_mixed_methods_and_offsets(ds_manifold, engine):
+    """Query ids keep advancing across batches and methods."""
+    th = float(thresholds(ds_manifold, 3)[1])
+    engine.reset_stream()
+    r1 = engine.submit(ds_manifold.X[:16], _cfg("es", th, wave=16))
+    r2 = engine.submit(ds_manifold.X[16:32], _cfg("nlj", th, wave=16))
+    if len(r1.pairs):
+        assert r1.pairs[:, 0].max() < 16
+    if len(r2.pairs):
+        assert r2.pairs[:, 0].min() >= 16
+        assert r2.pairs[:, 0].max() < 32
+    # nlj batch is exact for its id range
+    sub = exact_join_pairs(ds_manifold.X[16:32], ds_manifold.Y, th)
+    want = {(q + 16, y) for q, y in map(tuple, sub.tolist())}
+    assert r2.pair_set() == want
+
+
+def test_adopted_indexes_count_no_builds(ds_manifold, index_y, index_x,
+                                         index_merged):
+    eng = JoinEngine(ds_manifold.Y, build_kw=BK)
+    th = float(thresholds(ds_manifold, 3)[1])
+    r = eng.join(ds_manifold.X, _cfg("es_sws", th), index_y=index_y,
+                 index_x=index_x, index_merged=index_merged)
+    assert len(r.pairs) > 0
+    assert eng.n_index_builds == 0
+
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    from repro.core import JoinConfig, TraversalConfig, exact_join_pairs
+    from repro.data.vectors import make_dataset, thresholds
+    from repro.engine import JoinEngine
+
+    ds = make_dataset("manifold", n_data=1500, n_query=64, dim=24, seed=13)
+    ths = [float(t) for t in thresholds(ds, 7)]
+    tc = TraversalConfig(beam_width=128, expand_per_iter=8, patience=50,
+                         pool_cap=1024, hybrid_beam=128, seeds_max=8,
+                         max_iters=2048)
+    bk = dict(k=32, degree=16)
+    e1 = JoinEngine(ds.Y, build_kw=bk)
+    e2 = JoinEngine(ds.Y, build_kw=bk, n_shards=2)
+    for ti in (0, 1):
+        cfg = JoinConfig(method="es_mi", theta=ths[ti], traversal=tc,
+                         wave_size=32)
+        s1 = e1.join(ds.X, cfg).pair_set()
+        s2 = e2.join(ds.X, cfg).pair_set()
+        truth = set(map(tuple,
+                        exact_join_pairs(ds.X, ds.Y, ths[ti]).tolist()))
+        assert len(truth) > 0
+        assert not (s2 - truth), "sharded join fabricated pairs"
+        assert s1 == s2, (ti, len(s1 ^ s2))
+    # the sharded index was built once and reused for both thresholds
+    assert e2.build_counts["sharded"] == 1, e2.build_counts
+    print("ENGINE_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_join_matches_single_device_2dev():
+    """2 CPU-simulated shards return the same pair set as single-device
+    execution, reusing one sharded index across two thresholds."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ENGINE_SHARDED_OK" in r.stdout

@@ -1,0 +1,91 @@
+"""Hypothesis property sweeps for the distance / top-k-merge kernels.
+
+Kept separate from tests/test_kernels.py and tests/test_new_kernels.py so
+the deterministic Pallas-vs-reference validation there still runs in
+environments without the ``dev`` extra; this module self-skips.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops, ref
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 24), st.integers(1, 40), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_topk_merge_property(L, K, B, seed):
+    """Merged beam == the L smallest of the union, ascending."""
+    rng = np.random.default_rng(seed)
+    bd = np.sort(rng.normal(size=(B, L)).astype(np.float32), axis=1)
+    bi = rng.integers(0, 1000, (B, L)).astype(np.int32)
+    cd = rng.normal(size=(B, K)).astype(np.float32)
+    ci = rng.integers(0, 1000, (B, K)).astype(np.int32)
+    md, mi = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
+                            jnp.asarray(cd), jnp.asarray(ci))
+    md = np.asarray(md)
+    allv = np.concatenate([bd, cd], axis=1)
+    want = np.sort(allv, axis=1)[:, :L]
+    assert_allclose(md, want, rtol=1e-6)
+    assert (np.diff(md, axis=1) >= 0).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 12), st.integers(1, 64), st.integers(2, 48),
+       st.integers(0, 2**31 - 1))
+def test_pairwise_ref_is_true_distance(B, N, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(B, d)).astype(np.float32)
+    y = rng.normal(size=(N, d)).astype(np.float32)
+    got = np.asarray(ref.pairwise_sq_dists(jnp.asarray(x), jnp.asarray(y)))
+    want = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 32), st.integers(2, 40), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_topk_merge_pallas_matches_oracle(L, K, B, seed):
+    """Pallas merge == oracle merge on arbitrary beams: distances equal;
+    index multisets equal wherever distances are unique."""
+    rng = np.random.default_rng(seed)
+    bd = np.sort(rng.normal(0, 1, (B, L)).astype(np.float32), axis=1)
+    n_inf = int(rng.integers(0, L))
+    if n_inf:
+        bd[:, L - n_inf:] = np.inf
+    bi = rng.integers(0, 10_000, (B, L)).astype(np.int32)
+    bi[~np.isfinite(bd)] = -1
+    cd = rng.normal(0, 1, (B, K)).astype(np.float32)
+    cd[rng.random((B, K)) < 0.2] = np.inf
+    ci = rng.integers(0, 10_000, (B, K)).astype(np.int32)
+    rd, ri = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
+                            jnp.asarray(cd), jnp.asarray(ci))
+    pd_, pi_ = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
+                              jnp.asarray(cd), jnp.asarray(ci),
+                              impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(rd), np.asarray(pd_), rtol=1e-6)
+    fin = np.isfinite(np.asarray(rd))
+    np.testing.assert_array_equal(
+        np.sort(np.where(fin, np.asarray(ri), -2), axis=1),
+        np.sort(np.where(fin, np.asarray(pi_), -2), axis=1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 64), st.integers(16, 96),
+       st.integers(0, 2**31 - 1))
+def test_gather_distance_property(B, K, d, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(K + 1, 300))
+    vecs = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (B, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, n, (B, K)).astype(np.int32))
+    a = np.asarray(ops.gather_sq_dists(vecs, x, idx, impl="ref"))
+    b = np.asarray(ops.gather_sq_dists(vecs, x, idx,
+                                       impl="pallas_interpret"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert (np.isinf(a) == (np.asarray(idx) < 0)).all()

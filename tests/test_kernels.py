@@ -1,12 +1,10 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
-swept over shapes and dtypes, plus hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
+swept over shapes and dtypes. Hypothesis property sweeps live in
+tests/test_kernel_properties.py (they self-skip without the dev extra)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from numpy.testing import assert_allclose
 
 from repro.kernels import ops, ref
@@ -60,34 +58,3 @@ def test_nlj_padding_never_matches():
     y = jnp.asarray(rng.normal(size=(130, 33)), jnp.float32)
     got = ops.nlj_count(x, y, theta=1e6, impl="pallas_interpret")
     np.testing.assert_array_equal(np.asarray(got), np.full(3, 130))
-
-
-@settings(deadline=None, max_examples=30)
-@given(st.integers(2, 24), st.integers(1, 40), st.integers(1, 6),
-       st.integers(0, 2**31 - 1))
-def test_topk_merge_property(L, K, B, seed):
-    """Merged beam == the L smallest of the union, ascending."""
-    rng = np.random.default_rng(seed)
-    bd = np.sort(rng.normal(size=(B, L)).astype(np.float32), axis=1)
-    bi = rng.integers(0, 1000, (B, L)).astype(np.int32)
-    cd = rng.normal(size=(B, K)).astype(np.float32)
-    ci = rng.integers(0, 1000, (B, K)).astype(np.int32)
-    md, mi = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
-                            jnp.asarray(cd), jnp.asarray(ci))
-    md = np.asarray(md)
-    allv = np.concatenate([bd, cd], axis=1)
-    want = np.sort(allv, axis=1)[:, :L]
-    assert_allclose(md, want, rtol=1e-6)
-    assert (np.diff(md, axis=1) >= 0).all()
-
-
-@settings(deadline=None, max_examples=20)
-@given(st.integers(1, 12), st.integers(1, 64), st.integers(2, 48),
-       st.integers(0, 2**31 - 1))
-def test_pairwise_ref_is_true_distance(B, N, d, seed):
-    rng = np.random.default_rng(seed)
-    x = rng.normal(size=(B, d)).astype(np.float32)
-    y = rng.normal(size=(N, d)).astype(np.float32)
-    got = np.asarray(ref.pairwise_sq_dists(jnp.asarray(x), jnp.asarray(y)))
-    want = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
-    assert_allclose(got, want, rtol=2e-4, atol=2e-4)

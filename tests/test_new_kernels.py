@@ -1,10 +1,10 @@
 """Interpret-mode validation of the gather-distance and topk-merge Pallas
-kernels against the pure-jnp oracles (+ hypothesis sweeps)."""
+kernels against the pure-jnp oracles. Hypothesis sweeps live in
+tests/test_kernel_properties.py (they self-skip without the dev extra)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -22,34 +22,6 @@ def test_gather_sq_dists_matches_ref(n, d, B, K):
                                atol=1e-5)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(2, 32), st.integers(2, 40), st.integers(1, 6),
-       st.integers(0, 2**31 - 1))
-def test_topk_merge_property(L, K, B, seed):
-    """Pallas merge == oracle merge on arbitrary beams: distances equal;
-    index multisets equal wherever distances are unique."""
-    rng = np.random.default_rng(seed)
-    bd = np.sort(rng.normal(0, 1, (B, L)).astype(np.float32), axis=1)
-    n_inf = int(rng.integers(0, L))
-    if n_inf:
-        bd[:, L - n_inf:] = np.inf
-    bi = rng.integers(0, 10_000, (B, L)).astype(np.int32)
-    bi[~np.isfinite(bd)] = -1
-    cd = rng.normal(0, 1, (B, K)).astype(np.float32)
-    cd[rng.random((B, K)) < 0.2] = np.inf
-    ci = rng.integers(0, 10_000, (B, K)).astype(np.int32)
-    rd, ri = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
-                            jnp.asarray(cd), jnp.asarray(ci))
-    pd_, pi_ = ops.topk_merge(jnp.asarray(bd), jnp.asarray(bi),
-                              jnp.asarray(cd), jnp.asarray(ci),
-                              impl="pallas_interpret")
-    np.testing.assert_allclose(np.asarray(rd), np.asarray(pd_), rtol=1e-6)
-    fin = np.isfinite(np.asarray(rd))
-    np.testing.assert_array_equal(
-        np.sort(np.where(fin, np.asarray(ri), -2), axis=1),
-        np.sort(np.where(fin, np.asarray(pi_), -2), axis=1))
-
-
 def test_topk_merge_keeps_smallest():
     bd = jnp.asarray([[0.1, 0.5, jnp.inf, jnp.inf]])
     bi = jnp.asarray([[10, 11, -1, -1]], jnp.int32)
@@ -60,19 +32,3 @@ def test_topk_merge_keeps_smallest():
         np.testing.assert_allclose(np.asarray(rd[0]),
                                    [0.05, 0.1, 0.3, 0.5], rtol=1e-6)
         np.testing.assert_array_equal(np.asarray(ri[0]), [21, 10, 20, 11])
-
-
-@settings(max_examples=10, deadline=None)
-@given(st.integers(1, 5), st.integers(1, 64), st.integers(16, 96),
-       st.integers(0, 2**31 - 1))
-def test_gather_distance_property(B, K, d, seed):
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(K + 1, 300))
-    vecs = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
-    x = jnp.asarray(rng.normal(0, 1, (B, d)).astype(np.float32))
-    idx = jnp.asarray(rng.integers(-1, n, (B, K)).astype(np.int32))
-    a = np.asarray(ops.gather_sq_dists(vecs, x, idx, impl="ref"))
-    b = np.asarray(ops.gather_sq_dists(vecs, x, idx,
-                                       impl="pallas_interpret"))
-    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
-    assert (np.isinf(a) == (np.asarray(idx) < 0)).all()

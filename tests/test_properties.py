@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get
 from repro.data.pipeline import SyntheticLM
