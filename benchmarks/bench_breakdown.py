@@ -1,9 +1,18 @@
-"""Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other."""
+"""Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other.
+
+Also the QuantStore comparison: ``run_quant`` reruns methods with
+``quant ∈ {off, sq8}`` on a high-dim (d ≥ 256) dataset and reports the
+f32-vs-int8 split of distance-kernel time and bytes moved per emitted
+pair (``common.dist_bytes`` — d×4 bytes per f32 distance, d×1 per int8
+filter distance, d×4 per exact re-rank).
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_method, theta_grid
+from benchmarks.common import (SCALES, dist_bytes, emit, run_method,
+                               theta_grid)
 
 METHODS = ("index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
+QUANT_METHODS = ("nlj", "es", "es_mi", "es_mi_adapt")
 
 
 def run(scale: str = "ci", *, regime: str = "manifold",
@@ -23,8 +32,40 @@ def run(scale: str = "ci", *, regime: str = "manifold",
     return rows
 
 
+def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
+              theta_idxs=(2,), methods=QUANT_METHODS) -> list[dict]:
+    """f32 vs sq8 on a d≥256 dataset: kernel seconds + bytes moved."""
+    dim = SCALES[scale]["dim"]
+    rows = []
+    grid = theta_grid(regime, scale)
+    for ti in theta_idxs:
+        theta = grid[ti - 1]
+        for method in methods:
+            base_bytes = None
+            for quant in ("off", "sq8"):
+                res, dt, rec = run_method(regime, method, theta,
+                                          scale=scale, quant=quant)
+                s = res.stats
+                nbytes = dist_bytes(res, dim, quant)
+                if quant == "off":
+                    base_bytes = nbytes
+                rows.append(dict(
+                    dataset=regime, dim=dim, theta_idx=ti, method=method,
+                    quant=quant, greedy_s=s.greedy_seconds,
+                    expand_s=s.expand_seconds, other_s=s.other_seconds,
+                    total_s=s.total_seconds, n_dist=s.n_dist,
+                    n_rerank=s.n_rerank, dist_bytes=nbytes,
+                    bytes_vs_f32=nbytes / max(base_bytes, 1),
+                    bytes_per_pair=nbytes / max(len(res.pairs), 1),
+                    recall=rec))
+    return rows
+
+
 def main(scale: str = "ci") -> None:
     emit(run(scale))
+    # separate section: different schema than the breakdown table above
+    print("\n# quant: f32 vs sq8 distance-kernel time and bytes (d >= 256)")
+    emit(run_quant("full_hd" if scale == "full" else "ci_hd"))
 
 
 if __name__ == "__main__":

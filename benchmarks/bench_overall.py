@@ -2,30 +2,41 @@
 
 The headline table: NAIVE (NLJ), INDEX, ES, ES+HWS (≈SIMJOIN), ES+SWS,
 ES+MI, ES+MI+ADAPT. Memory = peak work-sharing cache entries (the paper's
-online-memory metric; the index itself is offline, Fig. 13).
+online-memory metric; the index itself is offline, Fig. 13). Each row
+carries the compressed-storage mode (``quant``) plus the distance-kernel
+bytes moved per emitted pair, so an f32-vs-int8 sweep is
+``run(quant_modes=("off", "sq8"))``.
 """
 from __future__ import annotations
 
-from benchmarks.common import REGIMES, emit, run_method, theta_grid
+from benchmarks.common import (REGIMES, SCALES, dist_bytes, emit,
+                               run_method, theta_grid)
 
 METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 
 
 def run(scale: str = "ci", *, regimes=REGIMES, theta_idxs=(1, 3, 5, 7),
-        methods=METHODS) -> list[dict]:
+        methods=METHODS, quant_modes=("off",)) -> list[dict]:
+    dim = SCALES[scale]["dim"]
     rows = []
     for regime in regimes:
         grid = theta_grid(regime, scale)
         for ti in theta_idxs:
             theta = grid[ti - 1]
             for method in methods:
-                res, dt, rec = run_method(regime, method, theta, scale=scale)
-                rows.append(dict(
-                    dataset=regime, theta_idx=ti, theta=theta, method=method,
-                    seconds=dt, recall=rec, pairs=len(res.pairs),
-                    n_dist=res.stats.n_dist,
-                    cache_entries=res.stats.peak_cache_entries,
-                    overflow=res.stats.n_overflow, n_ood=res.stats.n_ood))
+                for quant in quant_modes:
+                    res, dt, rec = run_method(regime, method, theta,
+                                              scale=scale, quant=quant)
+                    nbytes = dist_bytes(res, dim, quant)
+                    rows.append(dict(
+                        dataset=regime, theta_idx=ti, theta=theta,
+                        method=method, quant=quant, seconds=dt, recall=rec,
+                        pairs=len(res.pairs), n_dist=res.stats.n_dist,
+                        n_rerank=res.stats.n_rerank,
+                        bytes_per_pair=nbytes / max(len(res.pairs), 1),
+                        cache_entries=res.stats.peak_cache_entries,
+                        overflow=res.stats.n_overflow,
+                        n_ood=res.stats.n_ood))
     return rows
 
 

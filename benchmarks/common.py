@@ -27,6 +27,10 @@ REGIMES = ("manifold", "weak", "clustered", "ood")
 SCALES = {
     "ci": dict(n_data=12_000, n_query=384, dim=48),
     "full": dict(n_data=100_000, n_query=2_000, dim=96),
+    # high-dim cells for the quantized-storage comparison (d ≥ 256 is
+    # where bytes-per-distance dominates the join)
+    "ci_hd": dict(n_data=4_000, n_query=128, dim=256),
+    "full_hd": dict(n_data=50_000, n_query=1_000, dim=512),
 }
 
 
@@ -77,29 +81,45 @@ _WARMED: set = set()
 
 def run_method(regime: str, method: str, theta: float, *, scale: str = "ci",
                tcfg: TraversalConfig | None = None, wave: int = 128,
-               style: str = "nsg") -> tuple[JoinResult, float, float]:
+               style: str = "nsg", quant: str = "off"
+               ) -> tuple[JoinResult, float, float]:
     """(result, seconds, recall) for one (dataset, method, θ) cell."""
     ds = dataset(regime, scale)
     eng = engine(regime, scale, style=style)
     cfg = JoinConfig(method=method, theta=theta, wave_size=wave,
-                     traversal=tcfg or TraversalConfig())
+                     traversal=tcfg or TraversalConfig(), quant=quant)
     # warm the jit caches (keyed on wave shape + traversal config) with a
     # query subset so reported latency is compile-free, like the paper's
     # steady-state measurements. The warm-up runs through a *transient*
     # engine (vector_join) with the prebuilt full-X indexes: jit caches
     # are process-global, and the persistent engine's per-X cache must not
     # learn full-X artifacts under the subset's fingerprint.
-    wkey = (regime, method, scale, style, cfg.traversal, wave)
-    if method != "nlj" and wkey not in _WARMED:
-        iy, ix, im = indexes(regime, scale, style=style)
-        vector_join(ds.X[:32], ds.Y, cfg, index_y=iy, index_x=ix,
-                    index_merged=im)
+    wkey = (regime, method, scale, style, cfg.traversal, wave, quant)
+    if wkey not in _WARMED:
+        if method != "nlj":
+            iy, ix, im = indexes(regime, scale, style=style)
+            vector_join(ds.X[:32], ds.Y, cfg, index_y=iy, index_x=ix,
+                        index_merged=im)
+        # pre-build the persistent engine's QuantStore artifact too (the
+        # transient warm-up engine's store dies with it) so the timed
+        # join is compile- and build-free for sq8 exactly as it is for
+        # f32
+        eng.warm_quant(ds.X, cfg)
         _WARMED.add(wkey)
     t0 = time.perf_counter()
     res = eng.join(ds.X, cfg)
     dt = time.perf_counter() - t0
     rec = recall(res, truth(regime, theta, scale))
     return res, dt, rec
+
+
+def dist_bytes(res: JoinResult, dim: int, quant: str) -> int:
+    """Distance-kernel bytes moved for one join (the C4 hot-spot traffic
+    model): each counted distance streams one d-dim candidate row —
+    d×4 bytes from the f32 table, d×1 from int8 codes — and each exact
+    re-rank evaluation streams the f32 row again."""
+    per_dist = dim * (1 if quant == "sq8" else 4)
+    return res.stats.n_dist * per_dist + res.stats.n_rerank * dim * 4
 
 
 def emit(rows: list[dict], *, file=None) -> None:

@@ -12,16 +12,22 @@ import argparse
 import time
 import traceback
 
+from types import SimpleNamespace
+
 from benchmarks import (bench_breakdown, bench_distributed, bench_index_type,
                         bench_join_size, bench_offline, bench_overall,
                         bench_queue_size, bench_scalability)
 from benchmarks.common import emit
+
+_quant = SimpleNamespace(run=lambda scale: bench_breakdown.run_quant(
+    "full_hd" if scale == "full" else "ci_hd"))
 
 BENCHES = [
     ("fig9_join_size", bench_join_size),
     ("fig10_overall", bench_overall),
     ("fig11_queue_size", bench_queue_size),
     ("fig12_breakdown", bench_breakdown),
+    ("quant_bytes", _quant),           # f32-vs-sq8 kernel time & bytes
     ("fig13_offline", bench_offline),
     ("fig14_scalability", bench_scalability),
     ("fig15_index_type", bench_index_type),

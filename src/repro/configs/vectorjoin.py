@@ -40,6 +40,11 @@ class EngineSpec:
 
     ``n_shards=0`` means "one shard per visible device" (resolved at
     ``make_engine`` time); 1 pins single-device execution.
+
+    ``quant`` selects the deployment's compressed-storage mode
+    (``core.types.QUANT_MODES``): ``"sq8"`` makes every join served by the
+    engine default to int8 filter + exact f32 re-rank, with QuantStore
+    artifacts cached per index (and per shard).
     """
     k: int = 48                    # kNN candidates per node at build time
     degree: int = 32               # index max out-degree R
@@ -47,6 +52,7 @@ class EngineSpec:
     n_shards: int = 1
     carry_window: int = 4096       # streaming work-sharing donor window
     max_cached_indexes: int = 4    # per-X artifact LRU capacity
+    quant: str = "off"             # compressed-storage mode (off | sq8)
 
     def build_kw(self) -> dict:
         return dict(k=self.k, degree=self.degree, style=self.style)
@@ -60,6 +66,10 @@ ENGINE_PRESETS = {
     # serving: data side sharded over every visible device
     "serving": EngineSpec(n_shards=0, carry_window=16_384,
                           max_cached_indexes=8),
+    # serving with compressed storage: ~4× more vectors resident per
+    # shard, distance filtering on int8 with exact re-rank
+    "serving_sq8": EngineSpec(n_shards=0, carry_window=16_384,
+                              max_cached_indexes=8, quant="sq8"),
 }
 
 
@@ -75,6 +85,9 @@ def make_engine(Y, spec: str | EngineSpec = "default", *,
     if overrides:
         spec = dataclasses.replace(spec, **overrides)
     n_shards = spec.n_shards or len(jax.devices())
+    if spec.quant != "off":
+        default = dataclasses.replace(default or JoinConfig(),
+                                      quant=spec.quant)
     return JoinEngine(Y, build_kw=spec.build_kw(), default=default,
                       n_shards=n_shards, carry_window=spec.carry_window,
                       max_cached_indexes=spec.max_cached_indexes)

@@ -84,13 +84,84 @@ def build_sharded_merged_index(Y, X, n_shards: int, **build_kw
         shard_size=shard_size, n_query=X.shape[0])
 
 
-def _local_mi_join(vecs, nbrs, mnd, start, xw, qids, lane_valid, *,
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedQuantStore:
+    """Per-shard QuantStores, stacked on a leading shard dim.
+
+    Each shard quantizes its own merged table on its *own* scale grid
+    (local value ranges ⇒ tighter scales ⇒ smaller slack per shard).
+    """
+    q: Array               # (S, M, d) int8
+    scales: Array          # (S, G) f32
+    norms: Array           # (S, M) f32
+    err: Array             # (S, M) f32
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in (self.q, self.scales, self.norms, self.err))
+
+
+def quantize_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
+                     group_size: int | None = None) -> ShardedQuantStore:
+    """Build one QuantStore per shard of a sharded merged index.
+
+    ``n_data`` is the *unpadded* |Y|: when the shard split doesn't divide
+    evenly, the last shard's tail rows are far-away (1e3) sentinels that
+    must not contribute to the scale statistics — one poisoned group
+    scale would quantize every real vector to all-zero codes and
+    degenerate the filter. Sentinels are still quantized (they clip;
+    their exact ``err`` keeps the bounds sound, and the exact re-rank
+    rejects them like any other out-of-range candidate).
+    """
+    from repro.quant import store as qstore_mod
+
+    gs = group_size or qstore_mod.DEFAULT_GROUP_SIZE
+    S, M, _ = smi.vecs.shape
+    pad = S * smi.shard_size - n_data if n_data is not None else 0
+    stores = []
+    for s in range(S):
+        mask = None
+        if pad and s == S - 1:
+            mask = np.ones(M, bool)
+            mask[smi.shard_size - pad:smi.shard_size] = False
+        stores.append(qstore_mod.build_store(smi.vecs[s], group_size=gs,
+                                             scale_rows=mask))
+    return ShardedQuantStore(
+        q=jnp.stack([s.q for s in stores]),
+        scales=jnp.stack([s.scales for s in stores]),
+        norms=jnp.stack([s.norms for s in stores]),
+        err=jnp.stack([s.err for s in stores]),
+        group_size=gs)
+
+
+def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
+                   xw, qids, lane_valid, *,
                    theta: float, cfg: TraversalConfig, shard_size: int,
-                   hybrid: bool, axis: str):
-    """Per-shard MI join body (runs under shard_map; all-local compute)."""
+                   hybrid: bool, axis: str, group_size: int, quant: bool,
+                   n_shards: int, pad: int):
+    """Per-shard MI join body (runs under shard_map; all-local compute).
+
+    With ``quant`` the shard traverses its local int8 store against
+    certified lower bounds (queries quantized on the local scale grid)
+    and re-ranks only the ambiguous band of its pool with exact f32
+    distances before returning, so the merged host-side result is
+    identical to the f32 path.
+    """
+    from repro.quant.store import QuantStore, dim_scales, quantize_on_grid
+
     vecs, nbrs, mnd = vecs[0], nbrs[0], mnd[0]
     index = GraphIndex(vecs=vecs, nbrs=nbrs, start=start[0],
                        mean_nbr_dist=mnd, n_data=shard_size)
+    rank = jax.lax.axis_index(axis).astype(jnp.int32)
+    qstore = qx = xerr = None
+    if quant:
+        qstore = QuantStore(q=qq[0], scales=qscales[0], norms=qnorms[0],
+                            err=qerr[0], group_size=group_size)
+        sd = dim_scales(qstore.scales, xw.shape[1], group_size)
+        qx, _, xerr = quantize_on_grid(xw, sd)
     B = xw.shape[0]
     W = traversal.bitmap_words(vecs.shape[0])
     visited = jnp.zeros((B, W), jnp.uint32)
@@ -98,11 +169,22 @@ def _local_mi_join(vecs, nbrs, mnd, start, xw, qids, lane_valid, *,
     lane = jnp.arange(B, dtype=jnp.int32)
     visited = visited.at[lane, node_ids >> 5].add(
         jnp.uint32(1) << (node_ids & 31).astype(jnp.uint32))
+    if pad:
+        # Pre-visit the last shard's far-away sentinel pad rows so they
+        # are never probed or pooled: harmless under f32 (huge exact
+        # distance) but their clipped sq8 codes carry a huge exact err,
+        # collapsing the certified lower bound to 0 — they would flood
+        # the pool ahead of real candidates.
+        sent = jnp.arange(shard_size - pad, shard_size, dtype=jnp.int32)
+        on_last = (rank == n_shards - 1).astype(jnp.uint32)
+        bits = (jnp.uint32(1) << (sent & 31).astype(jnp.uint32)) * on_last
+        visited = visited.at[:, sent >> 5].add(bits[None, :])
     rows = nbrs[node_ids]
     valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
     dist, valid, visited, n_new = traversal._probe(
         vecs, xw, rows, valid, visited, n_data=shard_size,
-        traverse_nondata=hybrid, dist_impl=cfg.dist_impl)
+        traverse_nondata=hybrid, dist_impl=cfg.dist_impl,
+        quant=qstore, qx=qx, xerr=xerr)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(jnp.where(valid, rows, NO_NODE),
                                 jnp.argmin(dist, axis=1)[:, None],
@@ -111,22 +193,50 @@ def _local_mi_join(vecs, nbrs, mnd, start, xw, qids, lane_valid, *,
         index, xw, theta, cfg=cfg, n_data=shard_size, hybrid=hybrid,
         traverse_nondata=hybrid, init_idx=rows, init_dist=dist,
         init_valid=valid, visited=visited, best_dist=best, best_idx=besti,
-        n_dist=n_new)
+        n_dist=n_new, quant=qstore, qx=qx, xerr=xerr)
+    C = r.pool_idx.shape[1]
+    keep = jnp.arange(C)[None, :] < r.n_pool[:, None]
+    n_rerank = jnp.zeros((B,), jnp.int32)
+    if quant:
+        # in-shard filter-then-rerank, mirroring waves.rerank_pool: pool
+        # entries whose upper bound beats θ² are certified true pairs;
+        # only the ambiguous band is re-computed exactly. The gather is
+        # fixed-shape, but collapsing non-band ids to row 0 keeps the
+        # unique-row traffic proportional to the band.
+        from repro.kernels import ops
+        th2 = jnp.float32(theta) ** 2
+        s = xerr[:, None] + qstore.err[jnp.clip(r.pool_idx, 0)]
+        sure, amb = ops.quant_band_from_lb(r.pool_dist, s, th2)
+        sure = keep & sure
+        amb = keep & amb
+        n_rerank = jnp.sum(amb, axis=1).astype(jnp.int32)
+        cvec = vecs[jnp.where(amb, r.pool_idx, 0)]
+        exact = kref.rowwise_sq_dists(xw, cvec)
+        keep = sure | (amb & (exact < th2))
     # globalize result ids
-    rank = jax.lax.axis_index(axis).astype(jnp.int32)
     gids = jnp.where(r.pool_idx != NO_NODE,
                      r.pool_idx + rank * shard_size, NO_NODE)
-    return (gids[None], r.pool_dist[None], r.n_pool[None], r.overflow[None],
-            r.n_dist[None])
+    return (gids[None], r.pool_dist[None], keep[None], r.overflow[None],
+            r.n_dist[None], n_rerank[None])
 
 
 def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                              *, theta: float, cfg: TraversalConfig,
-                             hybrid: bool = False):
+                             hybrid: bool = False,
+                             qstore: ShardedQuantStore | None = None,
+                             n_data: int | None = None):
     """Build the pjit'd per-wave distributed join step.
 
     shard_axes: mesh axis name (or tuple of names) the index is sharded
-    over — e.g. ``("pod", "data")`` on the production mesh.
+    over — e.g. ``("pod", "data")`` on the production mesh. ``qstore``
+    switches each shard onto its int8 store (filter + in-shard re-rank);
+    ``n_data`` (the unpadded |Y|) lets the body hide sentinel pad rows.
+
+    Returns ``(step, qargs)``: ``step`` takes the quant arrays as its
+    trailing runtime arguments (tiny placeholders when quant is off) so
+    multi-GB stores are jit *parameters*, never baked into the
+    executable as constants. Call as ``step(vecs, nbrs, mnd, start,
+    *qargs, xw, qids, lane_valid)``.
     """
     axes = (shard_axes,) if isinstance(shard_axes, str) else tuple(shard_axes)
     flat = axes if len(axes) == 1 else axes
@@ -137,33 +247,54 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         f"index has {smi.n_shards} shards but mesh axes {axes} provide "
         f"{axis_size} devices")
     spec_idx = P(flat)
+    quant = qstore is not None
+    pad = smi.n_shards * smi.shard_size - n_data if n_data is not None else 0
     body = functools.partial(
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
-        hybrid=hybrid, axis=flat)
+        hybrid=hybrid, axis=flat,
+        group_size=qstore.group_size if quant else 0, quant=quant,
+        n_shards=smi.n_shards, pad=pad)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(spec_idx, spec_idx, spec_idx, spec_idx, P(), P(), P()),
-        out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx),
+        in_specs=(spec_idx, spec_idx, spec_idx, spec_idx,
+                  spec_idx, spec_idx, spec_idx, spec_idx, P(), P(), P()),
+        out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
+                   spec_idx),
         check_vma=False)
 
-    @jax.jit
-    def step(vecs, nbrs, mnd, start, xw, qids, lane_valid):
-        return mapped(vecs, nbrs, mnd, start, xw, qids, lane_valid)
+    if quant:
+        qargs = (qstore.q, qstore.scales, qstore.norms, qstore.err)
+    else:
+        # zero-size placeholders keep the shard_map arity fixed; the body
+        # ignores them when quant is off
+        S = smi.n_shards
+        qargs = (jnp.zeros((S, 1, 1), jnp.int8),
+                 jnp.zeros((S, 1), jnp.float32),
+                 jnp.zeros((S, 1), jnp.float32),
+                 jnp.zeros((S, 1), jnp.float32))
 
-    return step
+    @jax.jit
+    def step(vecs, nbrs, mnd, start, qq, qs, qn, qe, xw, qids, lane_valid):
+        return mapped(vecs, nbrs, mnd, start, qq, qs, qn, qe,
+                      xw, qids, lane_valid)
+
+    return step, qargs
 
 
 def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
                         *, theta: float, cfg: TraversalConfig,
-                        wave_size: int = 256, hybrid: bool = False):
+                        wave_size: int = 256, hybrid: bool = False,
+                        qstore: ShardedQuantStore | None = None,
+                        n_data: int | None = None):
     """Host driver: waves of queries against all shards; assemble pairs."""
     X = jnp.asarray(X)
     nq = X.shape[0]
-    step = make_distributed_mi_join(mesh, shard_axes, smi, theta=theta,
-                                    cfg=cfg, hybrid=hybrid)
+    step, qargs = make_distributed_mi_join(
+        mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
+        qstore=qstore, n_data=n_data)
     pairs_out = []
-    stats = dict(n_dist=0, n_overflow=0)
+    stats = dict(n_dist=0, n_overflow=0, n_rerank=0)
     for q0 in range(0, nq, wave_size):
         ids = np.arange(q0, min(q0 + wave_size, nq))
         padded = np.zeros(wave_size, np.int32)
@@ -171,19 +302,18 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         lane_valid = np.zeros(wave_size, bool)
         lane_valid[:ids.size] = True
         with compat.set_mesh(mesh):
-            gids, gdist, n_pool, overflow, n_dist = step(
-                smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start,
+            gids, gdist, keep, overflow, n_dist, n_rerank = step(
+                smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
                 jnp.asarray(lane_valid))
         gids = np.asarray(gids)          # (S, B, C)
-        n_pool = np.asarray(n_pool)      # (S, B)
-        S, B, C = gids.shape
-        mask = np.arange(C)[None, None, :] < n_pool[:, :, None]
-        mask &= lane_valid[None, :, None]
+        # (S, B, C) kept pool slots, restricted to real lanes
+        mask = np.asarray(keep) & lane_valid[None, :, None]
         sh, ln, sl = np.nonzero(mask)
         pairs_out.append(np.stack([padded[ln], gids[sh, ln, sl]], axis=1))
         stats["n_dist"] += int(np.asarray(n_dist)[:, lane_valid].sum())
         stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
+        stats["n_rerank"] += int(np.asarray(n_rerank)[:, lane_valid].sum())
     pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
              else np.empty((0, 2), np.int64)).astype(np.int64)
     return pairs, stats

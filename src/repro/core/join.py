@@ -43,6 +43,65 @@ def exact_join_pairs(X, Y, theta: float, *, block: int = 1024,
             else np.empty((0, 2), np.int64)).astype(np.int64)
 
 
+def quant_join_pairs(X, Y, theta: float, store, *, block: int = 1024,
+                     impl: str | None = None
+                     ) -> tuple[np.ndarray, int]:
+    """Exact NLJ through the sq8 filter-then-rerank pipeline.
+
+    Stage 1 streams int8 codes through ``pairwise_sq_dists_int8`` (d×1
+    bytes/pair instead of d×4) and brackets every pair with certified
+    bounds: lower bound ≥ θ² rejects (cannot lose a true pair), upper
+    bound < θ² accepts (cannot admit a false one). Stage 2 re-ranks only
+    the ambiguous band in between with exact f32 distances, so the result
+    equals ``exact_join_pairs`` while f32 traffic stays proportional to
+    the quantization band. (Pairs within a few ulps of θ can differ:
+    ``exact_join_pairs`` evaluates the ill-conditioned matmul form while
+    the re-rank uses the better-conditioned difference form — on such
+    boundary pairs *this* path agrees with float64.)
+
+    Returns ``(pairs, n_rerank)``: the exact pair array plus the number
+    of band pairs that needed f32 re-ranking.
+    """
+    from repro.quant.store import quantize_queries
+
+    X = jnp.asarray(X, jnp.float32)
+    Y = jnp.asarray(Y, jnp.float32)
+    th2 = np.float32(theta) ** 2
+    out: list[np.ndarray] = []
+    n_rerank = 0
+    for q0 in range(0, X.shape[0], block):
+        q1 = min(q0 + block, X.shape[0])
+        xb = X[q0:q1]
+        qx, xn, xe = quantize_queries(xb, store)
+        dhat = ops.pairwise_sq_dists_int8(
+            qx, store.q, store.scales, group_size=store.group_size,
+            xn=xn, yn=store.norms, impl=impl)
+        slack = xe[:, None] + store.err[None, :]
+        # The matmul-form epilogue (xn + yn − 2·x̂·ŷ) cancels catastrophically
+        # when ‖x‖², ‖y‖² ≫ d̂ (data with a large common offset): absolute
+        # f32 error ~ (xn+yn)·2⁻²³. Widen d̂ by that margin before bounding
+        # so rounding can neither reject a true pair nor certify a false
+        # one. (The traversal path uses the well-conditioned difference
+        # form and needs no guard.)
+        guard = 8 * np.float32(1.2e-7) * (xn[:, None] + store.norms[None, :])
+        lb = np.asarray(ops.quant_lower_bound(
+            jnp.maximum(dhat - guard, 0.0), slack))
+        ub = np.asarray(ops.quant_upper_bound(dhat + guard, slack))
+        sure = ub < th2
+        qi, yi = np.nonzero(sure)
+        out.append(np.stack([qi + q0, yi], axis=1))
+        qi, yi = np.nonzero((lb < th2) & ~sure)
+        n_rerank += int(qi.size)
+        if qi.size:
+            diff = xb[jnp.asarray(qi)] - Y[jnp.asarray(yi)]
+            d = np.asarray(jnp.sum(diff * diff, axis=1))
+            m = d < th2
+            out.append(np.stack([qi + q0, yi], axis=1)[m])
+    pairs = (np.concatenate(out, axis=0) if out
+             else np.empty((0, 2), np.int64)).astype(np.int64)
+    return pairs, n_rerank
+
+
 # ---------------------------------------------------------------------------
 # one-shot compatibility wrapper over the engine
 # ---------------------------------------------------------------------------

@@ -43,7 +43,8 @@ def bitmap_words(n_nodes: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
-           *, n_data: int, traverse_nondata: bool, dist_impl: str | None
+           *, n_data: int, traverse_nondata: bool, dist_impl: str | None,
+           quant=None, qx: Array | None = None, xerr: Array | None = None
            ) -> tuple[Array, Array, Array, Array]:
     """Compute distances to candidate ids with dedup + visited masking.
 
@@ -51,6 +52,11 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
       vecs: (N, d) node vectors; x: (B, d) queries.
       cand: (B, K) candidate node ids (NO_NODE allowed); valid: (B, K).
       visited: (B, W) uint32 bitmap.
+      quant/qx/xerr: optional QuantStore + queries quantized on its grid +
+        exact per-query errors. When given, gathers int8 codes (d×1 bytes
+        per candidate instead of d×4) and returns *certified lower bounds*
+        on the true squared distances, so downstream `< θ²` tests accept a
+        superset; the wave runner re-ranks pooled survivors exactly.
     Returns:
       (dist (B,K) f32 — +inf at invalid, valid (B,K), new_visited, n_new (B,)).
     """
@@ -75,8 +81,16 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
                               axis=1, inplace=False)
     valid = valid & keep
     # distances (masked)
-    cvec = vecs[cand_c]                                     # (B, K, d)
-    dist = ops.rowwise_sq_dists(x, cvec, impl=dist_impl)
+    if quant is not None:
+        qc = quant.q[cand_c]                                # (B, K, d) int8
+        dhat = ops.rowwise_sq_dists_int8(
+            qx, qc, quant.scales, group_size=quant.group_size,
+            impl=dist_impl)
+        slack = xerr[:, None] + quant.err[cand_c]
+        dist = ops.quant_lower_bound(dhat, slack)
+    else:
+        cvec = vecs[cand_c]                                 # (B, K, d)
+        dist = ops.rowwise_sq_dists(x, cvec, impl=dist_impl)
     dist = jnp.where(valid, dist, _INF)
     # mark visited: deduped ⇒ each (word,bit) contributed once ⇒ add == or
     add = jnp.where(valid, bit, jnp.uint32(0))
@@ -88,7 +102,9 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
 
 def _expand(index_vecs: Array, index_nbrs: Array, x: Array, sel_ids: Array,
             sel_valid: Array, visited: Array, *, n_data: int,
-            traverse_nondata: bool, dist_impl: str | None):
+            traverse_nondata: bool, dist_impl: str | None,
+            quant=None, qx: Array | None = None,
+            xerr: Array | None = None):
     """Gather neighbor rows of selected nodes and probe them."""
     B, E = sel_ids.shape
     R = index_nbrs.shape[1]
@@ -97,7 +113,8 @@ def _expand(index_vecs: Array, index_nbrs: Array, x: Array, sel_ids: Array,
     valid = jnp.broadcast_to(sel_valid[:, :, None], (B, E, R)).reshape(B, E * R)
     dist, valid, visited, n_new = _probe(
         index_vecs, x, cand, valid, visited, n_data=n_data,
-        traverse_nondata=traverse_nondata, dist_impl=dist_impl)
+        traverse_nondata=traverse_nondata, dist_impl=dist_impl,
+        quant=quant, qx=qx, xerr=xerr)
     return cand, dist, valid, visited, n_new
 
 
@@ -136,12 +153,16 @@ class GreedyState(NamedTuple):
 def greedy_search(index: GraphIndex, x: Array, seeds: Array,
                   seeds_valid: Array, theta: float | Array, *,
                   cfg: TraversalConfig, n_data: int,
-                  traverse_nondata: bool = True) -> GreedyState:
+                  traverse_nondata: bool = True,
+                  quant=None, qx: Array | None = None,
+                  xerr: Array | None = None) -> GreedyState:
     """Batched best-first search until an in-range point is found per lane.
 
     Args:
       x: (B, d) wave of queries; seeds: (B, S) start node ids.
       theta: L2 threshold (scalar).
+      quant/qx/xerr: optional sq8 mode — traversal runs on certified
+        lower bounds from int8 codes (see ``_probe``).
     """
     vecs, nbrs = index.vecs, index.nbrs
     B = x.shape[0]
@@ -153,7 +174,8 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
     # --- seed probing (Alg. 2 lines 5–11) ---
     d0, v0, visited0, n0 = _probe(
         vecs, x, seeds, seeds_valid, visited0, n_data=n_data,
-        traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl)
+        traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
+        quant=quant, qx=qx, xerr=xerr)
     bd = jnp.full((B, L), _INF)
     bi = jnp.full((B, L), NO_NODE, jnp.int32)
     bexp = jnp.zeros((B, L), bool)
@@ -191,7 +213,8 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
 
         cand, cd, cv, visited, n_new = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
-            traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl)
+            traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
+            quant=quant, qx=qx, xerr=xerr)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist = s.n_dist + jnp.where(active, n_new, 0)
 
@@ -266,13 +289,19 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
                  traverse_nondata: bool,
                  init_idx: Array, init_dist: Array, init_valid: Array,
                  visited: Array, best_dist: Array, best_idx: Array,
-                 n_dist: Array) -> ExpandResult:
+                 n_dist: Array, quant=None, qx: Array | None = None,
+                 xerr: Array | None = None) -> ExpandResult:
     """Enumerate all reachable in-range data points from initial candidates.
 
     ``init_*`` (B, K0) are already-visited candidates with known distances
     (the greedy beam, or for the merged index the probed neighbor row).
     In-range data entries seed the result pool; the rest seed the hybrid
     out-range beam (BBFS only — plain BFS drops them, paper Alg. 2 line 29).
+
+    In sq8 mode (``quant`` given) all distances are certified lower
+    bounds, so the pool is a superset of the exact pool over the visited
+    region; the caller must re-rank pooled entries with the exact kernel
+    before emitting pairs.
     """
     vecs, nbrs = index.vecs, index.nbrs
     B, K0 = init_idx.shape
@@ -348,7 +377,8 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
 
         cand, cd, cv, visited, n_new = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
-            traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl)
+            traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
+            quant=quant, qx=qx, xerr=xerr)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist2 = s.n_dist + jnp.where(active, n_new, 0)
 

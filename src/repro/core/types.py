@@ -76,6 +76,12 @@ class TraversalConfig:
 
 METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 
+# Compressed-storage modes: "off" streams f32 vectors through the distance
+# kernels; "sq8" runs traversal/threshold filtering on QuantStore int8
+# codes against certified lower bounds and re-ranks survivors with the
+# exact f32 kernel (emitted pairs are identical — see quant/store.py).
+QUANT_MODES = ("off", "sq8")
+
 
 @dataclasses.dataclass(frozen=True)
 class JoinConfig:
@@ -84,10 +90,14 @@ class JoinConfig:
     traversal: TraversalConfig = dataclasses.field(default_factory=TraversalConfig)
     wave_size: int = 256           # queries processed per batched wave
     ood_factor: float = 1.5        # paper §4.5 d1 > 1.5 * d2
+    quant: str = "off"             # compressed-storage mode (QUANT_MODES)
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}; one of {METHODS}")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(
+                f"unknown quant mode {self.quant!r}; one of {QUANT_MODES}")
 
 
 @dataclasses.dataclass
@@ -100,6 +110,9 @@ class JoinStats:
     other_seconds: float = 0.0     # ordering, caching, assembly
     n_ood: int = 0                 # queries predicted OOD (adapt only)
     peak_cache_entries: int = 0    # work-sharing cache footprint
+    n_rerank: int = 0              # exact f32 re-rank evaluations (sq8 mode;
+    #                                n_dist counts quantized filter dists)
+    quant_bytes: int = 0           # bytes resident for QuantStore artifacts
 
     @property
     def total_seconds(self) -> float:

@@ -48,12 +48,42 @@ _SEARCH_METHODS = ("index", "es", "es_hws", "es_sws")
 _CACHING_METHODS = ("es_hws", "es_sws")
 
 
+# ~64 KiB of content sampled per fingerprint — enough that any two vector
+# sets that differ anywhere but on a vanishing fraction of bytes get
+# distinct keys, while keying stays O(sample) instead of O(N·d).
+_FP_SAMPLE_BYTES = 1 << 16
+
+
 def _fingerprint(a) -> str:
-    """Content hash of a vector set — the cache key for per-X artifacts."""
+    """Content hash of a vector set — the cache key for per-X artifacts.
+
+    Hashes shape/dtype/nbytes plus a fixed-size strided byte sample (head
+    and tail included), so fingerprinting a multi-GB array costs the same
+    as a small one. Sampling trades exhaustiveness for speed: two arrays
+    that agree on every sampled byte collide. Vector sets that differ
+    *densely* (distinct datasets, shuffled batches, re-embedded queries)
+    always get distinct keys; but two arrays differing only on a span
+    shorter than the sample stride (one edited row of a very large X —
+    whether edited in place or freshly allocated) can collide and hit the
+    other's cached artifacts. Callers doing sparse row-level updates to
+    huge cached query sets should bypass the cache (``adopt`` prebuilt
+    indexes, or a fresh engine) rather than rely on the fingerprint.
+    """
     a = np.ascontiguousarray(np.asarray(a))
     h = hashlib.sha1()
-    h.update(repr((a.shape, str(a.dtype))).encode())
-    h.update(a.tobytes())
+    h.update(repr((a.shape, str(a.dtype), a.nbytes)).encode())
+    flat = a.reshape(-1).view(np.uint8) if a.size else a.reshape(-1)
+    if flat.nbytes <= _FP_SAMPLE_BYTES:
+        h.update(flat.tobytes())
+    else:
+        # odd stride: coprime with the element size, so samples cycle
+        # through every byte offset within f32/f64 elements (an even
+        # stride would only ever see mantissa-LSB bytes and alias
+        # arrays differing in exponent/high-mantissa bits)
+        stride = (flat.nbytes // _FP_SAMPLE_BYTES) | 1
+        h.update(np.ascontiguousarray(flat[::stride]).tobytes())
+        h.update(flat[:2048].tobytes())
+        h.update(flat[-2048:].tobytes())
     return h.hexdigest()[:16]
 
 
@@ -111,8 +141,13 @@ class JoinEngine:
         self._index_x = _LRU(max_cached_indexes)
         self._merged = _LRU(max_cached_indexes)
         self._sharded = _LRU(max_cached_indexes)
+        # QuantStore artifacts mirror the index artifacts they compress
+        # (one per shard for the sharded path), keyed by artifact kind
+        # (+ X fingerprint for per-X artifacts).
+        self._qstores = _LRU(2 * max_cached_indexes)
         self.build_counts: dict[str, int] = {
-            "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0}
+            "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0,
+            "quant": 0}
         self.build_seconds = 0.0
         self.serve_stats: dict[str, int] = {
             "joins": 0, "batches": 0, "queries": 0, "pairs": 0}
@@ -181,6 +216,50 @@ class JoinEngine:
             self._sharded.put(fp, hit)
         return hit
 
+    def quant_store(self, key: tuple, vecs):
+        """The sq8 companion of one index artifact (built once, LRU'd).
+
+        ``key`` names the artifact (("y",), ("index_y",), ("merged", fp),
+        ("sharded", fp)); ``vecs`` is the f32 table to compress — or, for
+        the sharded key, the ``ShardedMergedIndex`` whose per-shard tables
+        each get their own store (per-shard scale grids).
+        """
+        hit = self._qstores.touch(key)
+        if hit is None:
+            t0 = time.perf_counter()
+            if key[0] == "sharded":
+                from repro.core import distributed
+                hit = distributed.quantize_sharded(
+                    vecs, n_data=int(self.Y.shape[0]))
+            else:
+                from repro.quant import build_store
+                hit = build_store(vecs)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["quant"] += 1
+            self._qstores.put(key, hit)
+        return hit
+
+    def warm_quant(self, X, cfg: JoinConfig | None = None, *,
+                   method: str | None = None) -> None:
+        """Pre-build the QuantStore artifact a join of ``X`` would use
+        (no-op unless the resolved config says ``quant="sq8"``).
+
+        The single owner of the artifact-key scheme — benchmarks and
+        deployments warm through this instead of mirroring the keys."""
+        cfg = self._resolve(cfg, method, None)
+        if cfg.quant != "sq8":
+            return
+        if cfg.method == "nlj":
+            self.quant_store(("y",), self.Y)
+        elif self.n_shards > 1:
+            self.quant_store(("sharded", _fingerprint(X)),
+                             self.sharded_index(X))
+        elif cfg.method in _MI_METHODS:
+            self.quant_store(("merged", _fingerprint(X)),
+                             self.merged_index(X).vecs)
+        else:
+            self.quant_store(("index_y",), self.index_y().vecs)
+
     def adopt(self, *, index_y: GraphIndex | None = None, X=None,
               index_x: GraphIndex | None = None,
               index_merged: GraphIndex | None = None) -> None:
@@ -228,8 +307,13 @@ class JoinEngine:
              index_x: GraphIndex | None = None,
              index_merged: GraphIndex | None = None) -> JoinResult:
         """Join X against the engine's Y. Cached indexes are reused;
-        whatever the method needs and is missing is built (and counted)."""
-        from repro.core.join import exact_join_pairs
+        whatever the method needs and is missing is built (and counted).
+
+        ``cfg.quant == "sq8"`` routes the distance hot path through the
+        cached QuantStore companion of whichever index artifact the
+        method uses (filter on certified int8 lower bounds, exact f32
+        re-rank of survivors — emitted pairs are unchanged)."""
+        from repro.core.join import exact_join_pairs, quant_join_pairs
 
         cfg = self._resolve(cfg, method, theta)
         X = jnp.asarray(X)
@@ -243,8 +327,15 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            pairs = exact_join_pairs(X, self.Y, cfg.theta,
-                                     impl=cfg.traversal.dist_impl)
+            if cfg.quant == "sq8":
+                store = self.quant_store(("y",), self.Y)
+                stats.quant_bytes = store.nbytes
+                pairs, stats.n_rerank = quant_join_pairs(
+                    X, self.Y, cfg.theta, store,
+                    impl=cfg.traversal.dist_impl)
+            else:
+                pairs = exact_join_pairs(X, self.Y, cfg.theta,
+                                         impl=cfg.traversal.dist_impl)
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = int(X.shape[0]) * int(self.Y.shape[0])
             return self._done(JoinResult(pairs=pairs, stats=stats), X)
@@ -256,14 +347,24 @@ class JoinEngine:
         t0 = time.perf_counter()
         if cfg.method in _MI_METHODS:
             merged = self.merged_index(X)
+            qstore = None
+            if cfg.quant == "sq8":
+                qstore = self.quant_store(("merged", _fingerprint(X)),
+                                          merged.vecs)
+                stats.quant_bytes = qstore.nbytes
             stats.other_seconds += time.perf_counter() - t0
-            W.run_mi_join(X, merged, cfg, stats, all_pairs)
+            W.run_mi_join(X, merged, cfg, stats, all_pairs, qstore=qstore)
         else:
             iy = self.index_y()
             ix = (self.index_x(X)
                   if cfg.method in ("es_hws", "es_sws") else None)
+            qstore = None
+            if cfg.quant == "sq8":
+                qstore = self.quant_store(("index_y",), iy.vecs)
+                stats.quant_bytes = qstore.nbytes
             stats.other_seconds += time.perf_counter() - t0
-            W.run_search_join(X, iy, ix, cfg, stats, all_pairs)
+            W.run_search_join(X, iy, ix, cfg, stats, all_pairs,
+                              qstore=qstore)
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
@@ -286,6 +387,12 @@ class JoinEngine:
                 f"{cfg.method!r} (work-sharing caches are per-device)")
         mesh, axes = self._mesh_axes()
         smi = self.sharded_index(X)
+        qstore = None
+        if cfg.quant == "sq8":
+            # one QuantStore per shard (per-shard scale grids), cached
+            # alongside the sharded index it compresses
+            qstore = self.quant_store(("sharded", _fingerprint(X)), smi)
+            stats.quant_bytes = qstore.nbytes
         # adapt ⇒ hybrid BBFS for every query: a sound superset of the
         # per-query adaptive split (per-shard OOD prediction would need
         # per-shard side tables; the hybrid path subsumes the BFS one).
@@ -293,10 +400,12 @@ class JoinEngine:
         t0 = time.perf_counter()
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
-            wave_size=cfg.wave_size, hybrid=hybrid)
+            wave_size=cfg.wave_size, hybrid=hybrid, qstore=qstore,
+            n_data=int(self.Y.shape[0]))
         stats.expand_seconds += time.perf_counter() - t0
         stats.n_dist += int(dstats["n_dist"])
         stats.n_overflow += int(dstats["n_overflow"])
+        stats.n_rerank += int(dstats.get("n_rerank", 0))
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
         pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
         return JoinResult(pairs=pairs, stats=stats)
@@ -326,7 +435,7 @@ class JoinEngine:
         of s_Y, so later batches keep getting cheaper (the streaming form
         of the paper's MST parent order).
         """
-        from repro.core.join import exact_join_pairs
+        from repro.core.join import exact_join_pairs, quant_join_pairs
 
         if self.n_shards > 1:
             raise NotImplementedError(
@@ -340,9 +449,16 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            pairs = exact_join_pairs(X_batch, self.Y, cfg.theta,
-                                     impl=cfg.traversal.dist_impl)
-            pairs = pairs.copy()
+            if cfg.quant == "sq8":
+                store = self.quant_store(("y",), self.Y)
+                stats.quant_bytes = store.nbytes
+                pairs, stats.n_rerank = quant_join_pairs(
+                    X_batch, self.Y, cfg.theta, store,
+                    impl=cfg.traversal.dist_impl)
+            else:
+                pairs = exact_join_pairs(X_batch, self.Y, cfg.theta,
+                                         impl=cfg.traversal.dist_impl)
+                pairs = pairs.copy()
             pairs[:, 0] += offset
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = nb * int(self.Y.shape[0])
@@ -353,8 +469,13 @@ class JoinEngine:
             # distinct batch — greedy work offloaded to construction.
             all_pairs: list[np.ndarray] = []
             merged = self.merged_index(X_batch)
+            qstore = None
+            if cfg.quant == "sq8":
+                qstore = self.quant_store(
+                    ("merged", _fingerprint(X_batch)), merged.vecs)
+                stats.quant_bytes = qstore.nbytes
             W.run_mi_join(X_batch, merged, cfg, stats, all_pairs,
-                          qid_offset=offset)
+                          qid_offset=offset, qstore=qstore)
             pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                      else np.empty((0, 2), np.int64))
             result = JoinResult(pairs=pairs, stats=stats)
@@ -370,6 +491,10 @@ class JoinEngine:
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
                        stats: JoinStats, offset: int) -> JoinResult:
         iy = self.index_y()
+        qstore = None
+        if cfg.quant == "sq8":
+            qstore = self.quant_store(("index_y",), iy.vecs)
+            stats.quant_bytes = qstore.nbytes
         sy = int(iy.start)
         S = cfg.traversal.seeds_max
         nb = int(X_batch.shape[0])
@@ -392,7 +517,8 @@ class JoinEngine:
             stats.other_seconds += time.perf_counter() - t0
 
             out = W.run_search_wave(iy, xw, qids_g, lane_valid, cfg, stats,
-                                    seeds=seeds, seeds_valid=seeds_valid)
+                                    seeds=seeds, seeds_valid=seeds_valid,
+                                    qstore=qstore)
             all_pairs.append(out.pairs)
 
             if caching:

@@ -30,6 +30,8 @@ from repro.core import ordering, traversal
 from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
                               TraversalConfig)
+from repro.kernels import ops
+from repro.quant.store import QuantStore, quantize_queries
 
 Array = jax.Array
 
@@ -47,14 +49,65 @@ def pad_wave(ids: np.ndarray, wave_size: int) -> tuple[np.ndarray, np.ndarray]:
         [np.ones(n, bool), np.zeros(wave_size - n, bool)])
 
 
-def collect_pairs(qids: np.ndarray, lane_valid: np.ndarray,
-                  pool_idx: np.ndarray, n_pool: np.ndarray) -> np.ndarray:
-    C = pool_idx.shape[1]
+def pool_mask(lane_valid: np.ndarray, n_pool: np.ndarray,
+              C: int) -> np.ndarray:
+    """(B, C) bool — which pool slots hold results (first-n layout)."""
     n_pool = np.where(lane_valid, n_pool, 0)
-    mask = np.arange(C)[None, :] < n_pool[:, None]
-    lanes, slots = np.nonzero(mask)
+    return np.arange(C)[None, :] < n_pool[:, None]
+
+
+def collect_pairs(qids: np.ndarray, keep: np.ndarray,
+                  pool_idx: np.ndarray) -> np.ndarray:
+    """Pairs from every kept pool slot; ``keep`` is a (B, C) bool mask
+    (``pool_mask`` for the f32 path, post-rerank survivors for sq8)."""
+    lanes, slots = np.nonzero(keep)
     return np.stack([qids[lanes], pool_idx[lanes, slots]], axis=1).astype(
         np.int64)
+
+
+def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
+                keep: np.ndarray, theta: float, stats: JoinStats, *,
+                dist_impl: str | None, qstore: QuantStore,
+                xerr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Exact f32 re-rank of sq8 filter survivors (the second stage of
+    filter-then-rerank).
+
+    The traversal pooled every candidate whose *certified lower bound*
+    beat θ² — a superset of the exact in-range set over the visited
+    region. Entries whose certified *upper* bound also beats θ² are
+    guaranteed true pairs and are emitted without touching the f32 table;
+    only the ambiguous band (lb < θ² ≤ ub) is re-computed exactly. The
+    emitted set is therefore identical to what the f32 pipeline emits for
+    the same visited region, while re-rank traffic stays proportional to
+    the quantization band, not the join size.
+
+    ``pool_dist`` holds the pooled lower bounds; with per-pair slack
+    ``s`` the matching upper bound is ``(√lb + 2s)²`` (looser only where
+    the lower bound was clamped to 0, which stays sound). Band
+    evaluations are counted in ``stats.n_rerank`` (``n_dist`` stays the
+    quantized-filter count).
+
+    Returns ``(keep', dist')`` — dist' is exact where re-ranked, the
+    lower bound elsewhere.
+    """
+    th2 = np.float32(theta) ** 2
+    s = (np.asarray(xerr)[:, None]
+         + np.asarray(qstore.err)[np.clip(pool_idx, 0, None)])
+    sure, amb = ops.quant_band_from_lb(jnp.asarray(pool_dist),
+                                       jnp.asarray(s), th2)
+    sure = keep & np.asarray(sure)
+    amb = keep & np.asarray(amb)
+    stats.n_rerank += int(amb.sum())
+    dist = pool_dist
+    if amb.any():
+        idx = np.where(amb, pool_idx, NO_NODE)
+        exact = np.asarray(ops.gather_sq_dists(vecs, xw, jnp.asarray(idx),
+                                               impl=dist_impl))
+        keep = sure | (amb & (exact < th2))
+        dist = np.where(amb & np.isfinite(exact), exact, pool_dist)
+    else:
+        keep = sure
+    return keep, np.where(keep, dist, np.float32(np.inf))
 
 
 # ---------------------------------------------------------------------------
@@ -63,7 +116,9 @@ def collect_pairs(qids: np.ndarray, lane_valid: np.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("traverse_nondata", "dist_impl"))
 def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
-              traverse_nondata: bool, dist_impl: str | None):
+              traverse_nondata: bool, dist_impl: str | None,
+              quant: QuantStore | None = None, qx: Array | None = None,
+              xerr: Array | None = None):
     """Probe each query's own neighborhood row in the merged index."""
     B = x.shape[0]
     W = traversal.bitmap_words(merged.n_nodes)
@@ -77,7 +132,7 @@ def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
     dist, valid, visited, n_new = traversal._probe(
         merged.vecs, x, rows, valid, visited,
         n_data=merged.n_data, traverse_nondata=traverse_nondata,
-        dist_impl=dist_impl)
+        dist_impl=dist_impl, quant=quant, qx=qx, xerr=xerr)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(
         jnp.where(valid, rows, NO_NODE),
@@ -95,8 +150,10 @@ class WaveOutput:
     work-sharing cache after one wave."""
     pairs: np.ndarray          # (P, 2) int64, already offset to global qids
     pool_idx: np.ndarray       # (B, C) int32
-    pool_dist: np.ndarray      # (B, C) f32
-    n_pool: np.ndarray         # (B,)  int32
+    pool_dist: np.ndarray      # (B, C) f32 (sq8: exact where re-ranked,
+    #                            certified lower bound on sure slots)
+    pool_keep: np.ndarray      # (B, C) bool — emitted slots (post-rerank)
+    n_pool: np.ndarray         # (B,)  int32 (pre-rerank pool fill)
     best_idx: np.ndarray       # (B,)  int32 — closest data node per lane
     lane_valid: np.ndarray     # (B,)  bool
 
@@ -112,21 +169,30 @@ def effective_tcfg(cfg: JoinConfig) -> TraversalConfig:
 def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
                     lane_valid: np.ndarray, cfg: JoinConfig,
                     stats: JoinStats, *, seeds: np.ndarray,
-                    seeds_valid: np.ndarray) -> WaveOutput:
+                    seeds_valid: np.ndarray,
+                    qstore: QuantStore | None = None) -> WaveOutput:
     """One padded wave of greedy search + range expansion (Alg. 1 online).
 
     ``seeds``/``seeds_valid`` are (B, S) arrays the caller filled from
     whatever work-sharing cache applies (parent caches for the MST order,
     the streaming carry cache for ``JoinEngine.submit``).
+
+    With ``qstore`` (sq8 mode) the traversal filters on certified lower
+    bounds from int8 codes and the pooled survivors are re-ranked with
+    the exact f32 kernel before pairs are emitted.
     """
     tcfg = effective_tcfg(cfg)
     seeds_j = jnp.asarray(seeds)
     sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
+    qx = xerr = None
+    if qstore is not None:
+        qx, _, xerr = quantize_queries(xw, qstore)
 
     t0 = time.perf_counter()
     g = traversal.greedy_search(
         index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
-        n_data=index_y.n_data, traverse_nondata=True)
+        n_data=index_y.n_data, traverse_nondata=True,
+        quant=qstore, qx=qx, xerr=xerr)
     jax.block_until_ready(g.beam_dist)
     stats.greedy_seconds += time.perf_counter() - t0
 
@@ -137,7 +203,7 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         hybrid=False, traverse_nondata=True,
         init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
         visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
-        n_dist=g.n_dist)
+        n_dist=g.n_dist, quant=qstore, qx=qx, xerr=xerr)
     jax.block_until_ready(r.pool_idx)
     stats.expand_seconds += time.perf_counter() - t0
 
@@ -146,14 +212,20 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
     pool_dist = np.asarray(r.pool_dist)
     n_pool = np.asarray(r.n_pool)
     lv = np.asarray(lane_valid)
-    pairs = collect_pairs(qids, lv, pool_idx, n_pool)
+    keep = pool_mask(lv, n_pool, pool_idx.shape[1])
+    if qstore is not None:
+        keep, pool_dist = rerank_pool(index_y.vecs, xw, pool_idx, pool_dist,
+                                      keep, cfg.theta, stats,
+                                      dist_impl=tcfg.dist_impl,
+                                      qstore=qstore, xerr=xerr)
+    pairs = collect_pairs(qids, keep, pool_idx)
     stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
     stats.n_iters += int(g.n_iters) + int(r.n_iters)
     stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
     stats.other_seconds += time.perf_counter() - t0
     return WaveOutput(pairs=pairs, pool_idx=pool_idx, pool_dist=pool_dist,
-                      n_pool=n_pool, best_idx=np.asarray(r.best_idx),
-                      lane_valid=lv)
+                      pool_keep=keep, n_pool=n_pool,
+                      best_idx=np.asarray(r.best_idx), lane_valid=lv)
 
 
 def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
@@ -165,10 +237,10 @@ def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
         for i, q in enumerate(qids):
             if not out.lane_valid[i]:
                 continue
-            k = out.n_pool[i]
-            o = np.argsort(out.pool_dist[i, :k])
-            cache[int(q)] = out.pool_idx[i, :k][o]
-            cache_n += int(k)
+            ids = out.pool_idx[i][out.pool_keep[i]]
+            o = np.argsort(out.pool_dist[i][out.pool_keep[i]])
+            cache[int(q)] = ids[o]
+            cache_n += int(ids.size)
     elif cfg.method == "es_sws":
         for i, q in enumerate(qids):
             if not out.lane_valid[i]:
@@ -205,7 +277,8 @@ def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
 
 def run_search_join(X: Array, index_y: GraphIndex,
                     index_x: GraphIndex | None, cfg: JoinConfig,
-                    stats: JoinStats, all_pairs: list[np.ndarray]) -> None:
+                    stats: JoinStats, all_pairs: list[np.ndarray], *,
+                    qstore: QuantStore | None = None) -> None:
     """Full-batch index / es / es_hws / es_sws join (greedy + BFS)."""
     nq = X.shape[0]
     needs_mst = cfg.method in ("es_hws", "es_sws")
@@ -234,7 +307,8 @@ def run_search_join(X: Array, index_y: GraphIndex,
             qids, lane_valid, parent, cache, sy, cfg.wave_size, S)
         stats.other_seconds += time.perf_counter() - t0
         out = run_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
-                              seeds=seeds, seeds_valid=seeds_valid)
+                              seeds=seeds, seeds_valid=seeds_valid,
+                              qstore=qstore)
         all_pairs.append(out.pairs)
         t0 = time.perf_counter()
         cache_n = update_sws_cache(cache, out, qids, cfg, stats, cache_n)
@@ -247,11 +321,14 @@ def run_search_join(X: Array, index_y: GraphIndex,
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 stats: JoinStats, all_pairs: list[np.ndarray], *,
-                qid_offset: int = 0) -> None:
+                qid_offset: int = 0,
+                qstore: QuantStore | None = None) -> None:
     """es_mi / es_mi_adapt join (greedy offloaded; BFS or adaptive BBFS).
 
     ``qid_offset`` shifts the emitted query ids — used by the streaming
     engine, where a batch of local queries carries global ids.
+    ``qstore`` quantizes the *merged* index (data + query nodes); pooled
+    survivors are re-ranked exactly before emission.
     """
     nq = X.shape[0]
     tcfg = cfg.traversal
@@ -281,10 +358,15 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
             node_ids = jnp.asarray(qids, jnp.int32) + n_data
             lv_j = jnp.asarray(lane_valid)
 
+            qx = xerr = None
+            if qstore is not None:
+                qx, _, xerr = quantize_queries(xw, qstore)
+
             t0 = time.perf_counter()
             rows, dist, valid, visited, n_new, best, besti = _mi_probe(
                 merged, xw, node_ids, lv_j,
-                traverse_nondata=hybrid, dist_impl=tcfg.dist_impl)
+                traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
+                quant=qstore, qx=qx, xerr=xerr)
             jax.block_until_ready(dist)
             stats.greedy_seconds += time.perf_counter() - t0
 
@@ -294,15 +376,22 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 hybrid=hybrid, traverse_nondata=hybrid,
                 init_idx=rows, init_dist=dist, init_valid=valid,
                 visited=visited, best_dist=best, best_idx=besti,
-                n_dist=n_new)
+                n_dist=n_new, quant=qstore, qx=qx, xerr=xerr)
             jax.block_until_ready(r.pool_idx)
             stats.expand_seconds += time.perf_counter() - t0
 
             t0 = time.perf_counter()
             lv = np.asarray(lane_valid)
-            all_pairs.append(collect_pairs(
-                qids + qid_offset, lv, np.asarray(r.pool_idx),
-                np.asarray(r.n_pool)))
+            pool_idx = np.asarray(r.pool_idx)
+            keep = pool_mask(lv, np.asarray(r.n_pool), pool_idx.shape[1])
+            if qstore is not None:
+                keep, _ = rerank_pool(merged.vecs, xw, pool_idx,
+                                      np.asarray(r.pool_dist), keep,
+                                      cfg.theta, stats,
+                                      dist_impl=tcfg.dist_impl,
+                                      qstore=qstore, xerr=xerr)
+            all_pairs.append(collect_pairs(qids + qid_offset, keep,
+                                           pool_idx))
             stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
             stats.n_iters += int(r.n_iters)
             stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())

@@ -8,7 +8,22 @@ Implementation selection:
 
 Wrappers pad inputs to block-divisible shapes and slice results back, with
 padding arranged so it can never contaminate results (padded data rows get
-+inf norms / +inf distances).
++inf norms / +inf distances). Padding covers *every* caller shape —
+including dimensions smaller than one block and empty inputs — for both
+the f32 and the int8 kernels: blocks are chosen per-dimension via
+``_grid_dim`` so the padded extent is always an exact multiple of the
+block actually used.
+
+The ``*_int8`` ops take QuantStore codes (per-dimension-group scaled int8,
+``repro.quant.store``) and return the *quantized-domain* squared distance
+``‖x̂ − ŷ‖²``. ``quant_lower_bound`` / ``quant_upper_bound`` convert it
+into certified bounds on the true distance from the exact per-vector
+quantization errors (triangle inequality):
+
+    ‖x − y‖ ∈ [ ‖x̂ − ŷ‖ − s,  ‖x̂ − ŷ‖ + s ],   s = ‖x−x̂‖ + ‖y−ŷ‖
+
+so a threshold test on the lower bound never rejects a true pair — the
+contract the filter-then-rerank join pipeline rests on.
 """
 from __future__ import annotations
 
@@ -18,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import distance as _distance
+from repro.kernels import int8 as _int8
 from repro.kernels import nlj as _nlj
 from repro.kernels import ref as _ref
 
@@ -32,6 +48,17 @@ def default_impl() -> str:
 
 def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
+
+
+def _grid_dim(n: int, default: int, align: int) -> tuple[int, int]:
+    """(padded_n, block) for one grid dimension, any n ≥ 1.
+
+    The block is the kernel default, shrunk (align-rounded) for small n,
+    so ``block | padded_n`` always holds and the kernel's divisibility
+    asserts can never fire on a wrapper-padded shape.
+    """
+    b = min(default, _round_up(n, align))
+    return _round_up(n, b), b
 
 
 def _pad_rows(a: Array, n: int, fill: float = 0.0) -> Array:
@@ -50,19 +77,23 @@ def _pad_axis(a: Array, n: int, axis: int, fill: float = 0.0) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# f32 kernels
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
 def pairwise_sq_dists(x: Array, y: Array, *, impl: str | None = None) -> Array:
     """(B, d) × (N, d) → (B, N) f32 squared L2 distances."""
     impl = impl or default_impl()
-    if impl == "ref":
-        return _ref.pairwise_sq_dists(x, y)
     B, d = x.shape
     N, _ = y.shape
-    bm, bn, bk = 256, 512, 512
-    Bp, Np, dp = _round_up(B, min(bm, _round_up(B, 8))), _round_up(
-        N, min(bn, _round_up(N, 128))), _round_up(d, min(bk, _round_up(d, 128)))
+    if B == 0 or N == 0 or d == 0:
+        return jnp.zeros((B, N), jnp.float32)
+    if impl == "ref":
+        return _ref.pairwise_sq_dists(x, y)
+    Bp, bm = _grid_dim(B, 256, 8)
+    Np, bn = _grid_dim(N, 512, 128)
+    dp, bk = _grid_dim(d, 512, 128)
     xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
     yp = _pad_axis(_pad_rows(y, Np), dp, axis=1)
     out = _distance.pairwise_sq_dists_pallas(
@@ -74,14 +105,15 @@ def pairwise_sq_dists(x: Array, y: Array, *, impl: str | None = None) -> Array:
 def rowwise_sq_dists(x: Array, cands: Array, *, impl: str | None = None) -> Array:
     """(B, d) × (B, K, d) → (B, K) f32 per-query candidate distances."""
     impl = impl or default_impl()
-    if impl == "ref":
-        return _ref.rowwise_sq_dists(x, cands)
     B, d = x.shape
     _, K, _ = cands.shape
-    bm, bkk, dk = 8, 128, 512
-    Bp = _round_up(B, min(bm, _round_up(B, 8)))
-    Kp = _round_up(K, min(bkk, _round_up(K, 128)))
-    dp = _round_up(d, min(dk, _round_up(d, 128)))
+    if B == 0 or K == 0 or d == 0:
+        return jnp.zeros((B, K), jnp.float32)
+    if impl == "ref":
+        return _ref.rowwise_sq_dists(x, cands)
+    Bp, bm = _grid_dim(B, 8, 8)
+    Kp, bkk = _grid_dim(K, 128, 128)
+    dp, dk = _grid_dim(d, 512, 128)
     xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
     cp = _pad_axis(_pad_axis(_pad_rows(cands, Bp), Kp, axis=1), dp, axis=2)
     out = _distance.rowwise_sq_dists_pallas(
@@ -94,14 +126,19 @@ def nlj_count(x: Array, y: Array, *, theta: float,
               impl: str | None = None) -> Array:
     """Exact per-query join counts |{j : dist(x_b, y_j) < theta}| → (B,) i32."""
     impl = impl or default_impl()
-    if impl == "ref":
-        return _ref.nlj_count(x, y, theta)
     B, d = x.shape
     N, _ = y.shape
-    bm, bn, bk = 256, 512, 512
-    Bp = _round_up(B, min(bm, _round_up(B, 8)))
-    Np = _round_up(N, min(bn, _round_up(N, 128)))
-    dp = _round_up(d, min(bk, _round_up(d, 128)))
+    if B == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if N == 0 or d == 0:
+        # d == 0: every distance is 0 < theta (for positive theta)
+        n = N if (d == 0 and theta > 0) else 0
+        return jnp.full((B,), n, jnp.int32)
+    if impl == "ref":
+        return _ref.nlj_count(x, y, theta)
+    Bp, bm = _grid_dim(B, 256, 8)
+    Np, bn = _grid_dim(N, 512, 128)
+    dp, bk = _grid_dim(d, 512, 128)
     xp = _pad_axis(_pad_rows(x, Bp), dp, axis=1)
     # Padded data rows: shift them far away so they never match. Padding the
     # *vector* with a huge coordinate inflates ‖y‖² to ~1e60 ≫ θ².
@@ -140,6 +177,9 @@ def gather_sq_dists(vecs: Array, x: Array, idx: Array, *,
     with the distance (ids scalar-prefetched; see kernels/gather_distance).
     """
     impl = impl or default_impl()
+    B, K = idx.shape
+    if B == 0 or K == 0:
+        return jnp.zeros((B, K), jnp.float32)
     valid = idx >= 0
     safe = jnp.where(valid, idx, 0)
     if impl == "ref":
@@ -149,3 +189,135 @@ def gather_sq_dists(vecs: Array, x: Array, idx: Array, *,
         d = _gd.gather_sq_dists_pallas(
             vecs, x, safe, interpret=(impl == "pallas_interpret"))
     return jnp.where(valid, d, jnp.float32(jnp.inf))
+
+
+# ---------------------------------------------------------------------------
+# int8 (QuantStore) kernels
+# ---------------------------------------------------------------------------
+
+
+def _pad_quant_dims(q: Array, scales: Array, group_size: int
+                    ) -> tuple[Array, Array]:
+    """Pad the dim axis to a whole number of groups (zero codes, unit
+    scales — padded dims contribute exactly 0 to every distance)."""
+    d = q.shape[-1]
+    dp = _round_up(max(d, 1), group_size)
+    q = _pad_axis(q, dp, axis=q.ndim - 1)
+    G = dp // group_size
+    scales = _pad_rows(scales.reshape(-1, 1).astype(jnp.float32), G,
+                       fill=1.0)[:, 0]
+    return q, scales
+
+
+def _dequant_norms(q: Array, scales: Array, group_size: int) -> Array:
+    """(N,) f32 squared norms of the dequantized rows, from codes."""
+    deq = _ref._dequant(q, scales, group_size)
+    return jnp.sum(deq * deq, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "impl"))
+def pairwise_sq_dists_int8(qx: Array, qy: Array, scales: Array, *,
+                           group_size: int = 128,
+                           xn: Array | None = None, yn: Array | None = None,
+                           impl: str | None = None) -> Array:
+    """(B, d) × (N, d) int8 → (B, N) f32 *quantized-domain* squared L2.
+
+    ``qx``/``qy`` must share the scale grid (queries quantized via
+    ``quant.store.quantize_queries``). ``xn``/``yn`` are the dequantized
+    squared norms; pass the QuantStore's stored norms to skip recompute.
+    """
+    impl = impl or default_impl()
+    B, d = qx.shape
+    N, _ = qy.shape
+    if B == 0 or N == 0 or d == 0:
+        return jnp.zeros((B, N), jnp.float32)
+    if impl == "ref":
+        return _ref.pairwise_sq_dists_int8(qx, qy, scales,
+                                           group_size=group_size)
+    if xn is None:
+        xn = _dequant_norms(qx, scales, group_size)
+    if yn is None:
+        yn = _dequant_norms(qy, scales, group_size)
+    qxp, sp = _pad_quant_dims(qx, scales, group_size)
+    qyp, _ = _pad_quant_dims(qy, scales, group_size)
+    Bp, bm = _grid_dim(B, 256, 32)
+    Np, bn = _grid_dim(N, 512, 128)
+    qxp = _pad_rows(qxp, Bp)
+    qyp = _pad_rows(qyp, Np)
+    xnp = _pad_rows(xn.reshape(B, 1), Bp)[:, 0]
+    ynp = _pad_rows(yn.reshape(N, 1), Np)[:, 0]
+    out = _int8.pairwise_sq_dists_int8_pallas(
+        qxp, qyp, sp, xnp, ynp, bm=bm, bn=bn, group_size=group_size,
+        interpret=(impl == "pallas_interpret"))
+    return out[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "impl"))
+def rowwise_sq_dists_int8(qx: Array, qcands: Array, scales: Array, *,
+                          group_size: int = 128,
+                          impl: str | None = None) -> Array:
+    """(B, d) × (B, K, d) int8 → (B, K) f32 quantized-domain squared L2.
+
+    Difference form — exact on a shared scale grid; the kernel moves d×1
+    bytes per candidate instead of the f32 path's d×4.
+    """
+    impl = impl or default_impl()
+    B, d = qx.shape
+    _, K, _ = qcands.shape
+    if B == 0 or K == 0 or d == 0:
+        return jnp.zeros((B, K), jnp.float32)
+    if impl == "ref":
+        return _ref.rowwise_sq_dists_int8(qx, qcands, scales,
+                                          group_size=group_size)
+    qxp, sp = _pad_quant_dims(qx, scales, group_size)
+    qcp, _ = _pad_quant_dims(qcands, scales, group_size)
+    Bp, bm = _grid_dim(B, 32, 32)
+    Kp, bkk = _grid_dim(K, 128, 128)
+    qxp = _pad_rows(qxp, Bp)
+    qcp = _pad_axis(_pad_rows(qcp, Bp), Kp, axis=1)
+    out = _int8.rowwise_sq_dists_int8_pallas(
+        qxp, qcp, sp, bm=bm, bkk=bkk, group_size=group_size,
+        interpret=(impl == "pallas_interpret"))
+    return out[:B, :K]
+
+
+# ---------------------------------------------------------------------------
+# quantization error → certified distance bounds (shared helper)
+# ---------------------------------------------------------------------------
+
+
+def quant_lower_bound(d_hat: Array, slack: Array) -> Array:
+    """Certified lower bound on the true squared distance.
+
+    ``d_hat`` is the quantized-domain squared distance ``‖x̂ − ŷ‖²``;
+    ``slack`` is the per-pair L2 slack ``‖x−x̂‖ + ‖y−ŷ‖`` (exact errors,
+    not bounds). By the triangle inequality
+    ``‖x−y‖ ≥ ‖x̂−ŷ‖ − slack``, so a threshold test
+    ``quant_lower_bound(d̂, s) < θ²`` accepts every pair the exact test
+    accepts — the filter side of filter-then-rerank. +inf d_hat stays
+    +inf (masked candidates)."""
+    lb = jnp.maximum(jnp.sqrt(jnp.maximum(d_hat, 0.0)) - slack, 0.0)
+    return jnp.where(jnp.isfinite(d_hat), lb * lb, d_hat)
+
+
+def quant_upper_bound(d_hat: Array, slack: Array) -> Array:
+    """Certified upper bound on the true squared distance (symmetric to
+    ``quant_lower_bound``; used by tests and early-accept heuristics)."""
+    ub = jnp.sqrt(jnp.maximum(d_hat, 0.0)) + slack
+    return jnp.where(jnp.isfinite(d_hat), ub * ub, d_hat)
+
+
+def quant_band_from_lb(lb: Array, slack: Array, th2) -> tuple[Array, Array]:
+    """Partition lower-bound-filtered candidates into (sure, ambiguous).
+
+    ``lb`` is a certified lower bound (``quant_lower_bound`` output,
+    e.g. the traversal's pooled distances); ``slack`` the per-pair L2
+    slack. Since ``√lb + 2·slack ≥ √d̂ + slack``, the matching upper
+    bound is ``quant_upper_bound(lb, 2·slack)`` — looser only where the
+    lower bound was clamped to 0, which stays sound. ``sure`` entries
+    are certified true pairs (no re-rank needed); ``ambiguous`` entries
+    need the exact kernel. The single source of the band arithmetic for
+    the host, shard_map, and NLJ re-rank paths."""
+    ub = quant_upper_bound(lb, 2.0 * slack)
+    sure = ub < th2
+    return sure, ~sure

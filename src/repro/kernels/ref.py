@@ -62,6 +62,32 @@ def nlj_mask(x: Array, y: Array, theta: float) -> Array:
     return d < jnp.float32(theta) ** 2
 
 
+def _dequant(q: Array, scales: Array, group_size: int) -> Array:
+    """int8 codes on a per-dimension-group scale grid → f32 vectors
+    (delegates to the store's single dequantization definition)."""
+    from repro.quant.store import dequantize
+    return dequantize(q, scales, group_size)
+
+
+def pairwise_sq_dists_int8(qx: Array, qy: Array, scales: Array, *,
+                           group_size: int = 128) -> Array:
+    """Quantized-domain pairwise squared L2: ``‖x̂ − ŷ‖²`` via dequantize.
+
+    The Pallas kernel computes the same quantity in the int domain
+    (int8×int8 dots scaled per group); both equal the true distance
+    between the *dequantized* vectors up to f32 rounding.
+    """
+    return pairwise_sq_dists(_dequant(qx, scales, group_size),
+                             _dequant(qy, scales, group_size))
+
+
+def rowwise_sq_dists_int8(qx: Array, qcands: Array, scales: Array, *,
+                          group_size: int = 128) -> Array:
+    """Quantized-domain rowwise squared L2 over gathered candidates."""
+    return rowwise_sq_dists(_dequant(qx, scales, group_size),
+                            _dequant(qcands, scales, group_size))
+
+
 def topk_merge(beam_dist: Array, beam_idx: Array, cand_dist: Array,
                cand_idx: Array) -> tuple[Array, Array]:
     """Merge a sorted beam with new candidates, keep the L smallest.

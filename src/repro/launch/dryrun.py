@@ -256,14 +256,15 @@ def run_join_cell(name: str, *, multi_pod: bool = False,
         mean_nbr_dist=jax.ShapeDtypeStruct((n_shards, m_total), jnp.float32),
         shard_size=cell.n_data // n_shards, n_query=cell.n_query)
     tcfg = TraversalConfig(pool_cap=cell.pool_cap, max_iters=cell.max_iters)
-    step = make_distributed_mi_join(mesh, shard_axes, smi_shape, theta=1.0,
-                                    cfg=tcfg, hybrid=cell.hybrid)
+    step, qargs = make_distributed_mi_join(mesh, shard_axes, smi_shape,
+                                           theta=1.0, cfg=tcfg,
+                                           hybrid=cell.hybrid)
     xw = jax.ShapeDtypeStruct((cell.wave_size, cell.dim), vdtype)
     qids = jax.ShapeDtypeStruct((cell.wave_size,), jnp.int32)
     lv = jax.ShapeDtypeStruct((cell.wave_size,), jnp.bool_)
     t0 = time.time()
     lowered = step.lower(smi_shape.vecs, smi_shape.nbrs,
-                         smi_shape.mean_nbr_dist, smi_shape.start,
+                         smi_shape.mean_nbr_dist, smi_shape.start, *qargs,
                          xw, qids, lv)
     compiled = lowered.compile()
     t_compile = time.time() - t0

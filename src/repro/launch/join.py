@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from repro.configs.vectorjoin import make_engine, preset
+from repro.configs.vectorjoin import ENGINE_PRESETS, make_engine, preset
 from repro.core import exact_join_pairs
 from repro.core.types import METHODS
 from repro.data.vectors import make_dataset, thresholds
@@ -36,9 +36,14 @@ def main(argv=None) -> int:
     ap.add_argument("--theta-q", type=int, default=1,
                     help="1-based index into the 7 Table-2-style thresholds")
     ap.add_argument("--wave", type=int, default=256)
+    ap.add_argument("--quant", choices=("off", "sq8"), default=None,
+                    help="compressed storage: traverse int8 QuantStore "
+                         "codes, re-rank survivors with exact f32 "
+                         "(default: the engine spec's quant mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine-spec", default="default",
-                    help="EngineSpec preset (default|ci|serving)")
+                    help="EngineSpec preset "
+                         "(default|ci|serving|serving_sq8)")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the data side over N local devices (MI "
                          "methods); 0 = one shard per device")
@@ -56,8 +61,11 @@ def main(argv=None) -> int:
                       dim=args.dim, seed=args.seed)
     grid = [float(t) for t in thresholds(ds, 7)]
     theta = args.theta or grid[args.theta_q - 1]
+    # --quant wins; otherwise inherit the engine spec's mode (so
+    # --engine-spec serving_sq8 actually serves compressed)
+    quant = args.quant or ENGINE_PRESETS[args.engine_spec].quant
     cfg = preset(args.method, theta=theta)
-    cfg = dataclasses.replace(cfg, wave_size=args.wave)
+    cfg = dataclasses.replace(cfg, wave_size=args.wave, quant=quant)
 
     n_shards = 0 if args.distributed else args.shards
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
@@ -66,7 +74,7 @@ def main(argv=None) -> int:
         ap.error("--stream runs single-device; drop --shards/--distributed")
     print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
           f"dim={args.dim} θ={theta:.4f} method={args.method} "
-          f"shards={eng.n_shards}")
+          f"shards={eng.n_shards} quant={quant}")
 
     t0 = time.perf_counter()
     if args.stream:
@@ -80,9 +88,12 @@ def main(argv=None) -> int:
     else:
         res = eng.join(ds.X, cfg)
         dt = time.perf_counter() - t0
+        extra = (f", rerank={res.stats.n_rerank}, "
+                 f"quant_bytes={res.stats.quant_bytes}"
+                 if quant != "off" else "")
         print(f"[join] {len(res.pairs)} pairs in {dt:.2f}s "
               f"(n_dist={res.stats.n_dist}, ood={res.stats.n_ood}, "
-              f"builds={eng.n_index_builds})")
+              f"builds={eng.n_index_builds}{extra})")
         pairs = res.pairs
 
     if args.sweep:

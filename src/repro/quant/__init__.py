@@ -1,0 +1,21 @@
+"""Compressed vector storage (int8) with certified re-rank bounds.
+
+``QuantStore`` is the offline artifact (built once alongside the graph
+index); ``kernels/int8.py`` computes quantized-domain distances;
+``kernels/ops.quant_lower_bound`` converts them into certified bounds the
+filter-then-rerank join pipeline filters on. See docs/ARCHITECTURE.md
+§"Quantized storage & re-rank".
+"""
+from repro.quant.store import (DEFAULT_GROUP_SIZE, QuantStore, build_store,
+                               dequantize, dim_scales, quantize_on_grid,
+                               quantize_queries)
+
+__all__ = [
+    "DEFAULT_GROUP_SIZE",
+    "QuantStore",
+    "build_store",
+    "dequantize",
+    "dim_scales",
+    "quantize_on_grid",
+    "quantize_queries",
+]

@@ -1,0 +1,149 @@
+"""QuantStore — PDX-style compressed vector storage for the join's hot spot.
+
+The distance computation (paper C4) is memory-bound on the traversal path:
+every gathered candidate row moves d×4 bytes of f32 through HBM. A
+``QuantStore`` holds the same vectors as per-dimension-group scaled int8
+(symmetric, round-to-nearest), cutting the bytes moved per distance to
+d×1 — plus the exact per-vector metadata that makes the compression *safe*
+for a threshold join:
+
+  * ``scales``  — one f32 dequantization scale per group of
+    ``group_size`` consecutive dimensions (PDX's dimension-partitioned
+    blocks: per-group ranges adapt to anisotropic embeddings, and the
+    group width matches the TPU lane tile so a group is one kernel
+    k-step).
+  * ``norms``   — f32 squared norms of the *dequantized* rows, so the
+    matmul-form distance identity is exact in the quantized domain.
+  * ``err``     — the exact L2 quantization error ``‖y − ŷ‖`` per row
+    (not a bound: computed at build time), which converts quantized
+    distances into certified bounds on true distances via the triangle
+    inequality (see ``ops.quant_lower_bound``).
+
+Queries are quantized on the *store's* scale grid (``quantize_queries``),
+so quantized squared distances can be computed entirely in the int8
+domain; the query-side error is likewise exact per query, clipping
+included. The filter-then-rerank pipeline in ``engine/waves.py`` runs
+traversal and threshold tests on certified lower bounds (a superset
+filter) and re-ranks survivors with the exact f32 kernel, so emitted
+pairs satisfy ``‖x − y‖ < θ`` exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Lane-tile-width dimension groups: one group = one k-step of the int8
+# kernels, and the per-group scale is a scalar fetch per step.
+DEFAULT_GROUP_SIZE = 128
+
+_EPS = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantStore:
+    """Compressed companion of a vector table (or ``GraphIndex.vecs``)."""
+    q: Array                # (N, d) int8 quantized vectors
+    scales: Array           # (G,) f32 per-dimension-group dequant scales
+    norms: Array            # (N,) f32 squared norms of dequantized rows
+    err: Array              # (N,) f32 exact L2 quantization error per row
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_vectors(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.q.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes resident for the quantized artifact (reported by the
+        engine as its bytes-resident footprint)."""
+        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in (self.q, self.scales, self.norms, self.err))
+
+
+def n_groups(d: int, group_size: int = DEFAULT_GROUP_SIZE) -> int:
+    return -(-d // group_size)
+
+
+def dim_scales(scales: Array, d: int, group_size: int) -> Array:
+    """Expand per-group scales to a per-dimension (d,) vector."""
+    sd = jnp.repeat(scales, group_size)
+    return sd[:d]
+
+
+def build_store(vecs, *, group_size: int = DEFAULT_GROUP_SIZE,
+                scale_rows=None) -> QuantStore:
+    """Quantize a vector table once (index-build time, offline phase).
+
+    ``scale_rows`` optionally masks which rows contribute to the
+    per-group scale statistics (all rows by default). Rows outside the
+    mask are still quantized — they clip, which stays sound because
+    ``err`` records the exact residual — but cannot inflate the grid.
+    Used by the sharded path to keep far-away sentinel pad rows from
+    poisoning a shard's scales.
+    """
+    v = jnp.asarray(vecs, jnp.float32)
+    _, d = v.shape
+    G = n_groups(d, group_size)
+    pad = G * group_size - d
+    vp = jnp.pad(v, ((0, 0), (0, pad))) if pad else v
+    src = vp
+    if scale_rows is not None:
+        scale_rows = np.asarray(scale_rows, bool)
+        if scale_rows.any():
+            src = vp[jnp.asarray(np.flatnonzero(scale_rows))]
+    grouped = src.reshape(src.shape[0], G, group_size)
+    scales = jnp.maximum(jnp.max(jnp.abs(grouped), axis=(0, 2)) / 127.0,
+                         _EPS).astype(jnp.float32)
+    sd = dim_scales(scales, d, group_size)
+    q, norms, err = quantize_on_grid(v, sd)
+    return QuantStore(q=q, scales=scales, norms=norms, err=err,
+                      group_size=group_size)
+
+
+@jax.jit
+def quantize_on_grid(x: Array, sd: Array) -> tuple[Array, Array, Array]:
+    """Quantize rows on an existing scale grid (``sd`` = per-dim scales,
+    from ``dim_scales``).
+
+    The single definition of the code scheme — store build, query
+    quantization, and the sharded in-shard path all route through it, so
+    the certified bounds can never diverge between producers.
+
+    Returns ``(q, norms, err)``: int8 codes, dequantized squared norms,
+    and the *exact* per-row L2 error (clipping included).
+    """
+    q = jnp.clip(jnp.round(x / sd), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * sd
+    norms = jnp.sum(deq * deq, axis=1)
+    resid = x - deq
+    err = jnp.sqrt(jnp.sum(resid * resid, axis=1))
+    return q, norms, err
+
+
+def quantize_queries(x, store: QuantStore) -> tuple[Array, Array, Array]:
+    """Quantize queries on the store's scale grid.
+
+    Returns ``(q, norms, err)``: int8 codes, dequantized squared norms,
+    and the *exact* per-query L2 error (clipping included) — the
+    query-side term of the per-pair distance slack.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    sd = dim_scales(store.scales, x.shape[1], store.group_size)
+    return quantize_on_grid(x, sd)
+
+
+def dequantize(q: Array, scales: Array, group_size: int) -> Array:
+    """int8 codes → f32 vectors (the reference-path decompression).
+    Works for any leading shape — the dim axis is the last one."""
+    sd = dim_scales(scales, q.shape[-1], group_size)
+    return q.astype(jnp.float32) * sd

@@ -110,6 +110,47 @@ def test_adopted_indexes_count_no_builds(ds_manifold, index_y, index_x,
     assert eng.n_index_builds == 0
 
 
+def test_fingerprint_large_array_fast_and_distinct():
+    """The artifact-cache fingerprint hashes a fixed-size strided sample,
+    so keying a large array costs ~the same as a small one (the old
+    full-SHA1 was O(N·d) host work per submit/join) while distinct vector
+    sets still get distinct keys."""
+    import time
+
+    from repro.engine.engine import _fingerprint
+
+    rng = np.random.default_rng(0)
+    big1 = rng.normal(size=(16_384, 1024)).astype(np.float32)   # 64 MiB
+    big2 = rng.normal(size=(16_384, 1024)).astype(np.float32)
+    assert _fingerprint(big1) != _fingerprint(big2)
+    assert _fingerprint(big1) == _fingerprint(big1.copy())
+    # shape participates even when the bytes agree
+    assert _fingerprint(big1.reshape(32_768, 512)) != _fingerprint(big1)
+    small = rng.normal(size=(8, 4)).astype(np.float32)
+    assert _fingerprint(small) != _fingerprint(small + 1.0)
+    # stride must not alias the f32 byte layout: doubling values only
+    # changes exponent bytes, which an even stride would never sample
+    ones = np.ones((16_384, 1024), np.float32)
+    doubled = ones.copy()
+    doubled[1000:15000] *= 2
+    assert _fingerprint(ones) != _fingerprint(doubled)
+
+    best_small = min(_timed(_fingerprint, small, time) for _ in range(5))
+    best_big = min(_timed(_fingerprint, big1, time) for _ in range(5))
+    # O(sample), not O(N·d): sub-millisecond on target hardware. The
+    # relative bound keeps a loaded CI runner from flaking (both timings
+    # scale together); the absolute ceiling still rules out the old
+    # full-content hash (~100 ms for 64 MiB).
+    assert best_big < max(2e-3, 30 * best_small), (best_big, best_small)
+    assert best_big < 2e-2, f"fingerprint took {best_big * 1e3:.2f} ms"
+
+
+def _timed(fn, arg, time):
+    t0 = time.perf_counter()
+    fn(arg)
+    return time.perf_counter() - t0
+
+
 _SHARD_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
@@ -118,7 +159,10 @@ _SHARD_SCRIPT = textwrap.dedent("""
     from repro.data.vectors import make_dataset, thresholds
     from repro.engine import JoinEngine
 
-    ds = make_dataset("manifold", n_data=1500, n_query=64, dim=24, seed=13)
+    # 1501 % 2 != 0: the last shard carries a far-away sentinel pad row,
+    # which must not poison the sq8 scale grid (regression: scales were
+    # computed over sentinels, collapsing every real code to zero)
+    ds = make_dataset("manifold", n_data=1501, n_query=64, dim=24, seed=13)
     ths = [float(t) for t in thresholds(ds, 7)]
     tc = TraversalConfig(beam_width=128, expand_per_iter=8, patience=50,
                          pool_cap=1024, hybrid_beam=128, seeds_max=8,
@@ -136,8 +180,16 @@ _SHARD_SCRIPT = textwrap.dedent("""
         assert len(truth) > 0
         assert not (s2 - truth), "sharded join fabricated pairs"
         assert s1 == s2, (ti, len(s1 ^ s2))
-    # the sharded index was built once and reused for both thresholds
+        # sharded sq8: per-shard int8 filter + in-shard exact re-rank
+        # must emit the identical pair set
+        import dataclasses as _dc
+        r8 = e2.join(ds.X, _dc.replace(cfg, quant="sq8"))
+        assert r8.pair_set() == s2, (ti, len(r8.pair_set() ^ s2))
+        assert r8.stats.quant_bytes > 0
+    # the sharded index was built once and reused for both thresholds;
+    # so was its quantized companion
     assert e2.build_counts["sharded"] == 1, e2.build_counts
+    assert e2.build_counts["quant"] == 1, e2.build_counts
     print("ENGINE_SHARDED_OK")
 """)
 

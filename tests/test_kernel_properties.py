@@ -75,6 +75,65 @@ def test_topk_merge_pallas_matches_oracle(L, K, B, seed):
         np.sort(np.where(fin, np.asarray(pi_), -2), axis=1))
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 64), st.integers(1, 96),
+       st.sampled_from([8, 16, 64, 128]), st.integers(0, 2**31 - 1))
+def test_int8_distance_within_analytic_bound(B, N, d, gs, seed):
+    """Property sweep for the sq8 kernels: on arbitrary shapes and scale
+    grids, (1) the Pallas int8 kernel matches the dequantize oracle, and
+    (2) the certified bounds computed from the exact per-vector errors
+    bracket the true f32 distance — the analytic error bound the
+    filter-then-rerank pipeline relies on."""
+    from repro.quant import build_store, quantize_queries
+
+    rng = np.random.default_rng(seed)
+    scale = float(rng.uniform(0.1, 10.0))          # exercise the scale grid
+    Y = (rng.normal(size=(N, d)) * scale).astype(np.float32)
+    X = (rng.normal(size=(B, d)) * scale).astype(np.float32)
+    st_ = build_store(Y, group_size=gs)
+    qx, xn, xe = quantize_queries(X, st_)
+    got = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, st_.q, st_.scales, group_size=gs, xn=xn, yn=st_.norms,
+        impl="pallas_interpret"))
+    want = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, st_.q, st_.scales, group_size=gs, impl="ref"))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-3 * scale ** 2)
+
+    true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X), jnp.asarray(Y)))
+    slack = jnp.asarray(np.asarray(xe)[:, None]
+                        + np.asarray(st_.err)[None, :])
+    lb = np.asarray(ops.quant_lower_bound(jnp.asarray(got), slack))
+    ub = np.asarray(ops.quant_upper_bound(jnp.asarray(got), slack))
+    tol = 1e-4 * max(d, 1) * scale ** 2
+    assert (lb <= true + tol).all()
+    assert (ub >= true - tol).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 48), st.integers(1, 80),
+       st.sampled_from([8, 32, 128]), st.integers(0, 2**31 - 1))
+def test_int8_rowwise_matches_pairwise_gather(B, K, d, gs, seed):
+    """Rowwise (difference-form) and pairwise (dot-form) int8 kernels
+    agree on gathered candidates — the two quantized-domain formulations
+    compute the same d̂."""
+    from repro.quant import build_store, quantize_queries
+
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(K + 1, K + 128))
+    Y = rng.normal(size=(N, d)).astype(np.float32)
+    st_ = build_store(Y, group_size=gs)
+    qx, _, _ = quantize_queries(rng.normal(size=(B, d)).astype(np.float32),
+                                st_)
+    idx = rng.integers(0, N, (B, K))
+    qc = jnp.asarray(np.asarray(st_.q)[idx])
+    row = np.asarray(ops.rowwise_sq_dists_int8(
+        qx, qc, st_.scales, group_size=gs, impl="pallas_interpret"))
+    pw = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, st_.q, st_.scales, group_size=gs, impl="pallas_interpret"))
+    assert_allclose(row, pw[np.arange(B)[:, None], idx], rtol=1e-4,
+                    atol=1e-3)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 5), st.integers(1, 64), st.integers(16, 96),
        st.integers(0, 2**31 - 1))

@@ -58,3 +58,114 @@ def test_nlj_padding_never_matches():
     y = jnp.asarray(rng.normal(size=(130, 33)), jnp.float32)
     got = ops.nlj_count(x, y, theta=1e6, impl="pallas_interpret")
     np.testing.assert_array_equal(np.asarray(got), np.full(3, 130))
+
+
+# ---------------------------------------------------------------------------
+# padding coverage: every user-facing shape must route through the kernels
+# without tripping the block-divisibility asserts — including dimensions
+# smaller than one block and empty inputs
+# ---------------------------------------------------------------------------
+
+AWKWARD_PAIRWISE = [
+    (1, 1, 1), (9, 1, 1), (1, 700, 3), (40, 520, 640), (12, 96, 192),
+    (0, 5, 4), (5, 0, 4), (2, 3, 0),
+]
+
+
+@pytest.mark.parametrize("B,N,d", AWKWARD_PAIRWISE)
+def test_pairwise_padding_covers_all_shapes(B, N, d):
+    rng = np.random.default_rng(B * 1000 + N * 10 + d)
+    x = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    got = np.asarray(ops.pairwise_sq_dists(x, y, impl="pallas_interpret"))
+    assert got.shape == (B, N)
+    if B and N and d:
+        assert_allclose(got, np.asarray(ref.pairwise_sq_dists(x, y)),
+                        rtol=1e-5, atol=1e-4)
+    else:
+        assert_allclose(got, np.zeros((B, N), np.float32))
+
+
+@pytest.mark.parametrize("B,K,d", [
+    (1, 1, 1), (3, 5, 7), (12, 1, 520), (33, 257, 129),
+    (0, 4, 8), (4, 0, 8), (2, 130, 0)])
+def test_rowwise_padding_covers_all_shapes(B, K, d):
+    rng = np.random.default_rng(B * 1000 + K * 10 + d)
+    x = jnp.asarray(rng.normal(size=(B, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, K, d)), jnp.float32)
+    got = np.asarray(ops.rowwise_sq_dists(x, c, impl="pallas_interpret"))
+    assert got.shape == (B, K)
+    if B and K and d:
+        assert_allclose(got, np.asarray(ref.rowwise_sq_dists(x, c)),
+                        rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 (QuantStore) kernels: interpret-mode Pallas vs dequantize-oracle,
+# and certified bounds vs the true f32 distance
+# ---------------------------------------------------------------------------
+
+SHAPES_INT8 = [
+    # (B, N, d, group_size) — ragged d / small groups / B below a sublane
+    (8, 128, 32, 16), (10, 130, 48, 16), (3, 77, 200, 128), (16, 256, 64, 64),
+]
+
+
+def _store(rng, N, d, gs):
+    from repro.quant import build_store
+    Y = rng.normal(size=(N, d)).astype(np.float32)
+    return Y, build_store(Y, group_size=gs)
+
+
+@pytest.mark.parametrize("B,N,d,gs", SHAPES_INT8)
+def test_pairwise_int8_pallas_matches_ref(B, N, d, gs):
+    from repro.quant import quantize_queries
+    rng = np.random.default_rng(B * N + d)
+    Y, st = _store(rng, N, d, gs)
+    qx, xn, _ = quantize_queries(rng.normal(size=(B, d)).astype(np.float32),
+                                 st)
+    want = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, st.q, st.scales, group_size=gs, impl="ref"))
+    got = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, st.q, st.scales, group_size=gs, xn=xn, yn=st.norms,
+        impl="pallas_interpret"))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,K,d,gs", [
+    (8, 128, 32, 16), (4, 96, 64, 64), (5, 33, 200, 128), (33, 7, 129, 128)])
+def test_rowwise_int8_pallas_matches_ref(B, K, d, gs):
+    from repro.quant import quantize_queries
+    rng = np.random.default_rng(B * K + d)
+    Y, st = _store(rng, max(K * 2, 64), d, gs)
+    qx, _, _ = quantize_queries(rng.normal(size=(B, d)).astype(np.float32),
+                                st)
+    idx = rng.integers(0, Y.shape[0], (B, K))
+    qc = jnp.asarray(np.asarray(st.q)[idx])
+    want = np.asarray(ops.rowwise_sq_dists_int8(
+        qx, qc, st.scales, group_size=gs, impl="ref"))
+    got = np.asarray(ops.rowwise_sq_dists_int8(
+        qx, qc, st.scales, group_size=gs, impl="pallas_interpret"))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,N,d,gs", SHAPES_INT8)
+def test_int8_bounds_bracket_f32_distance(B, N, d, gs):
+    """The analytic error bound: quantized distance ± slack brackets the
+    exact f32 distance for every pair."""
+    from repro.quant import quantize_queries
+    rng = np.random.default_rng(d * 7 + B)
+    Y, st = _store(rng, N, d, gs)
+    X = rng.normal(size=(B, d)).astype(np.float32)
+    qx, xn, xe = quantize_queries(X, st)
+    dhat = ops.pairwise_sq_dists_int8(
+        qx, st.q, st.scales, group_size=gs, xn=xn, yn=st.norms,
+        impl="pallas_interpret")
+    slack = jnp.asarray(np.asarray(xe)[:, None]
+                        + np.asarray(st.err)[None, :])
+    true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X), jnp.asarray(Y)))
+    lb = np.asarray(ops.quant_lower_bound(dhat, slack))
+    ub = np.asarray(ops.quant_upper_bound(dhat, slack))
+    tol = 1e-3 * max(d, 1)
+    assert (lb <= true + tol).all()
+    assert (ub >= true - tol).all()

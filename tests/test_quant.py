@@ -1,0 +1,217 @@
+"""QuantStore subsystem end-to-end: certified distance bounds, the exact
+re-rank guarantee of the sq8 filter-then-rerank pipeline, engine-side
+artifact caching, and the bytes-moved win on high-dim data."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import JoinConfig, TraversalConfig, exact_join_pairs
+from repro.core.join import quant_join_pairs
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
+from repro.kernels import ops, ref
+from repro.quant import build_store, dequantize, quantize_queries
+
+TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                     hybrid_beam=64, seeds_max=8, max_iters=2048)
+BK = dict(k=24, degree=12)
+
+
+def _cfg(method, theta, quant="off", wave=64):
+    return JoinConfig(method=method, theta=theta, traversal=TC,
+                      wave_size=wave, quant=quant)
+
+
+@pytest.fixture(scope="module")
+def engine(ds_manifold):
+    return JoinEngine(ds_manifold.Y, build_kw=BK)
+
+
+@pytest.fixture(scope="module")
+def store(ds_manifold):
+    return build_store(ds_manifold.Y, group_size=16)
+
+
+# -- store construction -----------------------------------------------------
+
+
+def test_store_roundtrip_error_is_exact(ds_manifold, store):
+    """Dequantization error per coordinate ≤ half a scale step; the stored
+    per-row ``err`` equals the actual residual norm; stored ``norms`` are
+    the dequantized rows' squared norms."""
+    Y = ds_manifold.Y
+    deq = np.asarray(dequantize(store.q, store.scales, store.group_size))
+    sd = np.repeat(np.asarray(store.scales), store.group_size)[:Y.shape[1]]
+    assert (np.abs(Y - deq) <= 0.5 * sd[None, :] + 1e-7).all()
+    np.testing.assert_allclose(
+        np.asarray(store.err), np.linalg.norm(Y - deq, axis=1),
+        rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(store.norms), (deq * deq).sum(axis=1),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_bounds_bracket_true_distance(ds_manifold, store):
+    X = ds_manifold.X[:32]
+    qx, xn, xe = quantize_queries(X, store)
+    dhat = ops.pairwise_sq_dists_int8(
+        qx, store.q, store.scales, group_size=store.group_size, impl="ref")
+    slack = np.asarray(xe)[:, None] + np.asarray(store.err)[None, :]
+    true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X),
+                                            jnp.asarray(ds_manifold.Y)))
+    lb = np.asarray(ops.quant_lower_bound(dhat, jnp.asarray(slack)))
+    ub = np.asarray(ops.quant_upper_bound(dhat, jnp.asarray(slack)))
+    assert (lb <= true + 1e-3).all()
+    assert (ub >= true - 1e-3).all()
+
+
+# -- exact NLJ through the filter -------------------------------------------
+
+
+def test_quant_join_pairs_equals_exact(ds_manifold, store, theta_mid,
+                                       truth_mid):
+    pairs, n_rerank = quant_join_pairs(ds_manifold.X, ds_manifold.Y,
+                                       theta_mid, store)
+    got = set(map(tuple, pairs.tolist()))
+    want = set(map(tuple, truth_mid.tolist()))
+    assert got == want
+    # only the ambiguous band needs f32: far fewer re-ranks than |X|·|Y|,
+    # and typically far fewer than the join size itself
+    assert 0 <= n_rerank < ds_manifold.X.shape[0] * \
+        ds_manifold.Y.shape[0] // 4
+
+
+def test_engine_nlj_quant_equals_exact(ds_manifold, engine, theta_mid,
+                                       truth_mid):
+    r = engine.join(ds_manifold.X, _cfg("nlj", theta_mid, quant="sq8"))
+    assert r.pair_set() == set(map(tuple, truth_mid.tolist()))
+    assert r.stats.quant_bytes > 0
+
+
+# -- the exact re-rank guarantee on the traversal pipeline ------------------
+
+
+@pytest.mark.parametrize("method", ["es_mi", "es_mi_adapt"])
+def test_sq8_pipeline_identical_pair_set(ds_manifold, engine, method):
+    """At a search budget where the f32 pipeline reaches full recall, the
+    sq8 pipeline emits the *identical* pair set: the lower-bound filter
+    pools a superset and the exact re-rank trims it to the true
+    predicate."""
+    theta = float(thresholds(ds_manifold, 3)[0])
+    truth = set(map(tuple, exact_join_pairs(ds_manifold.X, ds_manifold.Y,
+                                            theta).tolist()))
+    assert len(truth) > 0
+    r32 = engine.join(ds_manifold.X, _cfg(method, theta))
+    # precondition: this budget recovers every true pair on f32
+    assert r32.pair_set() == truth
+    r8 = engine.join(ds_manifold.X, _cfg(method, theta, quant="sq8"))
+    assert r8.pair_set() == r32.pair_set()
+    assert r8.stats.quant_bytes > 0
+
+
+@pytest.mark.parametrize("method", ["es_mi", "es_mi_adapt"])
+def test_sq8_pipeline_sound_superset(ds_manifold, engine, method,
+                                     theta_mid, truth_mid):
+    """At any θ the MI sq8 pipeline is sound (exact re-rank) and finds at
+    least what f32 finds: same seeds, and the certified-lower-bound BFS
+    frontier dominates the f32 frontier. (The superset guarantee is per
+    pool capacity — band candidates share the f32 pool's pool_cap — so
+    assert no overflow occurred as the precondition.)"""
+    truth = set(map(tuple, truth_mid.tolist()))
+    p32 = engine.join(ds_manifold.X, _cfg(method, theta_mid)).pair_set()
+    r8 = engine.join(ds_manifold.X, _cfg(method, theta_mid, quant="sq8"))
+    assert r8.stats.n_overflow == 0
+    p8 = r8.pair_set()
+    assert not (p8 - truth), "sq8 emitted a pair failing the exact predicate"
+    assert p32 <= p8
+
+
+@pytest.mark.parametrize("method", ["es", "es_sws", "es_hws"])
+def test_sq8_search_path_sound(ds_manifold, engine, method, theta_mid,
+                               truth_mid):
+    """Greedy-path methods under sq8: beam ordering may diverge from f32
+    (bounds reorder ties) so sets can differ, but soundness and recall
+    must hold."""
+    truth = set(map(tuple, truth_mid.tolist()))
+    r8 = engine.join(ds_manifold.X, _cfg(method, theta_mid, quant="sq8"))
+    p8 = r8.pair_set()
+    assert not (p8 - truth)
+    assert len(p8 & truth) / max(len(truth), 1) >= 0.85
+
+
+def test_sq8_ood_dataset_sound(ds_ood):
+    """OOD queries run the *bounded* hybrid BBFS, where lower-bound
+    reordering can evict different out-range beam entries than f32 — so
+    the guarantee here is soundness + comparable recall, not superset
+    (that holds only for the exhaustive BFS pool, tested above)."""
+    eng = JoinEngine(ds_ood.Y, build_kw=BK)
+    theta = float(thresholds(ds_ood, 3)[1])
+    truth = set(map(tuple,
+                    exact_join_pairs(ds_ood.X, ds_ood.Y, theta).tolist()))
+    p32 = eng.join(ds_ood.X, _cfg("es_mi_adapt", theta)).pair_set()
+    p8 = eng.join(ds_ood.X,
+                  _cfg("es_mi_adapt", theta, quant="sq8")).pair_set()
+    assert not (p8 - truth)
+    rec32 = len(p32 & truth) / max(len(truth), 1)
+    rec8 = len(p8 & truth) / max(len(truth), 1)
+    assert rec8 >= 0.9 * rec32, (rec8, rec32)
+
+
+# -- engine lifecycle -------------------------------------------------------
+
+
+def test_quant_store_built_once(ds_manifold, theta_mid):
+    eng = JoinEngine(ds_manifold.Y, build_kw=BK)
+    ths = [float(t) for t in thresholds(ds_manifold, 3)[:2]]
+    eng.sweep(ds_manifold.X, ths, _cfg("es_mi", 1.0, quant="sq8"))
+    assert eng.build_counts["quant"] == 1, eng.build_counts
+    assert eng.build_counts["merged"] == 1
+    # a different artifact (G_Y for the search path) gets its own store
+    eng.join(ds_manifold.X, _cfg("es", theta_mid, quant="sq8"))
+    assert eng.build_counts["quant"] == 2
+    # reuse across repeat joins
+    eng.join(ds_manifold.X, _cfg("es", theta_mid, quant="sq8"))
+    assert eng.build_counts["quant"] == 2
+
+
+def test_streaming_submit_sq8_sound(ds_manifold, theta_mid, truth_mid):
+    eng = JoinEngine(ds_manifold.Y, build_kw=BK)
+    cfg = _cfg("es_sws", theta_mid, quant="sq8", wave=32)
+    truth = set(map(tuple, truth_mid.tolist()))
+    got = set()
+    for b0 in range(0, ds_manifold.X.shape[0], 48):
+        r = eng.submit(ds_manifold.X[b0:b0 + 48], cfg)
+        got |= r.pair_set()
+    assert not (got - truth)
+    assert len(got & truth) / max(len(truth), 1) >= 0.85
+
+
+# -- bytes moved on high-dim data (the point of the subsystem) --------------
+
+
+@pytest.mark.slow
+def test_sq8_bytes_at_most_40pct_of_f32_high_dim():
+    """On a d≥256 dataset the sq8 distance path moves ≤ 40% of the f32
+    path's bytes (d×1 filter + sparse d×4 re-rank vs d×4 everywhere) —
+    the bench_breakdown.run_quant bytes model, asserted end-to-end."""
+    ds = make_dataset("manifold", n_data=3000, n_query=96, dim=256, seed=3)
+    theta = float(thresholds(ds, 3)[1])
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    d = ds.Y.shape[1]
+    for method in ("nlj", "es_mi"):
+        r32 = eng.join(ds.X, _cfg(method, theta))
+        r8 = eng.join(ds.X, _cfg(method, theta, quant="sq8"))
+        bytes32 = r32.stats.n_dist * d * 4
+        bytes8 = r8.stats.n_dist * d * 1 + r8.stats.n_rerank * d * 4
+        assert bytes8 <= 0.40 * bytes32, (
+            method, bytes8 / bytes32, r8.stats.n_dist, r8.stats.n_rerank)
+        assert r8.pair_set() == r32.pair_set() or method != "nlj"
+
+
+def test_quant_mode_validation():
+    with pytest.raises(ValueError):
+        JoinConfig(quant="int4")
+    cfg = JoinConfig(quant="sq8")
+    assert dataclasses.replace(cfg, quant="off").quant == "off"
