@@ -1,10 +1,15 @@
 """Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other.
 
-Also the QuantStore comparison: ``run_quant`` reruns methods with
-``quant ∈ {off, sq8}`` on a high-dim (d ≥ 256) dataset and reports the
-f32-vs-int8 split of distance-kernel time and bytes moved per emitted
+Also the compressed-storage comparison: ``run_quant`` reruns methods with
+``quant ∈ {off, sq8, sketch8}`` on a high-dim (d ≥ 256) dataset and
+reports the per-tier split of distance work and bytes moved per emitted
 pair (``common.dist_bytes`` — d×4 bytes per f32 distance, d×1 per int8
-filter distance, d×4 per exact re-rank).
+filter distance, d/8 + slack-table bytes per 1-bit sketch probe, d×4 per
+exact re-rank). For ``sketch8`` the per-tier survivor counts are the
+cascade's shape: ``n_dist`` sketch probes → ``n_esc8`` int8 escalations
+(``sketch_prune`` = the fraction the sketch tier pruned before any int8
+work; ≥ 50% on the NLJ prefilter at d ≥ 256 at the tight thresholds) →
+``n_rerank`` f32 evaluations.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ from benchmarks.common import (SCALES, dist_bytes, emit, run_method,
 
 METHODS = ("index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 QUANT_METHODS = ("nlj", "es", "es_mi", "es_mi_adapt")
+QUANT_MODES = ("off", "sq8", "sketch8")
 
 
 def run(scale: str = "ci", *, regime: str = "manifold",
@@ -33,8 +39,10 @@ def run(scale: str = "ci", *, regime: str = "manifold",
 
 
 def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
-              theta_idxs=(2,), methods=QUANT_METHODS) -> list[dict]:
-    """f32 vs sq8 on a d≥256 dataset: kernel seconds + bytes moved."""
+              theta_idxs=(1, 2), methods=QUANT_METHODS,
+              modes=QUANT_MODES) -> list[dict]:
+    """f32 vs sq8 vs sketch8 on a d≥256 dataset: per-tier survivor
+    counts, kernel seconds and bytes moved."""
     dim = SCALES[scale]["dim"]
     rows = []
     grid = theta_grid(regime, scale)
@@ -42,7 +50,7 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
         theta = grid[ti - 1]
         for method in methods:
             base_bytes = None
-            for quant in ("off", "sq8"):
+            for quant in modes:
                 res, dt, rec = run_method(regime, method, theta,
                                           scale=scale, quant=quant)
                 s = res.stats
@@ -54,8 +62,15 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
                     quant=quant, greedy_s=s.greedy_seconds,
                     expand_s=s.expand_seconds, other_s=s.other_seconds,
                     total_s=s.total_seconds, n_dist=s.n_dist,
+                    n_esc8=s.n_esc8,
+                    sketch_prune=(1.0 - s.n_esc8 / max(s.n_dist, 1)
+                                  if quant == "sketch8" else 0.0),
                     n_rerank=s.n_rerank, dist_bytes=nbytes,
-                    bytes_vs_f32=nbytes / max(base_bytes, 1),
+                    # NaN, not 1.0, when the caller skipped the f32 leg:
+                    # a fake unity ratio would read as "same bytes as f32"
+                    bytes_vs_f32=(nbytes / max(base_bytes, 1)
+                                  if base_bytes is not None
+                                  else float("nan")),
                     bytes_per_pair=nbytes / max(len(res.pairs), 1),
                     recall=rec))
     return rows
@@ -64,7 +79,8 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
 def main(scale: str = "ci") -> None:
     emit(run(scale))
     # separate section: different schema than the breakdown table above
-    print("\n# quant: f32 vs sq8 distance-kernel time and bytes (d >= 256)")
+    print("\n# quant: per-tier distance work and bytes, "
+          "f32 vs sq8 vs sketch8 (d >= 256)")
     emit(run_quant("full_hd" if scale == "full" else "ci_hd"))
 
 

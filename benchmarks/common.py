@@ -113,11 +113,21 @@ def run_method(regime: str, method: str, theta: float, *, scale: str = "ci",
     return res, dt, rec
 
 
+# Per-candidate sketch-tier bytes beyond the packed codes: the two
+# slack-table entries (checkpoint at h + norm) the bound reads
+# (sketch_lower_bound_gather; see quant/sketch.py).
+SKETCH_META_BYTES = 8
+
+
 def dist_bytes(res: JoinResult, dim: int, quant: str) -> int:
     """Distance-kernel bytes moved for one join (the C4 hot-spot traffic
     model): each counted distance streams one d-dim candidate row —
-    d×4 bytes from the f32 table, d×1 from int8 codes — and each exact
-    re-rank evaluation streams the f32 row again."""
+    d×4 bytes from the f32 table, d×1 from int8 codes, d/8 + slack-table
+    bytes from 1-bit sketches — plus d×1 per int8 escalation (sketch8)
+    and d×4 per exact re-rank evaluation."""
+    if quant == "sketch8":
+        return (res.stats.n_dist * (dim // 8 + SKETCH_META_BYTES)
+                + res.stats.n_esc8 * dim + res.stats.n_rerank * dim * 4)
     per_dist = dim * (1 if quant == "sq8" else 4)
     return res.stats.n_dist * per_dist + res.stats.n_rerank * dim * 4
 

@@ -44,7 +44,9 @@ class EngineSpec:
     ``quant`` selects the deployment's compressed-storage mode
     (``core.types.QUANT_MODES``): ``"sq8"`` makes every join served by the
     engine default to int8 filter + exact f32 re-rank, with QuantStore
-    artifacts cached per index (and per shard).
+    artifacts cached per index (and per shard); ``"sketch8"`` adds the
+    1-bit sketch tier above int8 (progressive refinement: Hamming bounds
+    prune first, int8 confirms, f32 re-ranks the band).
     """
     k: int = 48                    # kNN candidates per node at build time
     degree: int = 32               # index max out-degree R
@@ -52,7 +54,7 @@ class EngineSpec:
     n_shards: int = 1
     carry_window: int = 4096       # streaming work-sharing donor window
     max_cached_indexes: int = 4    # per-X artifact LRU capacity
-    quant: str = "off"             # compressed-storage mode (off | sq8)
+    quant: str = "off"             # storage mode (off | sq8 | sketch8)
 
     def build_kw(self) -> dict:
         return dict(k=self.k, degree=self.degree, style=self.style)
@@ -70,6 +72,11 @@ ENGINE_PRESETS = {
     # shard, distance filtering on int8 with exact re-rank
     "serving_sq8": EngineSpec(n_shards=0, carry_window=16_384,
                               max_cached_indexes=8, quant="sq8"),
+    # serving with the full progressive-refinement cascade: 1-bit sketch
+    # prune → int8 confirm → f32 re-rank (cheapest bytes/candidate at
+    # d ≥ 256)
+    "serving_sketch8": EngineSpec(n_shards=0, carry_window=16_384,
+                                  max_cached_indexes=8, quant="sketch8"),
 }
 
 

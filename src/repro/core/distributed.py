@@ -100,8 +100,8 @@ class ShardedQuantStore:
 
     @property
     def nbytes(self) -> int:
-        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                   for a in (self.q, self.scales, self.norms, self.err))
+        from repro.quant.store import arrays_nbytes
+        return arrays_nbytes(self.q, self.scales, self.norms, self.err)
 
 
 def quantize_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
@@ -137,19 +137,79 @@ def quantize_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
         group_size=gs)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedSketchStore:
+    """Per-shard SketchStores, stacked on a leading shard dim.
+
+    Each shard sketches its own merged table on its *own* center μ_s;
+    the rotation, isometry factor and checkpoint grid depend only on
+    (d, seed) and are computed once and shared (replicated, not stacked —
+    an O(d²) array per engine, not per shard).
+    """
+    codes: Array           # (S, M, W) uint32
+    cum: Array             # (S, M, K) f32
+    hs: Array              # (K,) int32 (shared checkpoint grid)
+    mu: Array              # (S, d) f32
+    rot: Array             # (d, d) f32 (shared)
+    iso: Array             # () f32 (shared)
+
+    @property
+    def nbytes(self) -> int:
+        from repro.quant.store import arrays_nbytes
+        return arrays_nbytes(self.codes, self.cum, self.hs, self.mu,
+                             self.rot, self.iso)
+
+
+def sketch_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
+                   seed: int = 0) -> ShardedSketchStore:
+    """Build one SketchStore per shard of a sharded merged index.
+
+    Like ``quantize_sharded``, the last shard's far-away sentinel pad
+    rows (when ``n_data`` doesn't divide evenly) are masked out of the
+    center statistics. Sentinels are still encoded — their exact slack
+    tables are huge, so their own certified bounds prune them at the
+    sketch tier before any int8 work.
+    """
+    from repro.quant import sketch as sk
+
+    S, M, d = smi.vecs.shape
+    pad = S * smi.shard_size - n_data if n_data is not None else 0
+    rotation = sk.make_rotation(d, seed)   # O(d³) once, shared per shard
+    stores = []
+    for s in range(S):
+        mask = None
+        if pad and s == S - 1:
+            mask = np.ones(M, bool)
+            mask[smi.shard_size - pad:smi.shard_size] = False
+        stores.append(sk.build_sketch(smi.vecs[s], seed=seed,
+                                      scale_rows=mask, rotation=rotation))
+    return ShardedSketchStore(
+        codes=jnp.stack([s.codes for s in stores]),
+        cum=jnp.stack([s.cum for s in stores]),
+        hs=stores[0].hs,
+        mu=jnp.stack([s.mu for s in stores]),
+        rot=stores[0].rot,
+        iso=stores[0].iso)
+
+
 def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
+                   sc, scum, smu, srot, siso, shs,
                    xw, qids, lane_valid, *,
                    theta: float, cfg: TraversalConfig, shard_size: int,
                    hybrid: bool, axis: str, group_size: int, quant: bool,
-                   n_shards: int, pad: int):
+                   sketch: bool, n_shards: int, pad: int):
     """Per-shard MI join body (runs under shard_map; all-local compute).
 
     With ``quant`` the shard traverses its local int8 store against
     certified lower bounds (queries quantized on the local scale grid)
     and re-ranks only the ambiguous band of its pool with exact f32
     distances before returning, so the merged host-side result is
-    identical to the f32 path.
+    identical to the f32 path. ``sketch`` additionally routes every probe
+    through the shard's local 1-bit sketch tier first (queries encoded on
+    the local sketch grid); escalation counts return per shard.
     """
+    from repro.quant.sketch import SketchStore, sketch_encode
     from repro.quant.store import QuantStore, dim_scales, quantize_on_grid
 
     vecs, nbrs, mnd = vecs[0], nbrs[0], mnd[0]
@@ -157,11 +217,17 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                        mean_nbr_dist=mnd, n_data=shard_size)
     rank = jax.lax.axis_index(axis).astype(jnp.int32)
     qstore = qx = xerr = None
+    sstore = sxc = sxcum = None
     if quant:
         qstore = QuantStore(q=qq[0], scales=qscales[0], norms=qnorms[0],
                             err=qerr[0], group_size=group_size)
         sd = dim_scales(qstore.scales, xw.shape[1], group_size)
         qx, _, xerr = quantize_on_grid(xw, sd)
+    if sketch:
+        # codes/cum/mu are per-shard; rot/iso/hs are shared (replicated)
+        sstore = SketchStore(codes=sc[0], cum=scum[0], hs=shs, mu=smu[0],
+                             rot=srot, iso=siso)
+        sxc, sxcum = sketch_encode(xw, sstore.mu, sstore.rot, sstore.hs)
     B = xw.shape[0]
     W = traversal.bitmap_words(vecs.shape[0])
     visited = jnp.zeros((B, W), jnp.uint32)
@@ -181,10 +247,11 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
         visited = visited.at[:, sent >> 5].add(bits[None, :])
     rows = nbrs[node_ids]
     valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
-    dist, valid, visited, n_new = traversal._probe(
+    dist, valid, visited, n_new, n_esc0 = traversal._probe(
         vecs, xw, rows, valid, visited, n_data=shard_size,
         traverse_nondata=hybrid, dist_impl=cfg.dist_impl,
-        quant=qstore, qx=qx, xerr=xerr)
+        quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sxc,
+        sxcum=sxcum, esc_th2=jnp.float32(theta) ** 2)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(jnp.where(valid, rows, NO_NODE),
                                 jnp.argmin(dist, axis=1)[:, None],
@@ -193,7 +260,8 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
         index, xw, theta, cfg=cfg, n_data=shard_size, hybrid=hybrid,
         traverse_nondata=hybrid, init_idx=rows, init_dist=dist,
         init_valid=valid, visited=visited, best_dist=best, best_idx=besti,
-        n_dist=n_new, quant=qstore, qx=qx, xerr=xerr)
+        n_dist=n_new, quant=qstore, qx=qx, xerr=xerr, sketch=sstore,
+        sx=sxc, sxcum=sxcum, n_esc=n_esc0)
     C = r.pool_idx.shape[1]
     keep = jnp.arange(C)[None, :] < r.n_pool[:, None]
     n_rerank = jnp.zeros((B,), jnp.int32)
@@ -217,23 +285,26 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     gids = jnp.where(r.pool_idx != NO_NODE,
                      r.pool_idx + rank * shard_size, NO_NODE)
     return (gids[None], r.pool_dist[None], keep[None], r.overflow[None],
-            r.n_dist[None], n_rerank[None])
+            r.n_dist[None], n_rerank[None], r.n_esc[None])
 
 
 def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                              *, theta: float, cfg: TraversalConfig,
                              hybrid: bool = False,
                              qstore: ShardedQuantStore | None = None,
+                             sstore: ShardedSketchStore | None = None,
                              n_data: int | None = None):
     """Build the pjit'd per-wave distributed join step.
 
     shard_axes: mesh axis name (or tuple of names) the index is sharded
     over — e.g. ``("pod", "data")`` on the production mesh. ``qstore``
     switches each shard onto its int8 store (filter + in-shard re-rank);
-    ``n_data`` (the unpadded |Y|) lets the body hide sentinel pad rows.
+    ``sstore`` (requires ``qstore``) adds the per-shard 1-bit sketch tier
+    in front; ``n_data`` (the unpadded |Y|) lets the body hide sentinel
+    pad rows.
 
-    Returns ``(step, qargs)``: ``step`` takes the quant arrays as its
-    trailing runtime arguments (tiny placeholders when quant is off) so
+    Returns ``(step, qargs)``: ``step`` takes the quant/sketch arrays as
+    its trailing runtime arguments (tiny placeholders when off) so
     multi-GB stores are jit *parameters*, never baked into the
     executable as constants. Call as ``step(vecs, nbrs, mnd, start,
     *qargs, xw, qids, lane_valid)``.
@@ -248,36 +319,52 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         f"{axis_size} devices")
     spec_idx = P(flat)
     quant = qstore is not None
+    sketch = sstore is not None
+    assert not (sketch and not quant), "sketch tier requires the int8 tier"
     pad = smi.n_shards * smi.shard_size - n_data if n_data is not None else 0
     body = functools.partial(
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
         hybrid=hybrid, axis=flat,
         group_size=qstore.group_size if quant else 0, quant=quant,
-        n_shards=smi.n_shards, pad=pad)
+        sketch=sketch, n_shards=smi.n_shards, pad=pad)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(spec_idx, spec_idx, spec_idx, spec_idx,
-                  spec_idx, spec_idx, spec_idx, spec_idx, P(), P(), P()),
+                  spec_idx, spec_idx, spec_idx, spec_idx,
+                  spec_idx, spec_idx, spec_idx, P(), P(), P(),
+                  P(), P(), P()),
         out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
-                   spec_idx),
+                   spec_idx, spec_idx),
         check_vma=False)
 
+    S = smi.n_shards
     if quant:
         qargs = (qstore.q, qstore.scales, qstore.norms, qstore.err)
     else:
         # zero-size placeholders keep the shard_map arity fixed; the body
         # ignores them when quant is off
-        S = smi.n_shards
         qargs = (jnp.zeros((S, 1, 1), jnp.int8),
                  jnp.zeros((S, 1), jnp.float32),
                  jnp.zeros((S, 1), jnp.float32),
                  jnp.zeros((S, 1), jnp.float32))
+    if sketch:
+        # codes/cum/mu sharded; rot/iso/hs shared → replicated specs
+        qargs += (sstore.codes, sstore.cum, sstore.mu, sstore.rot,
+                  sstore.iso, sstore.hs)
+    else:
+        qargs += (jnp.zeros((S, 1, 1), jnp.uint32),
+                  jnp.zeros((S, 1, 1), jnp.float32),
+                  jnp.zeros((S, 1), jnp.float32),
+                  jnp.zeros((1, 1), jnp.float32),
+                  jnp.zeros((), jnp.float32),
+                  jnp.zeros((1,), jnp.int32))
 
     @jax.jit
-    def step(vecs, nbrs, mnd, start, qq, qs, qn, qe, xw, qids, lane_valid):
+    def step(vecs, nbrs, mnd, start, qq, qs, qn, qe,
+             sc, scum, smu, srot, siso, shs, xw, qids, lane_valid):
         return mapped(vecs, nbrs, mnd, start, qq, qs, qn, qe,
-                      xw, qids, lane_valid)
+                      sc, scum, smu, srot, siso, shs, xw, qids, lane_valid)
 
     return step, qargs
 
@@ -286,15 +373,16 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
                         *, theta: float, cfg: TraversalConfig,
                         wave_size: int = 256, hybrid: bool = False,
                         qstore: ShardedQuantStore | None = None,
+                        sstore: ShardedSketchStore | None = None,
                         n_data: int | None = None):
     """Host driver: waves of queries against all shards; assemble pairs."""
     X = jnp.asarray(X)
     nq = X.shape[0]
     step, qargs = make_distributed_mi_join(
         mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
-        qstore=qstore, n_data=n_data)
+        qstore=qstore, sstore=sstore, n_data=n_data)
     pairs_out = []
-    stats = dict(n_dist=0, n_overflow=0, n_rerank=0)
+    stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0)
     for q0 in range(0, nq, wave_size):
         ids = np.arange(q0, min(q0 + wave_size, nq))
         padded = np.zeros(wave_size, np.int32)
@@ -302,7 +390,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         lane_valid = np.zeros(wave_size, bool)
         lane_valid[:ids.size] = True
         with compat.set_mesh(mesh):
-            gids, gdist, keep, overflow, n_dist, n_rerank = step(
+            gids, gdist, keep, overflow, n_dist, n_rerank, n_esc = step(
                 smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
                 jnp.asarray(lane_valid))
@@ -314,6 +402,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         stats["n_dist"] += int(np.asarray(n_dist)[:, lane_valid].sum())
         stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
         stats["n_rerank"] += int(np.asarray(n_rerank)[:, lane_valid].sum())
+        stats["n_esc8"] += int(np.asarray(n_esc)[:, lane_valid].sum())
     pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
              else np.empty((0, 2), np.int64)).astype(np.int64)
     return pairs, stats

@@ -102,6 +102,77 @@ def quant_join_pairs(X, Y, theta: float, store, *, block: int = 1024,
     return pairs, n_rerank
 
 
+def sketch_join_pairs(X, Y, theta: float, sstore, qstore, *,
+                      block: int = 512, pair_block: int = 1 << 15,
+                      impl: str | None = None
+                      ) -> tuple[np.ndarray, int, int]:
+    """Exact NLJ through the three-tier sketch8 cascade.
+
+    Tier 0 streams 1-bit sketch codes through ``pairwise_hamming`` (d/8
+    bytes/pair) and prunes every pair whose certified sketch bound beats
+    θ². Tier 1 confirms the survivors with int8 difference-form distances
+    (d×1 bytes/pair, well-conditioned — no matmul-form guard needed):
+    certified-sure pairs are emitted free, certified-out pairs dropped.
+    Tier 2 re-ranks only the remaining ambiguous band with exact f32, so
+    the result equals ``exact_join_pairs`` while f32 traffic stays
+    proportional to the int8 quantization band.
+
+    Returns ``(pairs, n_esc8, n_rerank)``: the exact pair array, the
+    number of sketch survivors that needed int8 confirmation, and the
+    number of band pairs that needed f32 re-ranking.
+    """
+    from repro.quant.sketch import (sketch_lower_bound_pairwise,
+                                    sketch_queries)
+    from repro.quant.store import dim_scales, quantize_queries
+
+    X = jnp.asarray(X, jnp.float32)
+    Y = jnp.asarray(Y, jnp.float32)
+    th2 = np.float32(theta) ** 2
+    d = int(Y.shape[1]) if Y.ndim == 2 else 0
+    # loop-invariant host views, materialized once (not per block)
+    sd = np.asarray(dim_scales(qstore.scales, d, qstore.group_size))
+    qy = np.asarray(qstore.q)
+    yerr = np.asarray(qstore.err)
+    out: list[np.ndarray] = []
+    n_esc = 0
+    n_rerank = 0
+    for q0 in range(0, X.shape[0], block):
+        q1 = min(q0 + block, X.shape[0])
+        xb = X[q0:q1]
+        sxc, sxcum = sketch_queries(xb, sstore)
+        h = ops.pairwise_hamming(sxc, sstore.codes, impl=impl)
+        lb_s = np.asarray(sketch_lower_bound_pairwise(
+            h, sxcum, sstore.cum, sstore.hs, sstore.iso))
+        qi, yi = np.nonzero(lb_s < th2)           # sketch survivors
+        n_esc += int(qi.size)
+        if not qi.size:
+            continue
+        qx, _, xe = quantize_queries(xb, qstore)
+        qx = np.asarray(qx)
+        xe = np.asarray(xe)
+        for p0 in range(0, qi.size, pair_block):
+            qp, yp = qi[p0:p0 + pair_block], yi[p0:p0 + pair_block]
+            diff = (qx[qp].astype(np.int32) - qy[yp].astype(np.int32)
+                    ).astype(np.float32) * sd[None, :]
+            dhat = jnp.sum(jnp.asarray(diff) ** 2, axis=1)
+            slack = jnp.asarray(xe[qp] + yerr[yp])
+            lb8 = np.asarray(ops.quant_lower_bound(dhat, slack))
+            ub8 = np.asarray(ops.quant_upper_bound(dhat, slack))
+            sure = ub8 < th2
+            out.append(np.stack([qp[sure] + q0, yp[sure]], axis=1))
+            amb = (np.maximum(lb8, lb_s[qp, yp]) < th2) & ~sure
+            n_rerank += int(amb.sum())
+            if amb.any():
+                qa, ya = qp[amb], yp[amb]
+                dxy = xb[jnp.asarray(qa)] - Y[jnp.asarray(ya)]
+                dd = np.asarray(jnp.sum(dxy * dxy, axis=1))
+                m = dd < th2
+                out.append(np.stack([qa[m] + q0, ya[m]], axis=1))
+    pairs = (np.concatenate(out, axis=0) if out
+             else np.empty((0, 2), np.int64)).astype(np.int64)
+    return pairs, n_esc, n_rerank
+
+
 # ---------------------------------------------------------------------------
 # one-shot compatibility wrapper over the engine
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
 from repro.kernels import ops
+from repro.quant.sketch import sketch_lower_bound_gather
 
 Array = jax.Array
 _INF = jnp.float32(jnp.inf)
@@ -44,8 +45,9 @@ def bitmap_words(n_nodes: int) -> int:
 
 def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
            *, n_data: int, traverse_nondata: bool, dist_impl: str | None,
-           quant=None, qx: Array | None = None, xerr: Array | None = None
-           ) -> tuple[Array, Array, Array, Array]:
+           quant=None, qx: Array | None = None, xerr: Array | None = None,
+           sketch=None, sx: Array | None = None, sxcum: Array | None = None,
+           esc_th2=None) -> tuple[Array, Array, Array, Array, Array]:
     """Compute distances to candidate ids with dedup + visited masking.
 
     Args:
@@ -57,8 +59,21 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
         per candidate instead of d×4) and returns *certified lower bounds*
         on the true squared distances, so downstream `< θ²` tests accept a
         superset; the wave runner re-ranks pooled survivors exactly.
+      sketch/sx/sxcum/esc_th2: optional SketchStore + queries encoded on
+        its grid (codes, slack tables) + the escalation threshold θ²
+        (sketch8 mode, requires ``quant``). Gathers 1-bit codes plus two
+        slack-table entries first (d/8 + 8 bytes per candidate) and
+        escalates only candidates whose
+        sketch bound beats θ² to the int8 tier — their gather indices
+        collapse to row 0, keeping int8 traffic proportional to sketch
+        survivors. Escalated candidates take ``max(int8 lb, sketch lb)``
+        (both certified, so the max is the tighter certified bound, and
+        the per-tier chain sketch_lb ≤ dist ≤ true stays monotone);
+        pruned ones keep the sketch bound, which is ≥ θ² and therefore
+        never pooled.
     Returns:
-      (dist (B,K) f32 — +inf at invalid, valid (B,K), new_visited, n_new (B,)).
+      (dist (B,K) f32 — +inf at invalid, valid (B,K), new_visited,
+       n_new (B,), n_esc (B,) — candidates escalated to int8 (sketch8)).
     """
     B, K = cand.shape
     valid = valid & (cand != NO_NODE)
@@ -81,7 +96,37 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
                               axis=1, inplace=False)
     valid = valid & keep
     # distances (masked)
-    if quant is not None:
+    n_esc = jnp.zeros((B,), jnp.int32)
+    if quant is not None and sketch is not None:
+        # --- tier 0: 1-bit sketch bounds for every candidate (codes +
+        # two slack-table entries: d/8 + 8 bytes gathered per cand) ---
+        scands = sketch.codes[cand_c]                       # (B, K, W) u32
+        hh = ops.rowwise_hamming(sx, scands, impl=dist_impl)
+        lb_s, nc = sketch_lower_bound_gather(hh, sxcum, sketch.cum,
+                                             cand_c, sketch.hs,
+                                             sketch.iso)
+        # --- tier 1: int8 confirm, survivors only ---
+        esc = valid & (lb_s < esc_th2)
+        idx8 = jnp.where(esc, cand_c, 0)
+        qc = quant.q[idx8]                                  # (B, K, d) int8
+        dhat = ops.rowwise_sq_dists_int8(
+            qx, qc, quant.scales, group_size=quant.group_size,
+            impl=dist_impl)
+        slack = xerr[:, None] + quant.err[idx8]
+        lb8 = ops.quant_lower_bound(dhat, slack)
+        # Pruned candidates keep their certified floor (≥ θ², so they can
+        # never pool or satisfy a found-test) but are *ordered* by the
+        # SimHash angle estimate — the certified bound compresses all far
+        # candidates toward θ², which would erase the greedy phase's
+        # navigation gradient. Ordering may use an estimate; threshold
+        # tests only ever see certified bounds.
+        nq = sxcum[:, -1][:, None]
+        cos = jnp.cos(jnp.pi * hh.astype(jnp.float32) / sketch.mu.shape[0])
+        est = nq + nc - 2.0 * jnp.sqrt(jnp.maximum(nq * nc, 0.0)) * cos
+        dist = jnp.where(esc, jnp.maximum(lb8, lb_s),
+                         jnp.maximum(lb_s, est))
+        n_esc = jnp.sum(esc, axis=1).astype(jnp.int32)
+    elif quant is not None:
         qc = quant.q[cand_c]                                # (B, K, d) int8
         dhat = ops.rowwise_sq_dists_int8(
             qx, qc, quant.scales, group_size=quant.group_size,
@@ -97,25 +142,28 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
     lane = jnp.arange(B, dtype=jnp.int32)[:, None]
     visited = visited.at[lane, w].add(add)
     n_new = jnp.sum(valid, axis=1).astype(jnp.int32)
-    return dist, valid, visited, n_new
+    return dist, valid, visited, n_new, n_esc
 
 
 def _expand(index_vecs: Array, index_nbrs: Array, x: Array, sel_ids: Array,
             sel_valid: Array, visited: Array, *, n_data: int,
             traverse_nondata: bool, dist_impl: str | None,
             quant=None, qx: Array | None = None,
-            xerr: Array | None = None):
+            xerr: Array | None = None, sketch=None,
+            sx: Array | None = None, sxcum: Array | None = None,
+            esc_th2=None):
     """Gather neighbor rows of selected nodes and probe them."""
     B, E = sel_ids.shape
     R = index_nbrs.shape[1]
     rows = index_nbrs[jnp.clip(sel_ids, 0)]                 # (B, E, R)
     cand = rows.reshape(B, E * R)
     valid = jnp.broadcast_to(sel_valid[:, :, None], (B, E, R)).reshape(B, E * R)
-    dist, valid, visited, n_new = _probe(
+    dist, valid, visited, n_new, n_esc = _probe(
         index_vecs, x, cand, valid, visited, n_data=n_data,
         traverse_nondata=traverse_nondata, dist_impl=dist_impl,
-        quant=quant, qx=qx, xerr=xerr)
-    return cand, dist, valid, visited, n_new
+        quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx, sxcum=sxcum,
+        esc_th2=esc_th2)
+    return cand, dist, valid, visited, n_new, n_esc
 
 
 def _beam_merge(bd, bi, bexp, cd, ci, cexp):
@@ -144,6 +192,7 @@ class GreedyState(NamedTuple):
     since_improve: Array   # (B,)
     done: Array            # (B,)
     n_dist: Array          # (B,)
+    n_esc: Array           # (B,) sketch8: candidates escalated to int8
     n_iters: Array         # ()
 
 
@@ -155,7 +204,9 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
                   cfg: TraversalConfig, n_data: int,
                   traverse_nondata: bool = True,
                   quant=None, qx: Array | None = None,
-                  xerr: Array | None = None) -> GreedyState:
+                  xerr: Array | None = None, sketch=None,
+                  sx: Array | None = None,
+                  sxcum: Array | None = None) -> GreedyState:
     """Batched best-first search until an in-range point is found per lane.
 
     Args:
@@ -163,6 +214,8 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
       theta: L2 threshold (scalar).
       quant/qx/xerr: optional sq8 mode — traversal runs on certified
         lower bounds from int8 codes (see ``_probe``).
+      sketch/sx/sxcum: optional sketch8 mode — 1-bit sketch bounds prune
+        candidates before the int8 tier (escalation threshold θ²).
     """
     vecs, nbrs = index.vecs, index.nbrs
     B = x.shape[0]
@@ -172,10 +225,11 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
     visited0 = jnp.zeros((B, W), jnp.uint32)
 
     # --- seed probing (Alg. 2 lines 5–11) ---
-    d0, v0, visited0, n0 = _probe(
+    d0, v0, visited0, n0, e0 = _probe(
         vecs, x, seeds, seeds_valid, visited0, n_data=n_data,
         traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-        quant=quant, qx=qx, xerr=xerr)
+        quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx, sxcum=sxcum,
+        esc_th2=th2)
     bd = jnp.full((B, L), _INF)
     bi = jnp.full((B, L), NO_NODE, jnp.int32)
     bexp = jnp.zeros((B, L), bool)
@@ -193,7 +247,7 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
         beam_dist=bd, beam_idx=bi, beam_exp=bexp, visited=visited0,
         best_dist=best0, best_idx=besti0,
         since_improve=jnp.zeros((B,), jnp.int32),
-        done=found0, n_dist=n0, n_iters=jnp.int32(0))
+        done=found0, n_dist=n0, n_esc=e0, n_iters=jnp.int32(0))
 
     def cond(s: GreedyState):
         return (~jnp.all(s.done)) & (s.n_iters < cfg.max_iters)
@@ -211,12 +265,14 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
         new_exp = s.beam_exp.at[lane, selpos].max(sel_valid)
         exhausted = ~jnp.any(sel_valid, axis=1) & active
 
-        cand, cd, cv, visited, n_new = _expand(
+        cand, cd, cv, visited, n_new, n_esc = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
             traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-            quant=quant, qx=qx, xerr=xerr)
+            quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx,
+            sxcum=sxcum, esc_th2=th2)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist = s.n_dist + jnp.where(active, n_new, 0)
+        n_esc2 = s.n_esc + jnp.where(active, n_esc, 0)
 
         bd2, bi2, be2 = _beam_merge(
             s.beam_dist, s.beam_idx, new_exp, cd,
@@ -241,7 +297,7 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
             (B,), bool)
         done = s.done | found | plateau | exhausted
         return GreedyState(bd2, bi2, be2, visited, best_dist, best_idx,
-                           since, done, n_dist, s.n_iters + 1)
+                           since, done, n_dist, n_esc2, s.n_iters + 1)
 
     return jax.lax.while_loop(cond, body, state)
 
@@ -258,6 +314,7 @@ class ExpandResult(NamedTuple):
     best_dist: Array       # (B,) closest node seen overall (incl. greedy)
     best_idx: Array        # (B,)
     n_dist: Array          # (B,)
+    n_esc: Array           # (B,) sketch8: escalations (incl. greedy's)
     n_iters: Array         # ()
     visited: Array         # (B, W)
 
@@ -278,6 +335,7 @@ class _ExpState(NamedTuple):
     stall: Array           # (B,)
     done: Array
     n_dist: Array
+    n_esc: Array
     n_iters: Array
 
 
@@ -290,7 +348,9 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
                  init_idx: Array, init_dist: Array, init_valid: Array,
                  visited: Array, best_dist: Array, best_idx: Array,
                  n_dist: Array, quant=None, qx: Array | None = None,
-                 xerr: Array | None = None) -> ExpandResult:
+                 xerr: Array | None = None, sketch=None,
+                 sx: Array | None = None, sxcum: Array | None = None,
+                 n_esc: Array | None = None) -> ExpandResult:
     """Enumerate all reachable in-range data points from initial candidates.
 
     ``init_*`` (B, K0) are already-visited candidates with known distances
@@ -307,6 +367,8 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
     B, K0 = init_idx.shape
     C, Lh, E = cfg.pool_cap, cfg.hybrid_beam, cfg.expand_per_iter
     th2 = jnp.float32(theta) ** 2
+    if n_esc is None:
+        n_esc = jnp.zeros((B,), jnp.int32)
 
     is_data = (init_idx >= 0) & (init_idx < n_data)
     inr = init_valid & is_data & (init_dist < th2)
@@ -343,7 +405,8 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
         hb_dist=hb_dist, hb_idx=hb_idx, hb_exp=hb_exp,
         visited=visited, best_dist=best_dist, best_idx=best_idx,
         qmax_prev=jnp.full((B,), _INF), stall=jnp.zeros((B,), jnp.int32),
-        done=jnp.zeros((B,), bool), n_dist=n_dist, n_iters=jnp.int32(0))
+        done=jnp.zeros((B,), bool), n_dist=n_dist, n_esc=n_esc,
+        n_iters=jnp.int32(0))
 
     def cond(s: _ExpState):
         return (~jnp.all(s.done)) & (s.n_iters < cfg.max_iters)
@@ -375,12 +438,14 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
             (~pool_exp) & (s.pool_idx != NO_NODE), axis=1)
         exhausted = ~jnp.any(sel_valid, axis=1) & active
 
-        cand, cd, cv, visited, n_new = _expand(
+        cand, cd, cv, visited, n_new, n_esc_new = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
             traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-            quant=quant, qx=qx, xerr=xerr)
+            quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx,
+            sxcum=sxcum, esc_th2=th2)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist2 = s.n_dist + jnp.where(active, n_new, 0)
+        n_esc2 = s.n_esc + jnp.where(active, n_esc_new, 0)
 
         cis_data = (cand >= 0) & (cand < n_data)
         cinr = cv & cis_data & (cd < th2) & active[:, None]
@@ -451,11 +516,12 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
                          jnp.where(keep, overflow2, s.overflow),
                          hb_dist2, hb_idx2, hb_exp3, visited,
                          best_dist2, best_idx2, qmax_prev2, stall2, done2,
-                         n_dist2, s.n_iters + 1)
+                         n_dist2, n_esc2, s.n_iters + 1)
 
     fin = jax.lax.while_loop(cond, body, state)
     return ExpandResult(
         pool_idx=fin.pool_idx[:, :C], pool_dist=fin.pool_dist[:, :C],
         n_pool=fin.n_pool, overflow=fin.overflow,
         best_dist=fin.best_dist, best_idx=fin.best_idx,
-        n_dist=fin.n_dist, n_iters=fin.n_iters, visited=fin.visited)
+        n_dist=fin.n_dist, n_esc=fin.n_esc, n_iters=fin.n_iters,
+        visited=fin.visited)

@@ -79,8 +79,14 @@ METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 # Compressed-storage modes: "off" streams f32 vectors through the distance
 # kernels; "sq8" runs traversal/threshold filtering on QuantStore int8
 # codes against certified lower bounds and re-ranks survivors with the
-# exact f32 kernel (emitted pairs are identical — see quant/store.py).
-QUANT_MODES = ("off", "sq8")
+# exact f32 kernel (emitted pairs are identical — see quant/store.py);
+# "sketch8" adds the 1-bit SketchStore tier above sq8 (progressive
+# refinement: Hamming-sketch bounds prune first, int8 confirms survivors,
+# f32 re-ranks the band — see quant/sketch.py).
+QUANT_MODES = ("off", "sq8", "sketch8")
+
+# Modes that route traversal through certified-lower-bound filtering.
+QUANT_FILTER_MODES = ("sq8", "sketch8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +119,11 @@ class JoinStats:
     n_rerank: int = 0              # exact f32 re-rank evaluations (sq8 mode;
     #                                n_dist counts quantized filter dists)
     quant_bytes: int = 0           # bytes resident for QuantStore artifacts
+    n_esc8: int = 0                # sketch8 only: candidates escalated from
+    #                                the 1-bit sketch tier to int8 (n_dist
+    #                                counts sketch-tier probes; the sketch
+    #                                pruned n_dist - n_esc8 before any int8
+    #                                work)
 
     @property
     def total_seconds(self) -> float:

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import (GraphIndex, JoinConfig, JoinResult, JoinStats)
+from repro.core.types import (QUANT_FILTER_MODES, GraphIndex, JoinConfig,
+                              JoinResult, JoinStats)
 from repro.engine import waves as W
 
 Array = jax.Array
@@ -141,13 +142,14 @@ class JoinEngine:
         self._index_x = _LRU(max_cached_indexes)
         self._merged = _LRU(max_cached_indexes)
         self._sharded = _LRU(max_cached_indexes)
-        # QuantStore artifacts mirror the index artifacts they compress
-        # (one per shard for the sharded path), keyed by artifact kind
-        # (+ X fingerprint for per-X artifacts).
+        # QuantStore / SketchStore artifacts mirror the index artifacts
+        # they compress (one per shard for the sharded path), keyed by
+        # artifact kind (+ X fingerprint for per-X artifacts).
         self._qstores = _LRU(2 * max_cached_indexes)
+        self._sstores = _LRU(2 * max_cached_indexes)
         self.build_counts: dict[str, int] = {
             "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0,
-            "quant": 0}
+            "quant": 0, "sketch": 0}
         self.build_seconds = 0.0
         self.serve_stats: dict[str, int] = {
             "joins": 0, "batches": 0, "queries": 0, "pairs": 0}
@@ -239,26 +241,61 @@ class JoinEngine:
             self._qstores.put(key, hit)
         return hit
 
+    def sketch_store(self, key: tuple, vecs):
+        """The 1-bit sketch companion of one index artifact (sketch8 mode;
+        built once, LRU'd). Same key scheme as ``quant_store`` — the
+        sketch tier always rides on top of the int8 tier it filters for.
+        """
+        hit = self._sstores.touch(key)
+        if hit is None:
+            t0 = time.perf_counter()
+            if key[0] == "sharded":
+                from repro.core import distributed
+                hit = distributed.sketch_sharded(
+                    vecs, n_data=int(self.Y.shape[0]))
+            else:
+                from repro.quant import build_sketch
+                hit = build_sketch(vecs)
+            self.build_seconds += time.perf_counter() - t0
+            self.build_counts["sketch"] += 1
+            self._sstores.put(key, hit)
+        return hit
+
+    def _filter_stores(self, key: tuple, vecs, cfg: JoinConfig,
+                       stats: JoinStats):
+        """(qstore, sstore) for one artifact under ``cfg.quant`` — the
+        int8 store for both filter modes, plus the sketch tier for
+        sketch8; ``stats.quant_bytes`` accumulates what is resident."""
+        if cfg.quant not in QUANT_FILTER_MODES:
+            return None, None
+        qstore = self.quant_store(key, vecs)
+        stats.quant_bytes += qstore.nbytes
+        sstore = None
+        if cfg.quant == "sketch8":
+            sstore = self.sketch_store(key, vecs)
+            stats.quant_bytes += sstore.nbytes
+        return qstore, sstore
+
     def warm_quant(self, X, cfg: JoinConfig | None = None, *,
                    method: str | None = None) -> None:
-        """Pre-build the QuantStore artifact a join of ``X`` would use
-        (no-op unless the resolved config says ``quant="sq8"``).
+        """Pre-build the QuantStore (and, for sketch8, SketchStore)
+        artifacts a join of ``X`` would use (no-op unless the resolved
+        config names a filtering quant mode).
 
         The single owner of the artifact-key scheme — benchmarks and
         deployments warm through this instead of mirroring the keys."""
         cfg = self._resolve(cfg, method, None)
-        if cfg.quant != "sq8":
+        if cfg.quant not in QUANT_FILTER_MODES:
             return
         if cfg.method == "nlj":
-            self.quant_store(("y",), self.Y)
+            key, vecs = ("y",), self.Y
         elif self.n_shards > 1:
-            self.quant_store(("sharded", _fingerprint(X)),
-                             self.sharded_index(X))
+            key, vecs = ("sharded", _fingerprint(X)), self.sharded_index(X)
         elif cfg.method in _MI_METHODS:
-            self.quant_store(("merged", _fingerprint(X)),
-                             self.merged_index(X).vecs)
+            key, vecs = ("merged", _fingerprint(X)), self.merged_index(X).vecs
         else:
-            self.quant_store(("index_y",), self.index_y().vecs)
+            key, vecs = ("index_y",), self.index_y().vecs
+        self._filter_stores(key, vecs, cfg, JoinStats())
 
     def adopt(self, *, index_y: GraphIndex | None = None, X=None,
               index_x: GraphIndex | None = None,
@@ -312,8 +349,11 @@ class JoinEngine:
         ``cfg.quant == "sq8"`` routes the distance hot path through the
         cached QuantStore companion of whichever index artifact the
         method uses (filter on certified int8 lower bounds, exact f32
-        re-rank of survivors — emitted pairs are unchanged)."""
-        from repro.core.join import exact_join_pairs, quant_join_pairs
+        re-rank of survivors — emitted pairs are unchanged);
+        ``"sketch8"`` adds the cached 1-bit SketchStore tier in front
+        (Hamming bounds prune before any int8 work)."""
+        from repro.core.join import (exact_join_pairs, quant_join_pairs,
+                                     sketch_join_pairs)
 
         cfg = self._resolve(cfg, method, theta)
         X = jnp.asarray(X)
@@ -327,11 +367,14 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            if cfg.quant == "sq8":
-                store = self.quant_store(("y",), self.Y)
-                stats.quant_bytes = store.nbytes
+            qstore, sstore = self._filter_stores(("y",), self.Y, cfg, stats)
+            if cfg.quant == "sketch8":
+                pairs, stats.n_esc8, stats.n_rerank = sketch_join_pairs(
+                    X, self.Y, cfg.theta, sstore, qstore,
+                    impl=cfg.traversal.dist_impl)
+            elif cfg.quant == "sq8":
                 pairs, stats.n_rerank = quant_join_pairs(
-                    X, self.Y, cfg.theta, store,
+                    X, self.Y, cfg.theta, qstore,
                     impl=cfg.traversal.dist_impl)
             else:
                 pairs = exact_join_pairs(X, self.Y, cfg.theta,
@@ -347,24 +390,20 @@ class JoinEngine:
         t0 = time.perf_counter()
         if cfg.method in _MI_METHODS:
             merged = self.merged_index(X)
-            qstore = None
-            if cfg.quant == "sq8":
-                qstore = self.quant_store(("merged", _fingerprint(X)),
-                                          merged.vecs)
-                stats.quant_bytes = qstore.nbytes
+            qstore, sstore = self._filter_stores(
+                ("merged", _fingerprint(X)), merged.vecs, cfg, stats)
             stats.other_seconds += time.perf_counter() - t0
-            W.run_mi_join(X, merged, cfg, stats, all_pairs, qstore=qstore)
+            W.run_mi_join(X, merged, cfg, stats, all_pairs, qstore=qstore,
+                          sstore=sstore)
         else:
             iy = self.index_y()
             ix = (self.index_x(X)
                   if cfg.method in ("es_hws", "es_sws") else None)
-            qstore = None
-            if cfg.quant == "sq8":
-                qstore = self.quant_store(("index_y",), iy.vecs)
-                stats.quant_bytes = qstore.nbytes
+            qstore, sstore = self._filter_stores(("index_y",), iy.vecs,
+                                                 cfg, stats)
             stats.other_seconds += time.perf_counter() - t0
             W.run_search_join(X, iy, ix, cfg, stats, all_pairs,
-                              qstore=qstore)
+                              qstore=qstore, sstore=sstore)
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
@@ -387,12 +426,10 @@ class JoinEngine:
                 f"{cfg.method!r} (work-sharing caches are per-device)")
         mesh, axes = self._mesh_axes()
         smi = self.sharded_index(X)
-        qstore = None
-        if cfg.quant == "sq8":
-            # one QuantStore per shard (per-shard scale grids), cached
-            # alongside the sharded index it compresses
-            qstore = self.quant_store(("sharded", _fingerprint(X)), smi)
-            stats.quant_bytes = qstore.nbytes
+        # one QuantStore / SketchStore per shard (per-shard scale and
+        # sketch grids), cached alongside the sharded index they compress
+        qstore, sstore = self._filter_stores(
+            ("sharded", _fingerprint(X)), smi, cfg, stats)
         # adapt ⇒ hybrid BBFS for every query: a sound superset of the
         # per-query adaptive split (per-shard OOD prediction would need
         # per-shard side tables; the hybrid path subsumes the BFS one).
@@ -401,11 +438,12 @@ class JoinEngine:
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
             wave_size=cfg.wave_size, hybrid=hybrid, qstore=qstore,
-            n_data=int(self.Y.shape[0]))
+            sstore=sstore, n_data=int(self.Y.shape[0]))
         stats.expand_seconds += time.perf_counter() - t0
         stats.n_dist += int(dstats["n_dist"])
         stats.n_overflow += int(dstats["n_overflow"])
         stats.n_rerank += int(dstats.get("n_rerank", 0))
+        stats.n_esc8 += int(dstats.get("n_esc8", 0))
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
         pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
         return JoinResult(pairs=pairs, stats=stats)
@@ -435,7 +473,8 @@ class JoinEngine:
         of s_Y, so later batches keep getting cheaper (the streaming form
         of the paper's MST parent order).
         """
-        from repro.core.join import exact_join_pairs, quant_join_pairs
+        from repro.core.join import (exact_join_pairs, quant_join_pairs,
+                                     sketch_join_pairs)
 
         if self.n_shards > 1:
             raise NotImplementedError(
@@ -449,11 +488,15 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            if cfg.quant == "sq8":
-                store = self.quant_store(("y",), self.Y)
-                stats.quant_bytes = store.nbytes
+            qstore, sstore = self._filter_stores(("y",), self.Y, cfg,
+                                                 stats)
+            if cfg.quant == "sketch8":
+                pairs, stats.n_esc8, stats.n_rerank = sketch_join_pairs(
+                    X_batch, self.Y, cfg.theta, sstore, qstore,
+                    impl=cfg.traversal.dist_impl)
+            elif cfg.quant == "sq8":
                 pairs, stats.n_rerank = quant_join_pairs(
-                    X_batch, self.Y, cfg.theta, store,
+                    X_batch, self.Y, cfg.theta, qstore,
                     impl=cfg.traversal.dist_impl)
             else:
                 pairs = exact_join_pairs(X_batch, self.Y, cfg.theta,
@@ -469,13 +512,10 @@ class JoinEngine:
             # distinct batch — greedy work offloaded to construction.
             all_pairs: list[np.ndarray] = []
             merged = self.merged_index(X_batch)
-            qstore = None
-            if cfg.quant == "sq8":
-                qstore = self.quant_store(
-                    ("merged", _fingerprint(X_batch)), merged.vecs)
-                stats.quant_bytes = qstore.nbytes
+            qstore, sstore = self._filter_stores(
+                ("merged", _fingerprint(X_batch)), merged.vecs, cfg, stats)
             W.run_mi_join(X_batch, merged, cfg, stats, all_pairs,
-                          qid_offset=offset, qstore=qstore)
+                          qid_offset=offset, qstore=qstore, sstore=sstore)
             pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                      else np.empty((0, 2), np.int64))
             result = JoinResult(pairs=pairs, stats=stats)
@@ -491,10 +531,8 @@ class JoinEngine:
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
                        stats: JoinStats, offset: int) -> JoinResult:
         iy = self.index_y()
-        qstore = None
-        if cfg.quant == "sq8":
-            qstore = self.quant_store(("index_y",), iy.vecs)
-            stats.quant_bytes = qstore.nbytes
+        qstore, sstore = self._filter_stores(("index_y",), iy.vecs, cfg,
+                                             stats)
         sy = int(iy.start)
         S = cfg.traversal.seeds_max
         nb = int(X_batch.shape[0])
@@ -518,7 +556,7 @@ class JoinEngine:
 
             out = W.run_search_wave(iy, xw, qids_g, lane_valid, cfg, stats,
                                     seeds=seeds, seeds_valid=seeds_valid,
-                                    qstore=qstore)
+                                    qstore=qstore, sstore=sstore)
             all_pairs.append(out.pairs)
 
             if caching:

@@ -31,6 +31,7 @@ from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
                               TraversalConfig)
 from repro.kernels import ops
+from repro.quant.sketch import SketchStore, sketch_queries
 from repro.quant.store import QuantStore, quantize_queries
 
 Array = jax.Array
@@ -118,7 +119,9 @@ def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
 def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
               traverse_nondata: bool, dist_impl: str | None,
               quant: QuantStore | None = None, qx: Array | None = None,
-              xerr: Array | None = None):
+              xerr: Array | None = None,
+              sketch: SketchStore | None = None, sx: Array | None = None,
+              sxcum: Array | None = None, esc_th2=None):
     """Probe each query's own neighborhood row in the merged index."""
     B = x.shape[0]
     W = traversal.bitmap_words(merged.n_nodes)
@@ -129,15 +132,16 @@ def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
         jnp.uint32(1) << (qids & 31).astype(jnp.uint32))
     rows = merged.nbrs[qids]                                 # (B, R)
     valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
-    dist, valid, visited, n_new = traversal._probe(
+    dist, valid, visited, n_new, n_esc = traversal._probe(
         merged.vecs, x, rows, valid, visited,
         n_data=merged.n_data, traverse_nondata=traverse_nondata,
-        dist_impl=dist_impl, quant=quant, qx=qx, xerr=xerr)
+        dist_impl=dist_impl, quant=quant, qx=qx, xerr=xerr,
+        sketch=sketch, sx=sx, sxcum=sxcum, esc_th2=esc_th2)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(
         jnp.where(valid, rows, NO_NODE),
         jnp.argmin(dist, axis=1)[:, None], axis=1)[:, 0]
-    return rows, dist, valid, visited, n_new, best, besti
+    return rows, dist, valid, visited, n_new, n_esc, best, besti
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +174,8 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
                     lane_valid: np.ndarray, cfg: JoinConfig,
                     stats: JoinStats, *, seeds: np.ndarray,
                     seeds_valid: np.ndarray,
-                    qstore: QuantStore | None = None) -> WaveOutput:
+                    qstore: QuantStore | None = None,
+                    sstore: SketchStore | None = None) -> WaveOutput:
     """One padded wave of greedy search + range expansion (Alg. 1 online).
 
     ``seeds``/``seeds_valid`` are (B, S) arrays the caller filled from
@@ -179,20 +184,25 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
 
     With ``qstore`` (sq8 mode) the traversal filters on certified lower
     bounds from int8 codes and the pooled survivors are re-ranked with
-    the exact f32 kernel before pairs are emitted.
+    the exact f32 kernel before pairs are emitted. ``sstore`` (sketch8
+    mode) adds the 1-bit sketch tier in front: Hamming bounds prune
+    candidates before any int8 work (pruned vs escalated counts land in
+    ``stats.n_dist`` / ``stats.n_esc8``).
     """
     tcfg = effective_tcfg(cfg)
     seeds_j = jnp.asarray(seeds)
     sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
-    qx = xerr = None
+    qx = xerr = sx = sxcum = None
     if qstore is not None:
         qx, _, xerr = quantize_queries(xw, qstore)
+    if sstore is not None:
+        sx, sxcum = sketch_queries(xw, sstore)
 
     t0 = time.perf_counter()
     g = traversal.greedy_search(
         index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
         n_data=index_y.n_data, traverse_nondata=True,
-        quant=qstore, qx=qx, xerr=xerr)
+        quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sx, sxcum=sxcum)
     jax.block_until_ready(g.beam_dist)
     stats.greedy_seconds += time.perf_counter() - t0
 
@@ -203,7 +213,8 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         hybrid=False, traverse_nondata=True,
         init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
         visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
-        n_dist=g.n_dist, quant=qstore, qx=qx, xerr=xerr)
+        n_dist=g.n_dist, quant=qstore, qx=qx, xerr=xerr,
+        sketch=sstore, sx=sx, sxcum=sxcum, n_esc=g.n_esc)
     jax.block_until_ready(r.pool_idx)
     stats.expand_seconds += time.perf_counter() - t0
 
@@ -220,6 +231,7 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
                                       qstore=qstore, xerr=xerr)
     pairs = collect_pairs(qids, keep, pool_idx)
     stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
+    stats.n_esc8 += int(np.asarray(r.n_esc)[lv].sum())
     stats.n_iters += int(g.n_iters) + int(r.n_iters)
     stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
     stats.other_seconds += time.perf_counter() - t0
@@ -278,7 +290,8 @@ def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
 def run_search_join(X: Array, index_y: GraphIndex,
                     index_x: GraphIndex | None, cfg: JoinConfig,
                     stats: JoinStats, all_pairs: list[np.ndarray], *,
-                    qstore: QuantStore | None = None) -> None:
+                    qstore: QuantStore | None = None,
+                    sstore: SketchStore | None = None) -> None:
     """Full-batch index / es / es_hws / es_sws join (greedy + BFS)."""
     nq = X.shape[0]
     needs_mst = cfg.method in ("es_hws", "es_sws")
@@ -308,7 +321,7 @@ def run_search_join(X: Array, index_y: GraphIndex,
         stats.other_seconds += time.perf_counter() - t0
         out = run_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
                               seeds=seeds, seeds_valid=seeds_valid,
-                              qstore=qstore)
+                              qstore=qstore, sstore=sstore)
         all_pairs.append(out.pairs)
         t0 = time.perf_counter()
         cache_n = update_sws_cache(cache, out, qids, cfg, stats, cache_n)
@@ -322,13 +335,15 @@ def run_search_join(X: Array, index_y: GraphIndex,
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 stats: JoinStats, all_pairs: list[np.ndarray], *,
                 qid_offset: int = 0,
-                qstore: QuantStore | None = None) -> None:
+                qstore: QuantStore | None = None,
+                sstore: SketchStore | None = None) -> None:
     """es_mi / es_mi_adapt join (greedy offloaded; BFS or adaptive BBFS).
 
     ``qid_offset`` shifts the emitted query ids — used by the streaming
     engine, where a batch of local queries carries global ids.
     ``qstore`` quantizes the *merged* index (data + query nodes); pooled
-    survivors are re-ranked exactly before emission.
+    survivors are re-ranked exactly before emission. ``sstore`` adds the
+    1-bit sketch tier above int8 (sketch8 mode).
     """
     nq = X.shape[0]
     tcfg = cfg.traversal
@@ -358,15 +373,19 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
             node_ids = jnp.asarray(qids, jnp.int32) + n_data
             lv_j = jnp.asarray(lane_valid)
 
-            qx = xerr = None
+            qx = xerr = sx = sxcum = None
             if qstore is not None:
                 qx, _, xerr = quantize_queries(xw, qstore)
+            if sstore is not None:
+                sx, sxcum = sketch_queries(xw, sstore)
 
             t0 = time.perf_counter()
-            rows, dist, valid, visited, n_new, best, besti = _mi_probe(
-                merged, xw, node_ids, lv_j,
-                traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
-                quant=qstore, qx=qx, xerr=xerr)
+            rows, dist, valid, visited, n_new, n_esc0, best, besti = \
+                _mi_probe(
+                    merged, xw, node_ids, lv_j,
+                    traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
+                    quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sx,
+                    sxcum=sxcum, esc_th2=jnp.float32(cfg.theta) ** 2)
             jax.block_until_ready(dist)
             stats.greedy_seconds += time.perf_counter() - t0
 
@@ -376,7 +395,8 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 hybrid=hybrid, traverse_nondata=hybrid,
                 init_idx=rows, init_dist=dist, init_valid=valid,
                 visited=visited, best_dist=best, best_idx=besti,
-                n_dist=n_new, quant=qstore, qx=qx, xerr=xerr)
+                n_dist=n_new, quant=qstore, qx=qx, xerr=xerr,
+                sketch=sstore, sx=sx, sxcum=sxcum, n_esc=n_esc0)
             jax.block_until_ready(r.pool_idx)
             stats.expand_seconds += time.perf_counter() - t0
 
@@ -393,6 +413,7 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
             all_pairs.append(collect_pairs(qids + qid_offset, keep,
                                            pool_idx))
             stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
+            stats.n_esc8 += int(np.asarray(r.n_esc)[lv].sum())
             stats.n_iters += int(r.n_iters)
             stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
             stats.other_seconds += time.perf_counter() - t0

@@ -4,6 +4,8 @@
 #   distance.py         pairwise (MXU) + rowwise (VPU) squared-L2, f32
 #   int8.py             quantized-domain twins over QuantStore codes
 #                       (int8×int8 MXU dots / int32 difference form)
+#   bits.py             1-bit sketch Hamming distances over SketchStore
+#                       codes (uint32 XOR + SWAR popcount, VPU)
 #   nlj.py              fused exact join count (distance+compare+count)
 #   gather_distance.py  scalar-prefetch fused neighbor-gather + distance
 #   topk_merge.py       sort-free rank-select beam merge

@@ -32,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bits as _bits
 from repro.kernels import distance as _distance
 from repro.kernels import int8 as _int8
 from repro.kernels import nlj as _nlj
@@ -278,6 +279,55 @@ def rowwise_sq_dists_int8(qx: Array, qcands: Array, scales: Array, *,
     out = _int8.rowwise_sq_dists_int8_pallas(
         qxp, qcp, sp, bm=bm, bkk=bkk, group_size=group_size,
         interpret=(impl == "pallas_interpret"))
+    return out[:B, :K]
+
+
+# ---------------------------------------------------------------------------
+# 1-bit sketch (Hamming) kernels — the tier above int8
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pairwise_hamming(cx: Array, cy: Array, *, impl: str | None = None
+                     ) -> Array:
+    """(B, W) × (N, W) uint32 sketch codes → (B, N) int32 Hamming counts.
+
+    Counts convert to certified L2 lower bounds via the per-vector slack
+    tables (``quant.sketch.sketch_lower_bound_pairwise``)."""
+    impl = impl or default_impl()
+    B, W = cx.shape
+    N, _ = cy.shape
+    if B == 0 or N == 0 or W == 0:
+        return jnp.zeros((B, N), jnp.int32)
+    if impl == "ref":
+        return _ref.pairwise_hamming(cx, cy)
+    Bp, bm = _grid_dim(B, 128, 8)
+    Np, bn = _grid_dim(N, 128, 8)
+    cxp = _pad_rows(cx, Bp)
+    cyp = _pad_rows(cy, Np)
+    out = _bits.pairwise_hamming_pallas(
+        cxp, cyp, bm=bm, bn=bn, interpret=(impl == "pallas_interpret"))
+    return out[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rowwise_hamming(cx: Array, ccands: Array, *, impl: str | None = None
+                    ) -> Array:
+    """(B, W) × (B, K, W) uint32 → (B, K) int32 Hamming counts over
+    per-query gathered candidate codes (the traversal's shape)."""
+    impl = impl or default_impl()
+    B, W = cx.shape
+    _, K, _ = ccands.shape
+    if B == 0 or K == 0 or W == 0:
+        return jnp.zeros((B, K), jnp.int32)
+    if impl == "ref":
+        return _ref.rowwise_hamming(cx, ccands)
+    Bp, bm = _grid_dim(B, 8, 8)
+    Kp, bkk = _grid_dim(K, 128, 128)
+    cxp = _pad_rows(cx, Bp)
+    ccp = _pad_axis(_pad_rows(ccands, Bp), Kp, axis=1)
+    out = _bits.rowwise_hamming_pallas(
+        cxp, ccp, bm=bm, bkk=bkk, interpret=(impl == "pallas_interpret"))
     return out[:B, :K]
 
 

@@ -88,6 +88,30 @@ def rowwise_sq_dists_int8(qx: Array, qcands: Array, scales: Array, *,
                             _dequant(qcands, scales, group_size))
 
 
+def pairwise_hamming(cx: Array, cy: Array) -> Array:
+    """Pairwise Hamming distance between packed sign-bit sketch codes.
+
+    Args:
+      cx: (B, W) uint32 query codes; cy: (N, W) uint32 data codes.
+    Returns:
+      (B, N) int32 differing-bit counts.
+    """
+    pc = jax.lax.population_count(cx[:, None, :] ^ cy[None, :, :])
+    return jnp.sum(pc.astype(jnp.int32), axis=-1)
+
+
+def rowwise_hamming(cx: Array, ccands: Array) -> Array:
+    """Per-query Hamming distance over gathered candidate codes.
+
+    Args:
+      cx: (B, W) uint32 query codes; ccands: (B, K, W) uint32.
+    Returns:
+      (B, K) int32 differing-bit counts.
+    """
+    pc = jax.lax.population_count(ccands ^ cx[:, None, :])
+    return jnp.sum(pc.astype(jnp.int32), axis=-1)
+
+
 def topk_merge(beam_dist: Array, beam_idx: Array, cand_dist: Array,
                cand_idx: Array) -> tuple[Array, Array]:
     """Merge a sorted beam with new candidates, keep the L smallest.

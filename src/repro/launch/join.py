@@ -36,14 +36,17 @@ def main(argv=None) -> int:
     ap.add_argument("--theta-q", type=int, default=1,
                     help="1-based index into the 7 Table-2-style thresholds")
     ap.add_argument("--wave", type=int, default=256)
-    ap.add_argument("--quant", choices=("off", "sq8"), default=None,
-                    help="compressed storage: traverse int8 QuantStore "
-                         "codes, re-rank survivors with exact f32 "
+    ap.add_argument("--quant", choices=("off", "sq8", "sketch8"),
+                    default=None,
+                    help="compressed storage: sq8 traverses int8 "
+                         "QuantStore codes and re-ranks survivors with "
+                         "exact f32; sketch8 adds a 1-bit Hamming-sketch "
+                         "prune tier above int8 "
                          "(default: the engine spec's quant mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine-spec", default="default",
                     help="EngineSpec preset "
-                         "(default|ci|serving|serving_sq8)")
+                         "(default|ci|serving|serving_sq8|serving_sketch8)")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the data side over N local devices (MI "
                          "methods); 0 = one shard per device")
@@ -91,6 +94,10 @@ def main(argv=None) -> int:
         extra = (f", rerank={res.stats.n_rerank}, "
                  f"quant_bytes={res.stats.quant_bytes}"
                  if quant != "off" else "")
+        if quant == "sketch8":
+            pruned = res.stats.n_dist - res.stats.n_esc8
+            extra += (f", esc8={res.stats.n_esc8}, sketch_pruned={pruned}"
+                      f" ({pruned / max(res.stats.n_dist, 1):.0%})")
         print(f"[join] {len(res.pairs)} pairs in {dt:.2f}s "
               f"(n_dist={res.stats.n_dist}, ood={res.stats.n_ood}, "
               f"builds={eng.n_index_builds}{extra})")

@@ -1,21 +1,39 @@
-"""Compressed vector storage (int8) with certified re-rank bounds.
+"""Compressed vector storage with certified re-rank bounds.
 
-``QuantStore`` is the offline artifact (built once alongside the graph
-index); ``kernels/int8.py`` computes quantized-domain distances;
-``kernels/ops.quant_lower_bound`` converts them into certified bounds the
-filter-then-rerank join pipeline filters on. See docs/ARCHITECTURE.md
-§"Quantized storage & re-rank".
+Two tiers, composable as a progressive-refinement cascade (sketch8 mode):
+
+  * ``QuantStore`` (int8, ``store.py``) — per-dimension-group scaled int8
+    with exact per-vector errors; ``kernels/int8.py`` computes
+    quantized-domain distances and ``kernels/ops.quant_lower_bound``
+    converts them into certified bounds.
+  * ``SketchStore`` (1-bit, ``sketch.py``) — packed sign bits of rotated,
+    centered dims with exact per-vector order-statistics slack tables;
+    ``kernels/bits.py`` computes Hamming distances and
+    ``sketch.sketch_lower_bound_*`` converts them into certified bounds
+    that prune candidates before any int8 work.
+
+The filter-then-rerank join pipeline filters on these bounds and re-ranks
+survivors exactly. See docs/ARCHITECTURE.md §"Quantized storage & re-rank".
 """
+from repro.quant.sketch import (DEFAULT_N_CHECKPOINTS, SketchStore,
+                                build_sketch, sketch_lower_bound_pairwise,
+                                sketch_lower_bound_rowwise, sketch_queries)
 from repro.quant.store import (DEFAULT_GROUP_SIZE, QuantStore, build_store,
                                dequantize, dim_scales, quantize_on_grid,
                                quantize_queries)
 
 __all__ = [
     "DEFAULT_GROUP_SIZE",
+    "DEFAULT_N_CHECKPOINTS",
     "QuantStore",
+    "SketchStore",
+    "build_sketch",
     "build_store",
     "dequantize",
     "dim_scales",
     "quantize_on_grid",
     "quantize_queries",
+    "sketch_lower_bound_pairwise",
+    "sketch_lower_bound_rowwise",
+    "sketch_queries",
 ]

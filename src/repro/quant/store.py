@@ -44,6 +44,13 @@ DEFAULT_GROUP_SIZE = 128
 _EPS = 1e-12
 
 
+def arrays_nbytes(*arrays) -> int:
+    """Total bytes resident for a set of arrays — the single accounting
+    helper behind every store's ``nbytes`` (plain and sharded, int8 and
+    sketch), so the reported footprints cannot drift apart."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrays)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantStore:
@@ -66,8 +73,7 @@ class QuantStore:
     def nbytes(self) -> int:
         """Bytes resident for the quantized artifact (reported by the
         engine as its bytes-resident footprint)."""
-        return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-                   for a in (self.q, self.scales, self.norms, self.err))
+        return arrays_nbytes(self.q, self.scales, self.norms, self.err)
 
 
 def n_groups(d: int, group_size: int = DEFAULT_GROUP_SIZE) -> int:

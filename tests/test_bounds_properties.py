@@ -1,0 +1,193 @@
+"""Certified-bounds property suite for the progressive-refinement cascade.
+
+Machine-checks the correctness contract every tier of the sketch8 cascade
+rests on: for arbitrary data — random dims (including sub-kernel-block
+and empty shapes), random scale regimes, and sentinel-padded tables —
+each tier's certified bound must bracket the exact f32 distance:
+
+    sketch_lb  ≤  refined_lb (= max(sketch_lb, sq8_lb))  ≤  d  ≤  sq8_ub
+
+The first inequality holds by construction (the traversal escalates with
+``max``); the bracketing inequalities are what hypothesis hunts
+violations of. A violation here means the filter could reject a true
+pair — the one failure mode the exact re-rank cannot repair.
+
+Kept separate from tests/test_kernel_properties.py so the deterministic
+suites still run in environments without the ``dev`` extra; this module
+self-skips.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
+from repro.quant import (build_sketch, build_store,  # noqa: E402
+                         quantize_queries, sketch_lower_bound_pairwise,
+                         sketch_lower_bound_rowwise, sketch_queries)
+
+# f32 tolerance for "bracketing": bounds are certified up to float
+# rounding of sums over d terms at the data's magnitude.
+
+
+def _tol(d, scale):
+    return 1e-3 * max(d, 1) * scale ** 2
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 8), st.integers(1, 80), st.integers(1, 200),
+       st.integers(0, 2**31 - 1))
+def test_tier_chain_brackets_true_distance(B, N, d, seed):
+    """sketch_lb ≤ refined_lb ≤ d ≤ sq8_ub on arbitrary shapes/scales —
+    the full cascade chain, including dims far below one kernel block."""
+    rng = np.random.default_rng(seed)
+    scale = float(rng.uniform(0.05, 20.0))
+    Y = (rng.normal(size=(N, d)) * scale).astype(np.float32)
+    X = (rng.normal(size=(B, d)) * scale).astype(np.float32)
+    qs = build_store(Y, group_size=32)
+    ss = build_sketch(Y, seed=seed % 7)
+    true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X), jnp.asarray(Y)))
+    tol = _tol(d, scale)
+
+    # sketch tier
+    sxc, sxcum = sketch_queries(X, ss)
+    h = np.asarray(ops.pairwise_hamming(sxc, ss.codes, impl="ref"))
+    lb_s = np.asarray(sketch_lower_bound_pairwise(
+        jnp.asarray(h), sxcum, ss.cum, ss.hs, ss.iso))
+    assert (lb_s <= true + tol).all(), (lb_s - true).max()
+
+    # int8 tier
+    qx, xn, xe = quantize_queries(X, qs)
+    dhat = np.asarray(ops.pairwise_sq_dists_int8(
+        qx, qs.q, qs.scales, group_size=qs.group_size, impl="ref"))
+    slack = jnp.asarray(np.asarray(xe)[:, None]
+                        + np.asarray(qs.err)[None, :])
+    lb8 = np.asarray(ops.quant_lower_bound(jnp.asarray(dhat), slack))
+    ub8 = np.asarray(ops.quant_upper_bound(jnp.asarray(dhat), slack))
+
+    # the escalated traversal value: max of two certified lower bounds
+    refined = np.maximum(lb_s, lb8)
+    assert (lb_s <= refined).all()
+    assert (refined <= true + tol).all(), (refined - true).max()
+    assert (ub8 >= true - tol).all(), (true - ub8).max()
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2), st.integers(0, 2), st.integers(1, 64),
+       st.integers(0, 2**31 - 1))
+def test_bounds_on_empty_and_tiny_shapes(B, N, d, seed):
+    """B == 0 / N == 0 and single-row shapes go through every wrapper
+    without shape errors and with vacuously-true bounds."""
+    rng = np.random.default_rng(seed)
+    NN = max(N, 1)
+    Y = rng.normal(size=(NN, d)).astype(np.float32)
+    X = rng.normal(size=(B, d)).astype(np.float32)
+    ss = build_sketch(Y)
+    sxc, sxcum = sketch_queries(X, ss)
+    cy = ss.codes[:N]
+    h = np.asarray(ops.pairwise_hamming(sxc, cy, impl="ref"))
+    assert h.shape == (B, N)
+    if B and N:
+        lb = np.asarray(sketch_lower_bound_pairwise(
+            jnp.asarray(h), sxcum, ss.cum[:N], ss.hs, ss.iso))
+        true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X),
+                                                jnp.asarray(Y[:N])))
+        assert (lb <= true + _tol(d, 1.0)).all()
+    # rowwise with K == 0 candidates
+    empty = jnp.zeros((B, 0, ss.codes.shape[1]), jnp.uint32)
+    assert ops.rowwise_hamming(sxc, empty, impl="ref").shape == (B, 0)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(1, 6), st.integers(4, 60), st.integers(2, 96),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_sentinel_padded_rows_stay_certified(B, N, d, n_pad, seed):
+    """Far-away sentinel pad rows (the sharded path's tail) are excluded
+    from the center statistics but still carry certified bounds — their
+    own slack tables prune them, never a real pair."""
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(N, d)).astype(np.float32)
+    Yp = np.concatenate(
+        [Y, np.full((n_pad, d), 1e3, np.float32)], axis=0)
+    mask = np.ones(N + n_pad, bool)
+    mask[N:] = False
+    ss = build_sketch(Yp, scale_rows=mask)
+    X = rng.normal(size=(B, d)).astype(np.float32)
+    sxc, sxcum = sketch_queries(X, ss)
+    h = np.asarray(ops.pairwise_hamming(sxc, ss.codes, impl="ref"))
+    lb = np.asarray(sketch_lower_bound_pairwise(
+        jnp.asarray(h), sxcum, ss.cum, ss.hs, ss.iso))
+    true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X),
+                                            jnp.asarray(Yp)))
+    assert (lb <= true + _tol(d, 1e3)).all()
+    # sentinels are self-pruning: their bound is far above any plausible θ
+    assert (lb[:, N:] > 1e4).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 12), st.integers(1, 48), st.integers(1, 40),
+       st.integers(0, 2**31 - 1))
+def test_hamming_kernels_match_oracle(B, N, W, seed):
+    """Pallas XOR/popcount kernels == jnp reference == numpy bitcount, on
+    arbitrary word counts (sub-block and multi-block)."""
+    rng = np.random.default_rng(seed)
+    cx = jnp.asarray(rng.integers(0, 2**32, (B, W), dtype=np.uint32))
+    cy = jnp.asarray(rng.integers(0, 2**32, (N, W), dtype=np.uint32))
+    want = np.asarray(ref.pairwise_hamming(cx, cy))
+    # independent oracle: numpy unpackbits
+    ux = np.unpackbits(np.asarray(cx).view(np.uint8), axis=1)
+    uy = np.unpackbits(np.asarray(cy).view(np.uint8), axis=1)
+    np.testing.assert_array_equal(
+        want, (ux[:, None, :] != uy[None, :, :]).sum(-1))
+    got = np.asarray(ops.pairwise_hamming(cx, cy, impl="pallas_interpret"))
+    np.testing.assert_array_equal(got, want)
+
+    K = min(N, 7)
+    idx = rng.integers(0, N, (B, K))
+    cc = jnp.asarray(np.asarray(cy)[idx])
+    row = np.asarray(ops.rowwise_hamming(cx, cc, impl="pallas_interpret"))
+    np.testing.assert_array_equal(row, want[np.arange(B)[:, None], idx])
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 8), st.integers(2, 120), st.integers(0, 2**31 - 1))
+def test_sketch_encode_exactness(B, d, seed):
+    """The slack table is the exact sorted-prefix-sum at the checkpoint
+    grid; codes are the sign bits; the rotation is an isometry to f32
+    rounding; rowwise bound matches the pairwise bound on gathers."""
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(16, d)).astype(np.float32)
+    ss = build_sketch(Y, seed=seed % 5)
+    X = rng.normal(size=(B, d)).astype(np.float32)
+    codes, cum = sketch_queries(X, ss)
+    z = (X - np.asarray(ss.mu)) @ np.asarray(ss.rot).T
+    s = np.sort(z * z, axis=1)
+    cumfull = np.concatenate(
+        [np.zeros((B, 1), np.float32), np.cumsum(s, axis=1)], axis=1)
+    assert_allclose(np.asarray(cum), cumfull[:, np.asarray(ss.hs)],
+                    rtol=1e-5, atol=1e-5)
+    ux = np.unpackbits(np.asarray(codes).view(np.uint8),
+                       axis=1, bitorder="little")[:, :d]
+    np.testing.assert_array_equal(ux.astype(bool), z > 0)
+    # isometry: rotated distances equal true distances to f32 rounding
+    zy = (Y - np.asarray(ss.mu)) @ np.asarray(ss.rot).T
+    dz = ((z[:, None, :] - zy[None, :, :]) ** 2).sum(-1)
+    dt = ((X[:, None, :] - Y[None, :, :]) ** 2).sum(-1)
+    assert_allclose(dz, dt, rtol=1e-4, atol=1e-4 * d)
+    # rowwise == pairwise bound on gathered candidates
+    K = 5
+    idx = rng.integers(0, 16, (B, K))
+    h_pw = np.asarray(ops.pairwise_hamming(codes, ss.codes, impl="ref"))
+    lb_pw = np.asarray(sketch_lower_bound_pairwise(
+        jnp.asarray(h_pw), cum, ss.cum, ss.hs, ss.iso))
+    ccodes = jnp.asarray(np.asarray(ss.codes)[idx])
+    ccum = jnp.asarray(np.asarray(ss.cum)[idx])
+    h_rw = np.asarray(ops.rowwise_hamming(codes, ccodes, impl="ref"))
+    lb_rw = np.asarray(sketch_lower_bound_rowwise(
+        jnp.asarray(h_rw), cum, ccum, ss.hs, ss.iso))
+    assert_allclose(lb_rw, lb_pw[np.arange(B)[:, None], idx],
+                    rtol=1e-6, atol=1e-6)

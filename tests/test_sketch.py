@@ -1,0 +1,202 @@
+"""SketchTier end-to-end: the 1-bit progressive-refinement filter above
+sq8 — store construction, the certified escalation cascade on traversal
+and NLJ paths, engine artifact caching, and the per-tier pruning the
+subsystem exists for."""
+import dataclasses
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+# the bytes-model assertions reuse the benchmark suite's single traffic
+# model (benchmarks/ is a root-level namespace package)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.common import dist_bytes  # noqa: E402
+
+from repro.core import JoinConfig, TraversalConfig, exact_join_pairs
+from repro.core.join import sketch_join_pairs
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
+from repro.quant import build_sketch, build_store
+
+TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                     hybrid_beam=64, seeds_max=8, max_iters=2048)
+BK = dict(k=24, degree=12)
+
+
+def _cfg(method, theta, quant="sketch8", wave=64):
+    return JoinConfig(method=method, theta=theta, traversal=TC,
+                      wave_size=wave, quant=quant)
+
+
+@pytest.fixture(scope="module")
+def engine(ds_manifold):
+    return JoinEngine(ds_manifold.Y, build_kw=BK)
+
+
+@pytest.fixture(scope="module")
+def sketch(ds_manifold):
+    return build_sketch(ds_manifold.Y)
+
+
+# -- store construction -----------------------------------------------------
+
+
+def test_sketch_store_layout(ds_manifold, sketch):
+    Y = ds_manifold.Y
+    n, d = Y.shape
+    assert sketch.n_vectors == n and sketch.dim == d
+    assert sketch.n_words == -(-d // 32)
+    hs = np.asarray(sketch.hs)
+    assert hs[0] == 0 and hs[-1] == d and (np.diff(hs) > 0).all()
+    cum = np.asarray(sketch.cum)
+    assert (np.diff(cum, axis=1) >= 0).all(), "slack table must be monotone"
+    assert 0.99 < float(sketch.iso) <= 1.0
+    assert sketch.nbytes > 0
+
+
+def test_sketch_rotation_certified(sketch):
+    """iso really bounds the f32 rotation's top singular value."""
+    sv = np.linalg.svd(np.asarray(sketch.rot).astype(np.float64),
+                       compute_uv=False)
+    assert float(sketch.iso) * sv.max() ** 2 <= 1.0
+    assert abs(sv.max() - 1.0) < 1e-5 and abs(sv.min() - 1.0) < 1e-5
+
+
+# -- exact NLJ through the cascade ------------------------------------------
+
+
+def test_sketch_join_pairs_equals_exact(ds_manifold, sketch, theta_mid,
+                                        truth_mid):
+    store = build_store(ds_manifold.Y, group_size=16)
+    pairs, n_esc, n_rerank = sketch_join_pairs(
+        ds_manifold.X, ds_manifold.Y, theta_mid, sketch, store)
+    assert set(map(tuple, pairs.tolist())) == set(
+        map(tuple, truth_mid.tolist()))
+    total = ds_manifold.X.shape[0] * ds_manifold.Y.shape[0]
+    # the sketch tier must prune a nontrivial share before any int8 work,
+    # and the f32 band must stay a small fraction of the int8 survivors
+    assert 0 < n_esc < total
+    assert 0 <= n_rerank <= n_esc
+
+
+def test_engine_nlj_sketch8_equals_exact(ds_manifold, engine, theta_mid,
+                                         truth_mid):
+    r = engine.join(ds_manifold.X, _cfg("nlj", theta_mid))
+    assert r.pair_set() == set(map(tuple, truth_mid.tolist()))
+    assert r.stats.quant_bytes > 0
+    assert 0 < r.stats.n_esc8 < r.stats.n_dist
+
+
+# -- the cascade on the traversal pipeline ----------------------------------
+
+
+@pytest.mark.parametrize("method", ["es_mi", "es_mi_adapt"])
+def test_sketch8_pipeline_identical_pair_set(ds_manifold, engine, method):
+    """At a search budget where the f32 pipeline reaches full recall, the
+    sketch8 cascade emits the *identical* pair set: every tier's bound is
+    a certified lower bound, so pooling stays a superset and the exact
+    re-rank trims it to the true predicate."""
+    theta = float(thresholds(ds_manifold, 3)[0])
+    truth = set(map(tuple, exact_join_pairs(ds_manifold.X, ds_manifold.Y,
+                                            theta).tolist()))
+    assert len(truth) > 0
+    r32 = engine.join(ds_manifold.X, _cfg(method, theta, quant="off"))
+    assert r32.pair_set() == truth
+    r8 = engine.join(ds_manifold.X, _cfg(method, theta))
+    assert r8.pair_set() == truth
+    assert r8.stats.quant_bytes > 0
+    assert r8.stats.n_esc8 <= r8.stats.n_dist
+
+
+@pytest.mark.parametrize("method", ["es", "es_sws", "es_hws"])
+def test_sketch8_search_path_sound(ds_manifold, engine, method, theta_mid,
+                                   truth_mid):
+    """Greedy-path methods under sketch8: navigation runs on the Hamming
+    estimate (ordering may diverge from f32) but threshold tests only see
+    certified bounds — soundness and recall must hold."""
+    truth = set(map(tuple, truth_mid.tolist()))
+    r8 = engine.join(ds_manifold.X, _cfg(method, theta_mid))
+    p8 = r8.pair_set()
+    assert not (p8 - truth)
+    assert len(p8 & truth) / max(len(truth), 1) >= 0.85
+
+
+def test_sketch8_ood_dataset_sound(ds_ood):
+    """OOD queries run the bounded hybrid BBFS where estimate-ordering
+    can evict differently — soundness + comparable recall, mirroring the
+    sq8 contract."""
+    eng = JoinEngine(ds_ood.Y, build_kw=BK)
+    theta = float(thresholds(ds_ood, 3)[1])
+    truth = set(map(tuple,
+                    exact_join_pairs(ds_ood.X, ds_ood.Y, theta).tolist()))
+    p32 = eng.join(ds_ood.X,
+                   _cfg("es_mi_adapt", theta, quant="off")).pair_set()
+    p8 = eng.join(ds_ood.X, _cfg("es_mi_adapt", theta)).pair_set()
+    assert not (p8 - truth)
+    rec32 = len(p32 & truth) / max(len(truth), 1)
+    rec8 = len(p8 & truth) / max(len(truth), 1)
+    assert rec8 >= 0.9 * rec32, (rec8, rec32)
+
+
+# -- engine lifecycle -------------------------------------------------------
+
+
+def test_sketch_store_built_once(ds_manifold, theta_mid):
+    eng = JoinEngine(ds_manifold.Y, build_kw=BK)
+    ths = [float(t) for t in thresholds(ds_manifold, 3)[:2]]
+    eng.sweep(ds_manifold.X, ths, _cfg("es_mi", 1.0))
+    assert eng.build_counts["sketch"] == 1, eng.build_counts
+    assert eng.build_counts["quant"] == 1, eng.build_counts
+    # a different artifact (G_Y for the search path) gets its own stores
+    eng.join(ds_manifold.X, _cfg("es", theta_mid))
+    assert eng.build_counts["sketch"] == 2
+    # reuse across repeat joins; sq8 reuses the cached int8 store
+    eng.join(ds_manifold.X, _cfg("es", theta_mid))
+    eng.join(ds_manifold.X, _cfg("es", theta_mid, quant="sq8"))
+    assert eng.build_counts["sketch"] == 2
+    assert eng.build_counts["quant"] == 2
+
+
+def test_warm_quant_prebuilds_sketch(ds_manifold):
+    eng = JoinEngine(ds_manifold.Y, build_kw=BK,
+                     default=_cfg("es_mi", 1.0))
+    eng.warm_quant(ds_manifold.X)
+    assert eng.build_counts["sketch"] == 1
+    assert eng.build_counts["quant"] == 1
+    eng.join(ds_manifold.X, _cfg("es_mi", float(
+        thresholds(ds_manifold, 3)[1])))
+    assert eng.build_counts["sketch"] == 1, "join must reuse warmed store"
+
+
+# -- pruning on high-dim data (the point of the tier) -----------------------
+
+
+@pytest.mark.slow
+def test_sketch_tier_prunes_half_before_int8_high_dim():
+    """On a d≥256 dataset at a tight threshold, the sketch tier prunes
+    ≥ 50% of NLJ candidates before any int8 work, the cascade still
+    emits the exact pair set, and total bytes undercut sq8."""
+    ds = make_dataset("manifold", n_data=3000, n_query=96, dim=256, seed=3)
+    theta = float(thresholds(ds, 7)[0])
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    truth = set(map(tuple, exact_join_pairs(ds.X, ds.Y, theta).tolist()))
+    r8 = eng.join(ds.X, _cfg("nlj", theta))
+    assert r8.pair_set() == truth
+    prune = 1 - r8.stats.n_esc8 / max(r8.stats.n_dist, 1)
+    assert prune >= 0.5, f"sketch tier pruned only {prune:.1%}"
+    d = ds.Y.shape[1]
+    rq = eng.join(ds.X, _cfg("nlj", theta, quant="sq8"))
+    # the benchmark suite's traffic model, end-to-end: the cascade must
+    # move fewer bytes than the int8-only filter
+    bytes_sq8 = dist_bytes(rq, d, "sq8")
+    bytes_sk = dist_bytes(r8, d, "sketch8")
+    assert bytes_sk < bytes_sq8, (bytes_sk, bytes_sq8)
+
+
+def test_quant_mode_validation():
+    with pytest.raises(ValueError):
+        JoinConfig(quant="int4")
+    cfg = JoinConfig(quant="sketch8")
+    assert dataclasses.replace(cfg, quant="off").quant == "off"
