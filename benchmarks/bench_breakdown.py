@@ -1,15 +1,18 @@
 """Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other.
 
 Also the compressed-storage comparison: ``run_quant`` reruns methods with
-``quant ∈ {off, sq8, sketch8}`` on a high-dim (d ≥ 256) dataset and
-reports the per-tier split of distance work and bytes moved per emitted
-pair (``common.dist_bytes`` — d×4 bytes per f32 distance, d×1 per int8
-filter distance, d/8 + slack-table bytes per 1-bit sketch probe, d×4 per
-exact re-rank). For ``sketch8`` the per-tier survivor counts are the
-cascade's shape: ``n_dist`` sketch probes → ``n_esc8`` int8 escalations
-(``sketch_prune`` = the fraction the sketch tier pruned before any int8
-work; ≥ 50% on the NLJ prefilter at d ≥ 256 at the tight thresholds) →
-``n_rerank`` f32 evaluations.
+``quant ∈ {off, sq8, sketch8}`` on a high-dim (d ≥ 256) dataset — each
+mode names a ``FilterCascade`` tier chain (``quant.TIERS_BY_MODE``) the
+engine assembles per index artifact — and reports the per-tier split of
+distance work and bytes moved per emitted pair (``common.dist_bytes`` —
+d×4 bytes per f32 distance, d×1 per int8 filter distance, d/8 +
+slack-table bytes per 1-bit sketch probe, d×4 per exact re-rank). For
+``sketch8`` the per-tier survivor counts are the cascade's shape:
+``n_dist`` sketch probes → ``n_esc8`` int8 escalations (``sketch_prune``
+= the fraction the sketch tier pruned before any int8 work; ≥ 50% on the
+NLJ prefilter at d ≥ 256 at the tight thresholds) → ``n_rerank`` f32
+evaluations. The *offline* half of the story — the cascade driving the
+index build itself — is ``bench_offline.py``.
 """
 from __future__ import annotations
 

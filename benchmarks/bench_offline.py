@@ -1,13 +1,25 @@
 """Paper Fig. 13: offline overhead — separate query+data indexes vs the
-merged index (size and build time)."""
+merged index (size and build time) — plus the FilterCascade build
+comparison: the same ``build_index`` driven through certified int8
+bounds (``quant="sq8"``), which must produce *identical* neighbor lists
+while moving a fraction of the f32 bytes through the construction
+distance sweeps (``core.graph.BuildStats``).
+
+``--json PATH`` additionally writes the rows (plus metadata) as a JSON
+artifact — CI runs this as a smoke step and uploads ``BENCH_offline.json``
+so the offline-build perf trajectory is recorded per commit.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 
 from benchmarks.common import REGIMES, dataset, emit
 from repro.core import build_index, build_merged_index
+from repro.core.graph import BuildStats
 
 
 def _index_bytes(gi) -> int:
@@ -28,15 +40,42 @@ def run(scale: str = "ci", *, regimes=REGIMES) -> list[dict]:
         t_merged = time.perf_counter() - t0
         sep = _index_bytes(iy) + _index_bytes(ix)
         mrg = _index_bytes(im)
+        # cascade-driven build of G_Y: identical edges, f32 traffic cut
+        # to the ambiguous band (per-tier survivor counts in BuildStats)
+        bs = BuildStats()
+        t0 = time.perf_counter()
+        iyq = build_index(ds.Y, k=32, degree=24, quant="sq8",
+                          build_stats=bs)
+        t_casc = time.perf_counter() - t0
+        edges_match = bool(
+            np.array_equal(np.asarray(iy.nbrs), np.asarray(iyq.nbrs)))
         rows.append(dict(
             dataset=regime, sep_build_s=t_sep, merged_build_s=t_merged,
             sep_bytes=sep, merged_bytes=mrg, size_ratio=mrg / sep,
-            time_ratio=t_merged / t_sep))
+            time_ratio=t_merged / t_sep,
+            cascade_build_s=t_casc, edges_match=edges_match,
+            f32_bytes=bs.f32_bytes, f32_bytes_full=bs.f32_bytes_full,
+            f32_saved_frac=bs.f32_saved_frac, tier_bytes=bs.tier_bytes,
+            knn_pairs=bs.knn_pairs, knn_exact=bs.knn_exact,
+            prune_pairs=bs.prune_pairs, prune_exact=bs.prune_exact))
     return rows
 
 
-def main(scale: str = "ci") -> None:
-    emit(run(scale))
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="ci")
+    ap.add_argument("--regimes", nargs="*", default=list(REGIMES))
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + metadata as a JSON artifact "
+                         "(e.g. BENCH_offline.json for the CI upload)")
+    args = ap.parse_args(argv)
+    rows = run(args.scale, regimes=tuple(args.regimes))
+    emit(rows)
+    if args.json:
+        payload = dict(bench="offline", scale=args.scale, rows=rows)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -42,11 +42,18 @@ class EngineSpec:
     ``make_engine`` time); 1 pins single-device execution.
 
     ``quant`` selects the deployment's compressed-storage mode
-    (``core.types.QUANT_MODES``): ``"sq8"`` makes every join served by the
-    engine default to int8 filter + exact f32 re-rank, with QuantStore
-    artifacts cached per index (and per shard); ``"sketch8"`` adds the
-    1-bit sketch tier above int8 (progressive refinement: Hamming bounds
-    prune first, int8 confirms, f32 re-ranks the band).
+    (``core.types.QUANT_MODES``): it names the ``FilterCascade`` tier
+    chain (``quant.TIERS_BY_MODE``) every join served by the engine
+    defaults to — ``"sq8"`` filters on certified int8 bounds + exact f32
+    re-rank, ``"sketch8"`` adds the 1-bit sketch tier above int8
+    (progressive refinement: Hamming bounds prune first, int8 confirms,
+    f32 re-ranks the band) — with tier stores cached per index artifact
+    (and per shard).
+
+    ``quant_build`` drives the *offline* index builds through the same
+    cascade (``graph.build_index(quant=...)``): the kNN sweep and RNG
+    prune run on certified bounds, f32 only for the ambiguous band —
+    neighbor lists are identical to the f32 build.
     """
     k: int = 48                    # kNN candidates per node at build time
     degree: int = 32               # index max out-degree R
@@ -55,9 +62,13 @@ class EngineSpec:
     carry_window: int = 4096       # streaming work-sharing donor window
     max_cached_indexes: int = 4    # per-X artifact LRU capacity
     quant: str = "off"             # storage mode (off | sq8 | sketch8)
+    quant_build: str = "off"       # cascade-driven index builds
 
     def build_kw(self) -> dict:
-        return dict(k=self.k, degree=self.degree, style=self.style)
+        kw = dict(k=self.k, degree=self.degree, style=self.style)
+        if self.quant_build != "off":
+            kw["quant"] = self.quant_build
+        return kw
 
 
 ENGINE_PRESETS = {
@@ -69,14 +80,18 @@ ENGINE_PRESETS = {
     "serving": EngineSpec(n_shards=0, carry_window=16_384,
                           max_cached_indexes=8),
     # serving with compressed storage: ~4× more vectors resident per
-    # shard, distance filtering on int8 with exact re-rank
+    # shard, distance filtering on int8 with exact re-rank; offline
+    # builds run through the same cascade (identical edges, f32 build
+    # traffic cut to the ambiguous band)
     "serving_sq8": EngineSpec(n_shards=0, carry_window=16_384,
-                              max_cached_indexes=8, quant="sq8"),
+                              max_cached_indexes=8, quant="sq8",
+                              quant_build="sq8"),
     # serving with the full progressive-refinement cascade: 1-bit sketch
     # prune → int8 confirm → f32 re-rank (cheapest bytes/candidate at
     # d ≥ 256)
     "serving_sketch8": EngineSpec(n_shards=0, carry_window=16_384,
-                                  max_cached_indexes=8, quant="sketch8"),
+                                  max_cached_indexes=8, quant="sketch8",
+                                  quant_build="sq8"),
 }
 
 

@@ -193,41 +193,86 @@ def sketch_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
         iso=stores[0].iso)
 
 
+def build_sharded_tier(name: str, smi: ShardedMergedIndex, *,
+                       n_data: int | None = None):
+    """Build the per-shard stores behind one cascade tier — the sharded
+    mirror of ``quant.cascade.build_tier_store`` (same names)."""
+    if name == "int8":
+        return quantize_sharded(smi, n_data=n_data)
+    if name == "sketch1":
+        return sketch_sharded(smi, n_data=n_data)
+    raise ValueError(f"unknown sharded tier {name!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCascade:
+    """Per-shard tier stores, assembled like a ``FilterCascade`` but
+    holding shard-stacked arrays (host-side container; each shard_map
+    body reconstructs its *local* ``FilterCascade`` from its slices —
+    see ``_local_cascade``)."""
+    names: tuple           # tier names, cheap → precise
+    stores: tuple          # ShardedQuantStore / ShardedSketchStore, aligned
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.stores)
+
+    def store(self, name: str):
+        return (self.stores[self.names.index(name)]
+                if name in self.names else None)
+
+
+def _local_cascade(names, qq, qscales, qnorms, qerr, group_size,
+                   sc, scum, smu, srot, siso, shs):
+    """Reconstruct one shard's local ``FilterCascade`` from the sliced
+    shard_map arguments (leading shard dim already indexed away by the
+    caller's ``[0]``)."""
+    from repro.quant.cascade import Int8Tier, SketchTier, FilterCascade
+    from repro.quant.sketch import SketchStore
+    from repro.quant.store import QuantStore
+
+    tiers = []
+    for name in names:
+        if name == "int8":
+            tiers.append(Int8Tier(QuantStore(
+                q=qq, scales=qscales, norms=qnorms, err=qerr,
+                group_size=group_size)))
+        elif name == "sketch1":
+            # codes/cum/mu are per-shard; rot/iso/hs shared (replicated)
+            tiers.append(SketchTier(SketchStore(
+                codes=sc, cum=scum, hs=shs, mu=smu, rot=srot, iso=siso)))
+        else:
+            # a new tier needs its stacked-store mirror here (and in
+            # build_sharded_tier / the shard_map arg flattening) —
+            # dropping it silently would change sharded results
+            raise ValueError(f"no sharded reconstruction for tier {name!r}")
+    return FilterCascade(tiers=tuple(tiers)) if tiers else None
+
+
 def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                    sc, scum, smu, srot, siso, shs,
                    xw, qids, lane_valid, *,
                    theta: float, cfg: TraversalConfig, shard_size: int,
-                   hybrid: bool, axis: str, group_size: int, quant: bool,
-                   sketch: bool, n_shards: int, pad: int):
+                   hybrid: bool, axis: str, group_size: int,
+                   tier_names: tuple, n_shards: int, pad: int):
     """Per-shard MI join body (runs under shard_map; all-local compute).
 
-    With ``quant`` the shard traverses its local int8 store against
-    certified lower bounds (queries quantized on the local scale grid)
-    and re-ranks only the ambiguous band of its pool with exact f32
-    distances before returning, so the merged host-side result is
-    identical to the f32 path. ``sketch`` additionally routes every probe
-    through the shard's local 1-bit sketch tier first (queries encoded on
-    the local sketch grid); escalation counts return per shard.
+    With ``tier_names`` the shard reconstructs its *local*
+    ``FilterCascade`` from its store slices and traverses against
+    certified lower bounds (queries encoded on the local grids),
+    re-ranking only the ambiguous band of its pool with exact f32
+    distances before returning — the same escalation code path as the
+    single-device engine, so the merged host-side result is identical to
+    the f32 path. Escalation counts return per shard.
     """
-    from repro.quant.sketch import SketchStore, sketch_encode
-    from repro.quant.store import QuantStore, dim_scales, quantize_on_grid
-
     vecs, nbrs, mnd = vecs[0], nbrs[0], mnd[0]
     index = GraphIndex(vecs=vecs, nbrs=nbrs, start=start[0],
                        mean_nbr_dist=mnd, n_data=shard_size)
     rank = jax.lax.axis_index(axis).astype(jnp.int32)
-    qstore = qx = xerr = None
-    sstore = sxc = sxcum = None
-    if quant:
-        qstore = QuantStore(q=qq[0], scales=qscales[0], norms=qnorms[0],
-                            err=qerr[0], group_size=group_size)
-        sd = dim_scales(qstore.scales, xw.shape[1], group_size)
-        qx, _, xerr = quantize_on_grid(xw, sd)
-    if sketch:
-        # codes/cum/mu are per-shard; rot/iso/hs are shared (replicated)
-        sstore = SketchStore(codes=sc[0], cum=scum[0], hs=shs, mu=smu[0],
-                             rot=srot, iso=siso)
-        sxc, sxcum = sketch_encode(xw, sstore.mu, sstore.rot, sstore.hs)
+    cascade = _local_cascade(tier_names, qq[0], qscales[0], qnorms[0],
+                             qerr[0], group_size, sc[0], scum[0], smu[0],
+                             srot, siso, shs)
+    qc = cascade.encode(xw) if cascade is not None else None
     B = xw.shape[0]
     W = traversal.bitmap_words(vecs.shape[0])
     visited = jnp.zeros((B, W), jnp.uint32)
@@ -247,11 +292,10 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
         visited = visited.at[:, sent >> 5].add(bits[None, :])
     rows = nbrs[node_ids]
     valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
-    dist, valid, visited, n_new, n_esc0 = traversal._probe(
+    dist, ub, valid, visited, n_new, n_esc0 = traversal._probe(
         vecs, xw, rows, valid, visited, n_data=shard_size,
         traverse_nondata=hybrid, dist_impl=cfg.dist_impl,
-        quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sxc,
-        sxcum=sxcum, esc_th2=jnp.float32(theta) ** 2)
+        cascade=cascade, qc=qc, esc_th2=jnp.float32(theta) ** 2)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(jnp.where(valid, rows, NO_NODE),
                                 jnp.argmin(dist, axis=1)[:, None],
@@ -260,21 +304,21 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
         index, xw, theta, cfg=cfg, n_data=shard_size, hybrid=hybrid,
         traverse_nondata=hybrid, init_idx=rows, init_dist=dist,
         init_valid=valid, visited=visited, best_dist=best, best_idx=besti,
-        n_dist=n_new, quant=qstore, qx=qx, xerr=xerr, sketch=sstore,
-        sx=sxc, sxcum=sxcum, n_esc=n_esc0)
+        n_dist=n_new, cascade=cascade, qc=qc, init_ub=ub, n_esc=n_esc0)
     C = r.pool_idx.shape[1]
     keep = jnp.arange(C)[None, :] < r.n_pool[:, None]
     n_rerank = jnp.zeros((B,), jnp.int32)
-    if quant:
-        # in-shard filter-then-rerank, mirroring waves.rerank_pool: pool
-        # entries whose upper bound beats θ² are certified true pairs;
-        # only the ambiguous band is re-computed exactly. The gather is
-        # fixed-shape, but collapsing non-band ids to row 0 keeps the
-        # unique-row traffic proportional to the band.
-        from repro.kernels import ops
+    if cascade is not None:
+        # in-shard filter-then-rerank, mirroring waves.rerank_pool: the
+        # confirming tier splits the pool (pool_band); certified-sure
+        # entries are emitted free, only the ambiguous band is
+        # re-computed exactly. The gather is fixed-shape, but collapsing
+        # non-band ids to row 0 keeps the unique-row traffic
+        # proportional to the band.
         th2 = jnp.float32(theta) ** 2
-        s = xerr[:, None] + qstore.err[jnp.clip(r.pool_idx, 0)]
-        sure, amb = ops.quant_band_from_lb(r.pool_dist, s, th2)
+        qc_final = qc[-1]
+        sure, amb = cascade.final.pool_band(qc_final, r.pool_dist,
+                                            r.pool_idx, th2)
         sure = keep & sure
         amb = keep & amb
         n_rerank = jnp.sum(amb, axis=1).astype(jnp.int32)
@@ -291,19 +335,18 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
 def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                              *, theta: float, cfg: TraversalConfig,
                              hybrid: bool = False,
-                             qstore: ShardedQuantStore | None = None,
-                             sstore: ShardedSketchStore | None = None,
+                             cascade: ShardedCascade | None = None,
                              n_data: int | None = None):
     """Build the pjit'd per-wave distributed join step.
 
     shard_axes: mesh axis name (or tuple of names) the index is sharded
-    over — e.g. ``("pod", "data")`` on the production mesh. ``qstore``
-    switches each shard onto its int8 store (filter + in-shard re-rank);
-    ``sstore`` (requires ``qstore``) adds the per-shard 1-bit sketch tier
-    in front; ``n_data`` (the unpadded |Y|) lets the body hide sentinel
-    pad rows.
+    over — e.g. ``("pod", "data")`` on the production mesh. ``cascade``
+    switches each shard onto its local tier chain (certified-bounds
+    filter + in-shard re-rank — the same ``FilterCascade`` escalation as
+    the single-device engine, reconstructed per shard); ``n_data`` (the
+    unpadded |Y|) lets the body hide sentinel pad rows.
 
-    Returns ``(step, qargs)``: ``step`` takes the quant/sketch arrays as
+    Returns ``(step, qargs)``: ``step`` takes the tier-store arrays as
     its trailing runtime arguments (tiny placeholders when off) so
     multi-GB stores are jit *parameters*, never baked into the
     executable as constants. Call as ``step(vecs, nbrs, mnd, start,
@@ -318,6 +361,9 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         f"index has {smi.n_shards} shards but mesh axes {axes} provide "
         f"{axis_size} devices")
     spec_idx = P(flat)
+    names = cascade.names if cascade is not None else ()
+    qstore = cascade.store("int8") if cascade is not None else None
+    sstore = cascade.store("sketch1") if cascade is not None else None
     quant = qstore is not None
     sketch = sstore is not None
     assert not (sketch and not quant), "sketch tier requires the int8 tier"
@@ -325,8 +371,8 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
     body = functools.partial(
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
         hybrid=hybrid, axis=flat,
-        group_size=qstore.group_size if quant else 0, quant=quant,
-        sketch=sketch, n_shards=smi.n_shards, pad=pad)
+        group_size=qstore.group_size if quant else 0, tier_names=names,
+        n_shards=smi.n_shards, pad=pad)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
@@ -372,15 +418,14 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
 def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
                         *, theta: float, cfg: TraversalConfig,
                         wave_size: int = 256, hybrid: bool = False,
-                        qstore: ShardedQuantStore | None = None,
-                        sstore: ShardedSketchStore | None = None,
+                        cascade: ShardedCascade | None = None,
                         n_data: int | None = None):
     """Host driver: waves of queries against all shards; assemble pairs."""
     X = jnp.asarray(X)
     nq = X.shape[0]
     step, qargs = make_distributed_mi_join(
         mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
-        qstore=qstore, sstore=sstore, n_data=n_data)
+        cascade=cascade, n_data=n_data)
     pairs_out = []
     stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0)
     for q0 in range(0, nq, wave_size):

@@ -18,9 +18,24 @@ connectivity repair, which is offline and O(repairs)):
 
 The merged index G_{X∪Y} (paper §4.4) is the same construction over
 concat([Y, X]) with ``n_data = |Y|``.
+
+**Cascade-driven builds** (``build_index(..., quant="sq8")``): steps 1
+and 2 are the dominant offline f32 traffic (every construction distance
+streams d×4 bytes), and both are *selection* problems — top-k for the
+kNN, a pairwise comparison for the prune rule — which the certified
+bounds of a ``repro.quant.FilterCascade`` can resolve for all but an
+ambiguous band. The kNN sweep runs on int8 codes and keeps only
+candidates whose certified lower bound beats the k-th smallest certified
+upper bound (a certified superset of the f32 top-k, matmul-rounding
+guard included); the prune rule resolves each ``dist(w,v) < dist(u,v)``
+comparison from bounds where they are decisive. Only the band is
+re-computed in f32, with guards sized so the resulting neighbor lists
+are identical to the plain f32 build; ``BuildStats`` reports the f32
+traffic avoided (``benchmarks/bench_offline.py`` records it).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -32,6 +47,37 @@ from repro.kernels import ops
 
 Array = jax.Array
 _INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass
+class BuildStats:
+    """Traffic accounting for one (cascade-driven) index build.
+
+    Byte counts follow the repo's distance-traffic model (one candidate
+    row streamed per evaluated distance): ``f32_bytes`` is what the
+    cascade build actually moved through f32 distance evaluations,
+    ``f32_bytes_full`` what the plain f32 build would have moved for the
+    same steps, ``tier_bytes`` the compressed-tier traffic that replaced
+    the difference. ``knn_pairs``/``knn_exact`` and ``prune_pairs``/
+    ``prune_exact`` are the per-stage survivor counts (pairs bounded vs
+    pairs needing exact f32)."""
+    knn_pairs: int = 0
+    knn_exact: int = 0
+    prune_pairs: int = 0
+    prune_exact: int = 0
+    f32_bytes: int = 0
+    f32_bytes_full: int = 0
+    tier_bytes: int = 0
+
+    @property
+    def f32_saved_frac(self) -> float:
+        if self.f32_bytes_full == 0:
+            return 0.0
+        return 1.0 - self.f32_bytes / self.f32_bytes_full
+
+    def as_dict(self) -> dict:
+        return dict(dataclasses.asdict(self),
+                    f32_saved_frac=self.f32_saved_frac)
 
 
 # ---------------------------------------------------------------------------
@@ -69,9 +115,21 @@ def _knn_block(qvecs: Array, vecs: Array, qoff: Array, *, k: int,
 
 
 def exact_knn(vecs: Array, k: int, *, qblock: int = 512, dblock: int = 8192,
-              impl: str | None = None) -> tuple[np.ndarray, np.ndarray]:
-    """Exact kNN graph: returns (dists (N,k) f32, ids (N,k) i32), ascending."""
+              impl: str | None = None, cascade=None,
+              stats: BuildStats | None = None
+              ) -> tuple[np.ndarray, np.ndarray]:
+    """Exact kNN graph: returns (dists (N,k) f32, ids (N,k) i32), ascending.
+
+    With a ``cascade`` (whose confirming tier must provide upper bounds,
+    i.e. carry an int8 tier) the sweep runs filter-then-rerank: certified
+    bounds from the tier's codes select a superset of the f32 top-k and
+    only those survivors get exact f32 distances — same neighbor lists,
+    f32 traffic proportional to the survivor band (``stats``)."""
     n = vecs.shape[0]
+    confirm = cascade.tier("int8") if cascade is not None else None
+    if confirm is not None:
+        return _cascade_knn(vecs, confirm, k, qblock=qblock, dblock=dblock,
+                            impl=impl, stats=stats)
     out_d = np.empty((n, k), np.float32)
     out_i = np.empty((n, k), np.int32)
     for q0 in range(0, n, qblock):
@@ -84,9 +142,157 @@ def exact_knn(vecs: Array, k: int, *, qblock: int = 512, dblock: int = 8192,
     return out_d, out_i
 
 
+def _cascade_knn(vecs: Array, tier, k: int, *, qblock: int, dblock: int,
+                 impl: str | None, stats: BuildStats | None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """kNN through the cascade's int8 tier: certified filter, exact
+    re-rank of the survivor band.
+
+    Soundness of the survivor set: let ``τ`` be the k-th smallest
+    certified *upper* bound of a row — at least k candidates have true
+    distance ≤ τ. The f32 build selects by the matmul-form kernel value
+    ``d32``, which differs from the true distance by at most the
+    matmul-rounding guard ``g``; every member of (and tie at the
+    boundary of) the f32 top-k therefore has certified lower bound
+    ≤ τ + 2g, so filtering on ``lb ≤ τ + margin`` with ``margin ≥ 2g``
+    keeps a superset of the f32 selection.
+
+    Bit-identity of the selection: survivors are re-ranked with the
+    *same* matmul-form composition the f32 sweep uses (row norms + a
+    gathered-column GEMM — XLA's per-entry dot is bitwise stable under
+    row/column subsetting, so each survivor pair reproduces the f32
+    sweep's value exactly), and the k smallest per row — ties broken by
+    ascending id, matching the f32 path's stable block-scan merge — are
+    the identical neighbor lists, distances included.
+    """
+    from repro.quant.cascade import MATMUL_GUARD
+
+    st = tier.store
+    n, d = vecs.shape
+    vj = jnp.asarray(vecs, jnp.float32)
+    # true-f32 row norms, computed once the same way the f32 sweep's
+    # epilogue computes them (per-row minor-axis reduce)
+    vn = jnp.sum(vj * vj, axis=-1)
+    yn = st.norms
+    max_yn = float(jnp.max(yn)) if n else 0.0
+    out_d = np.full((n, k), np.inf, np.float32)
+    out_i = np.full((n, k), NO_NODE, np.int32)
+    n_pairs = n_exact = 0
+    for q0 in range(0, n, qblock):
+        q1 = min(q0 + qblock, n)
+        bq = q1 - q0
+        qc = tier.rows_as_queries(q0, q1)
+        # generous headroom over the 2·g bound (g uses dequantized norms,
+        # which track true norms only up to the quantization error)
+        margin = np.asarray(4 * MATMUL_GUARD * (qc.norms + max_yn))
+        # pass over data blocks: running top-k of certified upper bounds
+        # (⇒ τ) while collecting lower-bound survivors vs the running τ
+        # (a superset of the survivors vs the final τ — filtered below)
+        bd = jnp.full((bq, k), _INF)
+        bi = jnp.full((bq, k), NO_NODE, jnp.int32)
+        parts: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        for j0 in range(0, n, dblock):
+            j1 = min(j0 + dblock, n)
+            dhat = ops.pairwise_sq_dists_int8(
+                qc.q, st.q[j0:j1], st.scales, group_size=st.group_size,
+                xn=qc.norms, yn=yn[j0:j1], impl=impl)
+            slack = qc.err[:, None] + st.err[j0:j1][None, :]
+            guard = jnp.float32(MATMUL_GUARD) * (qc.norms[:, None]
+                                                 + yn[j0:j1][None, :])
+            lb = ops.quant_lower_bound(jnp.maximum(dhat - guard, 0.0),
+                                       slack)
+            ub = ops.quant_upper_bound(dhat + guard, slack)
+            ids = j0 + jnp.arange(j1 - j0, dtype=jnp.int32)[None, :]
+            is_self = ids == (q0 + jnp.arange(bq, dtype=jnp.int32))[:, None]
+            lb = jnp.where(is_self, _INF, lb)
+            ub = jnp.where(is_self, _INF, ub)
+            bd, bi = ops.topk_merge(bd, bi, ub,
+                                    jnp.broadcast_to(ids, ub.shape))
+            tau_run = np.asarray(bd[:, k - 1])
+            keep = np.asarray(lb) <= tau_run[:, None] + margin[:, None]
+            qi, yi = np.nonzero(keep)
+            parts.append((qi.astype(np.int32), (yi + j0).astype(np.int32),
+                          np.asarray(lb)[qi, yi]))
+            n_pairs += bq * (j1 - j0)
+        tau = np.asarray(bd[:, k - 1])
+        qi = np.concatenate([p[0] for p in parts])
+        yi = np.concatenate([p[1] for p in parts])
+        plb = np.concatenate([p[2] for p in parts])
+        sel = plb <= tau[qi] + margin[qi]
+        qi, yi = qi[sel], yi[sel]
+        n_exact += int(qi.size)
+        # exact f32 re-rank of the survivor band with the f32 sweep's own
+        # matmul-form arithmetic: per-row survivor lists padded to the
+        # block max, gathered-column GEMM per row (bitwise equal to the
+        # full sweep's entries), then per-row stable top-k by (d, id)
+        order = np.lexsort((yi, qi))
+        qi, yi = qi[order], yi[order]
+        counts = np.bincount(qi, minlength=bq)
+        S = max(int(counts.max()) if counts.size else 0, 1)
+        starts = np.searchsorted(qi, np.arange(bq))
+        slot = np.arange(qi.size) - starts[qi]
+        colmat = np.zeros((bq, S), np.int32)
+        valid = np.zeros((bq, S), bool)
+        colmat[qi, slot] = yi
+        valid[qi, slot] = True
+        ysub = vj[jnp.asarray(colmat)]                       # (bq, S, d)
+        xy = jnp.matmul(vj[q0:q1][:, None, :],
+                        jnp.transpose(ysub, (0, 2, 1)))[:, 0, :]
+        dmat = jnp.maximum(vn[q0:q1][:, None] + vn[jnp.asarray(colmat)]
+                           - 2.0 * xy, 0.0)
+        dsur = np.asarray(dmat)[qi, slot]
+        order = np.lexsort((yi, dsur, qi))
+        qi, yi, dsur = qi[order], yi[order], dsur[order]
+        rank = np.arange(qi.size) - starts[qi]
+        m = rank < k
+        out_d[q0 + qi[m], rank[m]] = dsur[m]
+        out_i[q0 + qi[m], rank[m]] = yi[m]
+    if stats is not None:
+        stats.knn_pairs += n_pairs
+        stats.knn_exact += n_exact
+        stats.tier_bytes += n_pairs * d
+        stats.f32_bytes += n_exact * d * 4
+        stats.f32_bytes_full += n_pairs * d * 4
+    return out_d, out_i
+
+
 # ---------------------------------------------------------------------------
 # 2. RNG / MRNG pruning (paper Fig. 5)
 # ---------------------------------------------------------------------------
+
+def _prune_from_lt(lt: Array, valid: Array, cand_ids: Array, R: int
+                   ) -> Array:
+    """The Fig. 5 keep loop, given the resolved comparison matrix
+    ``lt[b, w, v] = dist(w, v) < dist(u, v)`` (shared by the f32 and
+    cascade prune paths — the rule itself has one implementation)."""
+    b, k = cand_ids.shape
+
+    def body(i, keep):
+        # v = candidate i; conflict if any kept w (w earlier => closer to u)
+        # with dist(w, v) < dist(u, v)
+        conflict = jnp.any(keep & lt[:, :, i], axis=1)
+        kept_so_far = jnp.sum(keep, axis=1)
+        ok = valid[:, i] & ~conflict & (kept_so_far < R)
+        return keep.at[:, i].set(ok)
+
+    keep = jax.lax.fori_loop(0, k, body, jnp.zeros((b, k), bool))
+    # compact kept ids to the left, preserving ascending order
+    pos = jnp.cumsum(keep, axis=1) - 1                        # target slot
+    pos = jnp.where(keep, pos, R)                             # dump to R
+    out = jnp.full((b, R + 1), NO_NODE, jnp.int32)
+    out = out.at[jnp.arange(b)[:, None], pos].set(
+        jnp.where(keep, cand_ids, NO_NODE))
+    return out[:, :R]
+
+
+def _pair_sq_dists(cvecs: Array) -> Array:
+    """(b, k, d) gathered candidate rows → (b, k, k) matmul-form pairwise
+    squared distances (the prune rule's comparison values)."""
+    cn = jnp.sum(cvecs.astype(jnp.float32) ** 2, axis=-1)    # (b, k)
+    cc = jnp.einsum("bkd,bjd->bkj", cvecs.astype(jnp.float32),
+                    cvecs.astype(jnp.float32))
+    return jnp.maximum(cn[:, :, None] + cn[:, None, :] - 2.0 * cc, 0.0)
+
 
 @functools.partial(jax.jit, static_argnames=("R",))
 def _rng_prune_block(vecs: Array, cand_ids: Array, cand_d: Array, *, R: int
@@ -100,32 +306,61 @@ def _rng_prune_block(vecs: Array, cand_ids: Array, cand_d: Array, *, R: int
     Returns:
       (b, R) pruned neighbor ids (NO_NODE padded, ascending by distance).
     """
-    b, k = cand_ids.shape
-    cvecs = vecs[jnp.clip(cand_ids, 0)]                      # (b, k, d)
-    # pairwise squared distances among candidates of each node
-    cn = jnp.sum(cvecs.astype(jnp.float32) ** 2, axis=-1)    # (b, k)
-    cc = jnp.einsum("bkd,bjd->bkj", cvecs.astype(jnp.float32),
-                    cvecs.astype(jnp.float32))
-    pair = jnp.maximum(cn[:, :, None] + cn[:, None, :] - 2.0 * cc, 0.0)
+    pair = _pair_sq_dists(vecs[jnp.clip(cand_ids, 0)])
     valid = cand_ids != NO_NODE
+    return _prune_from_lt(pair < cand_d[:, None, :], valid, cand_ids, R)
 
-    def body(i, keep):
-        # v = candidate i; conflict if any kept w (w earlier => closer to u)
-        # with dist(w, v) < dist(u, v)
-        conflict = jnp.any(keep & (pair[:, :, i] < cand_d[:, i][:, None]),
-                           axis=1)
-        kept_so_far = jnp.sum(keep, axis=1)
-        ok = valid[:, i] & ~conflict & (kept_so_far < R)
-        return keep.at[:, i].set(ok)
 
-    keep = jax.lax.fori_loop(0, k, body, jnp.zeros((b, k), bool))
-    # compact kept ids to the left, preserving ascending order
-    pos = jnp.cumsum(keep, axis=1) - 1                        # target slot
-    pos = jnp.where(keep, pos, R)                             # dump to R
-    out = jnp.full((b, R + 1), NO_NODE, jnp.int32)
-    out = out.at[jnp.arange(b)[:, None], pos].set(
-        jnp.where(keep, cand_ids, NO_NODE))
-    return out[:, :R]
+@functools.partial(jax.jit, static_argnames=("R",))
+def _rng_prune_block_cascade(vecs: Array, q: Array, norms: Array,
+                             err: Array, sd: Array, cand_ids: Array,
+                             cand_d: Array, *, R: int
+                             ) -> tuple[Array, Array, Array]:
+    """Cascade-driven RNG pruning: resolve each ``dist(w,v) < dist(u,v)``
+    comparison from certified int8 bounds where they are decisive, and
+    gather f32 rows only for candidates touching an ambiguous pair.
+
+    The bounds bracket the *true* pair distance; the f32 path compares
+    the matmul-form kernel value, which sits within the matmul-rounding
+    guard of the truth — so a comparison is only certain when the bound
+    clears ``cand_d`` by that guard on the right side. Ambiguous pairs
+    are recomputed with the *same* matmul-form arithmetic as the f32
+    path, over a gathered tensor whose non-participating rows collapse
+    to row 0 (fixed shape; HBM traffic proportional to the band).
+
+    Returns ``(pruned (b, R), n_f32_rows (), n_amb_pairs ())``.
+    """
+    from repro.quant.cascade import MATMUL_GUARD
+
+    b, k = cand_ids.shape
+    safe = jnp.clip(cand_ids, 0)
+    codes = q[safe]                                          # (b, k, d) i8
+    deq = codes.astype(jnp.float32) * sd                     # dequantized
+    pair_hat = _pair_sq_dists(deq)
+    nh = norms[safe]                                         # (b, k)
+    eh = err[safe]
+    nsum = nh[:, :, None] + nh[:, None, :]
+    guard_hat = jnp.float32(MATMUL_GUARD) * nsum
+    slack = eh[:, :, None] + eh[:, None, :]
+    lb = ops.quant_lower_bound(jnp.maximum(pair_hat - guard_hat, 0.0),
+                               slack)
+    ub = ops.quant_upper_bound(pair_hat + guard_hat, slack)
+    # f32-kernel rounding margin (2× headroom: nh are dequantized norms)
+    g32 = jnp.float32(2 * MATMUL_GUARD) * nsum
+    cd = cand_d[:, None, :]
+    sure_lt = ub + g32 < cd
+    sure_ge = lb - g32 >= cd
+    valid = cand_ids != NO_NODE
+    vpair = valid[:, :, None] & valid[:, None, :]
+    amb = vpair & ~(sure_lt | sure_ge)
+    # f32 rows only for candidates participating in an ambiguous pair
+    needed = jnp.any(amb, axis=2) | jnp.any(amb, axis=1)
+    cvecs = vecs[jnp.where(needed, safe, 0)]
+    pair32 = _pair_sq_dists(cvecs)
+    lt = jnp.where(amb, pair32 < cd, sure_lt)
+    out = _prune_from_lt(lt, valid, cand_ids, R)
+    return (out, jnp.sum(needed).astype(jnp.int32),
+            jnp.sum(amb).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -227,7 +462,9 @@ def _repair_connectivity(vecs_np: np.ndarray, nbrs: np.ndarray, start: int,
 
 def build_index(vecs, *, k: int = 48, degree: int = 32, n_data: int | None = None,
                 prune_block: int = 1024, seed: int = 0,
-                impl: str | None = None, style: str = "nsg") -> GraphIndex:
+                impl: str | None = None, style: str = "nsg",
+                quant: str | None = None,
+                build_stats: BuildStats | None = None) -> GraphIndex:
     """Build a graph index over ``vecs``.
 
     Args:
@@ -243,19 +480,59 @@ def build_index(vecs, *, k: int = 48, degree: int = 32, n_data: int | None = Non
         world graph, our TPU-shape stand-in for HNSW in the paper's Fig. 15
         index-type ablation; true HNSW hierarchy does not map to the dense
         neighbor-table traversal, see DESIGN §2).
+      quant: a quant mode name (``core.types.QUANT_MODES``) or a prebuilt
+        ``FilterCascade`` over ``vecs`` — drives the kNN sweep and the
+        RNG prune through certified bounds (identical edges, f32 traffic
+        cut to the ambiguous band; see the module header). ``build_stats``
+        collects the traffic accounting.
     """
     vecs = jnp.asarray(vecs)
     n = vecs.shape[0]
+    d = int(vecs.shape[1])
     k = min(k, n - 1)
-    cand_d, cand_i = exact_knn(vecs, k, impl=impl)
+    cascade = None
+    if quant is not None and quant != "off":
+        if isinstance(quant, str):
+            from repro.quant.cascade import TIERS_BY_MODE, build_cascade
+            # the build consults only the confirming int8 tier (pairwise
+            # sweeps gain nothing from a 1-bit pre-pass whose bounds the
+            # int8 matmul recomputes anyway) — skip building tiers the
+            # mode stacks above it
+            mode = "sq8" if "int8" in TIERS_BY_MODE[quant] else quant
+            cascade = build_cascade(vecs, mode)
+        else:
+            cascade = quant
+    cand_d, cand_i = exact_knn(vecs, k, impl=impl, cascade=cascade,
+                               stats=build_stats)
     nbrs = np.empty((n, degree), np.int32)
     cand_d_j = jnp.asarray(cand_d)
     cand_i_j = jnp.asarray(cand_i)
+    int8_tier = cascade.tier("int8") if cascade is not None else None
     if style == "nsw":
         half = max(degree // 2, 1)   # leave slots for reverse edges
         top = np.asarray(cand_i_j[:, :half], np.int32)
         nbrs[:, :half] = top
         nbrs[:, half:] = NO_NODE
+    elif int8_tier is not None:
+        from repro.quant.store import dim_scales
+        st = int8_tier.store
+        sd = dim_scales(st.scales, d, st.group_size)
+        n_rows = n_amb = 0
+        for b0 in range(0, n, prune_block):
+            b1 = min(b0 + prune_block, n)
+            out, rows, amb = _rng_prune_block_cascade(
+                vecs, st.q, st.norms, st.err, sd, cand_i_j[b0:b1],
+                cand_d_j[b0:b1], R=degree)
+            nbrs[b0:b1] = np.asarray(out)
+            n_rows += int(rows)
+            n_amb += int(amb)
+        if build_stats is not None:
+            n_cand = int((cand_i >= 0).sum())
+            build_stats.prune_pairs += n_cand * k
+            build_stats.prune_exact += n_amb
+            build_stats.tier_bytes += n_cand * d
+            build_stats.f32_bytes += n_rows * d * 4
+            build_stats.f32_bytes_full += n_cand * d * 4
     else:
         for b0 in range(0, n, prune_block):
             b1 = min(b0 + prune_block, n)

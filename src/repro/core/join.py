@@ -13,6 +13,13 @@ layer (index caching, streaming batches, sharded execution) is
 ``repro.engine.JoinEngine``. ``vector_join`` below is the one-shot
 compatibility wrapper: it spins up a transient engine per call, so the
 old build-per-invocation semantics are preserved exactly.
+
+The NLJ has exactly one entry point, ``cascade_join_pairs``, driven by a
+``repro.quant.FilterCascade``: with no cascade it is the exact
+nested-loop ground truth; with tiers it filters every pair through the
+certified-bounds chain and re-ranks only the ambiguous band in f32, so
+the emitted set equals the exact one at every tier configuration.
+``exact_join_pairs`` survives as the no-cascade alias.
 """
 from __future__ import annotations
 
@@ -24,153 +31,131 @@ from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
-# exact baseline / ground truth
+# the one NLJ entry point — FilterCascade-driven filter-then-rerank
 # ---------------------------------------------------------------------------
+
+def cascade_join_pairs(X, Y, theta: float, cascade=None, *,
+                       block: int = 512, pair_block: int = 1 << 15,
+                       impl: str | None = None
+                       ) -> tuple[np.ndarray, dict]:
+    """Exact NLJ through a ``FilterCascade``'s certified-bounds chain.
+
+    Tier 0 streams its compressed codes pairwise against the whole of Y
+    and brackets every pair with certified bounds: a lower bound ≥ θ²
+    rejects (cannot lose a true pair); where the tier has upper bounds,
+    an upper bound < θ² accepts (cannot admit a false one). Survivors
+    escalate pair-by-pair through the remaining tiers (``pair_refine``,
+    running maximum of lower bounds — the monotone chain), and only the
+    final ambiguous band — pairs the confirming tier's bounds cannot
+    resolve — is re-computed with exact f32 distances. The result equals
+    the exact join for *any* tier subset, while f32 traffic stays
+    proportional to the band.
+
+    With ``cascade=None`` (or an empty cascade) this is the exact
+    nested-loop ground truth. (Pairs within a few ulps of θ can differ
+    between tier configurations: the no-cascade path evaluates the
+    ill-conditioned matmul form while the re-rank uses the
+    better-conditioned difference form — on such boundary pairs the
+    cascade path agrees with float64.)
+
+    Returns ``(pairs, counts)`` — the exact pair array plus per-tier
+    survivor counts: ``counts["escalated"]`` has one entry per tier
+    beyond the first (pairs that tier had to evaluate) and
+    ``counts["n_rerank"]`` the f32 band evaluations.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    Y = jnp.asarray(Y, jnp.float32)
+    tiers = tuple(cascade.tiers) if cascade is not None else ()
+    th2 = np.float32(theta) ** 2
+    counts = {"escalated": [0] * max(len(tiers) - 1, 0), "n_rerank": 0}
+
+    if not tiers:
+        counts["escalated"] = ()
+        out = []
+        for q0 in range(0, X.shape[0], block):
+            q1 = min(q0 + block, X.shape[0])
+            mask = np.asarray(ops.nlj_mask(X[q0:q1], Y, theta=float(theta),
+                                           impl=impl))
+            qi, yi = np.nonzero(mask)
+            out.append(np.stack([qi + q0, yi], axis=1))
+        pairs = (np.concatenate(out, axis=0) if out
+                 else np.empty((0, 2), np.int64)).astype(np.int64)
+        return pairs, counts
+
+    out: list[np.ndarray] = []
+    for q0 in range(0, X.shape[0], block):
+        q1 = min(q0 + block, X.shape[0])
+        xb = X[q0:q1]
+        qc0 = tiers[0].encode(xb)
+        lb, ub = tiers[0].pairwise_bounds(qc0, impl=impl)
+        lb = np.asarray(lb)
+        if ub is not None and len(tiers) == 1:
+            # single tier with upper bounds: emit certified-sure pairs
+            # straight from the pairwise sweep (the sq8 fast path)
+            sure = np.asarray(ub) < th2
+            qi, yi = np.nonzero(sure)
+            out.append(np.stack([qi + q0, yi], axis=1))
+            qi, yi = np.nonzero((lb < th2) & ~sure)
+        else:
+            qi, yi = np.nonzero(lb < th2)
+        if not qi.size:
+            continue
+        if len(tiers) == 1:
+            counts["n_rerank"] += int(qi.size)
+            out.append(_rerank_pairs(xb, Y, qi, yi, q0, th2))
+            continue
+        # escalate survivors through the remaining tiers, pair-blocked;
+        # queries are encoded per tier once per block, lazily (a block
+        # whose tier-0 sweep prunes everything encodes nothing else)
+        qcs = [tiers[i].encode(xb) for i in range(1, len(tiers))]
+        for p0 in range(0, qi.size, pair_block):
+            qp, yp = qi[p0:p0 + pair_block], yi[p0:p0 + pair_block]
+            plb = lb[qp, yp]
+            pub = None
+            keep = np.ones(qp.size, bool)
+            for t, tier in enumerate(tiers[1:]):
+                counts["escalated"][t] += int(keep.sum())
+                # collapse already-rejected pairs to index 0 — their
+                # bounds are computed but ignored (fixed host shapes)
+                tq = np.where(keep, qp, 0)
+                ty = np.where(keep, yp, 0)
+                tlb, tub = tier.pair_refine(qcs[t], tq, ty)
+                plb = np.where(keep, np.maximum(plb, np.asarray(tlb)), plb)
+                if tub is not None:
+                    pub = np.where(keep, np.asarray(tub), np.inf)
+                keep = keep & (plb < th2)
+            if pub is not None:
+                sure = keep & (pub < th2)
+                psel = np.flatnonzero(sure)
+                out.append(np.stack([qp[psel] + q0, yp[psel]], axis=1))
+                amb = keep & ~sure
+            else:
+                amb = keep
+            counts["n_rerank"] += int(amb.sum())
+            if amb.any():
+                asel = np.flatnonzero(amb)
+                out.append(_rerank_pairs(xb, Y, qp[asel], yp[asel], q0,
+                                         th2))
+    pairs = (np.concatenate(out, axis=0) if out
+             else np.empty((0, 2), np.int64)).astype(np.int64)
+    counts["escalated"] = tuple(counts["escalated"])
+    return pairs, counts
+
+
+def _rerank_pairs(xb, Y, qi, yi, q0: int, th2) -> np.ndarray:
+    """Exact f32 difference-form distances for explicit band pairs."""
+    diff = xb[jnp.asarray(qi)] - Y[jnp.asarray(yi)]
+    d = np.asarray(jnp.sum(diff * diff, axis=1))
+    m = d < th2
+    return np.stack([qi + q0, yi], axis=1)[m]
+
 
 def exact_join_pairs(X, Y, theta: float, *, block: int = 1024,
                      impl: str | None = None) -> np.ndarray:
-    """All (query, data) pairs with L2 distance < theta — the ground truth."""
-    X = jnp.asarray(X)
-    Y = jnp.asarray(Y)
-    out = []
-    for q0 in range(0, X.shape[0], block):
-        q1 = min(q0 + block, X.shape[0])
-        mask = np.asarray(ops.nlj_mask(X[q0:q1], Y, theta=float(theta),
-                                       impl=impl))
-        qi, yi = np.nonzero(mask)
-        out.append(np.stack([qi + q0, yi], axis=1))
-    return (np.concatenate(out, axis=0) if out
-            else np.empty((0, 2), np.int64)).astype(np.int64)
-
-
-def quant_join_pairs(X, Y, theta: float, store, *, block: int = 1024,
-                     impl: str | None = None
-                     ) -> tuple[np.ndarray, int]:
-    """Exact NLJ through the sq8 filter-then-rerank pipeline.
-
-    Stage 1 streams int8 codes through ``pairwise_sq_dists_int8`` (d×1
-    bytes/pair instead of d×4) and brackets every pair with certified
-    bounds: lower bound ≥ θ² rejects (cannot lose a true pair), upper
-    bound < θ² accepts (cannot admit a false one). Stage 2 re-ranks only
-    the ambiguous band in between with exact f32 distances, so the result
-    equals ``exact_join_pairs`` while f32 traffic stays proportional to
-    the quantization band. (Pairs within a few ulps of θ can differ:
-    ``exact_join_pairs`` evaluates the ill-conditioned matmul form while
-    the re-rank uses the better-conditioned difference form — on such
-    boundary pairs *this* path agrees with float64.)
-
-    Returns ``(pairs, n_rerank)``: the exact pair array plus the number
-    of band pairs that needed f32 re-ranking.
-    """
-    from repro.quant.store import quantize_queries
-
-    X = jnp.asarray(X, jnp.float32)
-    Y = jnp.asarray(Y, jnp.float32)
-    th2 = np.float32(theta) ** 2
-    out: list[np.ndarray] = []
-    n_rerank = 0
-    for q0 in range(0, X.shape[0], block):
-        q1 = min(q0 + block, X.shape[0])
-        xb = X[q0:q1]
-        qx, xn, xe = quantize_queries(xb, store)
-        dhat = ops.pairwise_sq_dists_int8(
-            qx, store.q, store.scales, group_size=store.group_size,
-            xn=xn, yn=store.norms, impl=impl)
-        slack = xe[:, None] + store.err[None, :]
-        # The matmul-form epilogue (xn + yn − 2·x̂·ŷ) cancels catastrophically
-        # when ‖x‖², ‖y‖² ≫ d̂ (data with a large common offset): absolute
-        # f32 error ~ (xn+yn)·2⁻²³. Widen d̂ by that margin before bounding
-        # so rounding can neither reject a true pair nor certify a false
-        # one. (The traversal path uses the well-conditioned difference
-        # form and needs no guard.)
-        guard = 8 * np.float32(1.2e-7) * (xn[:, None] + store.norms[None, :])
-        lb = np.asarray(ops.quant_lower_bound(
-            jnp.maximum(dhat - guard, 0.0), slack))
-        ub = np.asarray(ops.quant_upper_bound(dhat + guard, slack))
-        sure = ub < th2
-        qi, yi = np.nonzero(sure)
-        out.append(np.stack([qi + q0, yi], axis=1))
-        qi, yi = np.nonzero((lb < th2) & ~sure)
-        n_rerank += int(qi.size)
-        if qi.size:
-            diff = xb[jnp.asarray(qi)] - Y[jnp.asarray(yi)]
-            d = np.asarray(jnp.sum(diff * diff, axis=1))
-            m = d < th2
-            out.append(np.stack([qi + q0, yi], axis=1)[m])
-    pairs = (np.concatenate(out, axis=0) if out
-             else np.empty((0, 2), np.int64)).astype(np.int64)
-    return pairs, n_rerank
-
-
-def sketch_join_pairs(X, Y, theta: float, sstore, qstore, *,
-                      block: int = 512, pair_block: int = 1 << 15,
-                      impl: str | None = None
-                      ) -> tuple[np.ndarray, int, int]:
-    """Exact NLJ through the three-tier sketch8 cascade.
-
-    Tier 0 streams 1-bit sketch codes through ``pairwise_hamming`` (d/8
-    bytes/pair) and prunes every pair whose certified sketch bound beats
-    θ². Tier 1 confirms the survivors with int8 difference-form distances
-    (d×1 bytes/pair, well-conditioned — no matmul-form guard needed):
-    certified-sure pairs are emitted free, certified-out pairs dropped.
-    Tier 2 re-ranks only the remaining ambiguous band with exact f32, so
-    the result equals ``exact_join_pairs`` while f32 traffic stays
-    proportional to the int8 quantization band.
-
-    Returns ``(pairs, n_esc8, n_rerank)``: the exact pair array, the
-    number of sketch survivors that needed int8 confirmation, and the
-    number of band pairs that needed f32 re-ranking.
-    """
-    from repro.quant.sketch import (sketch_lower_bound_pairwise,
-                                    sketch_queries)
-    from repro.quant.store import dim_scales, quantize_queries
-
-    X = jnp.asarray(X, jnp.float32)
-    Y = jnp.asarray(Y, jnp.float32)
-    th2 = np.float32(theta) ** 2
-    d = int(Y.shape[1]) if Y.ndim == 2 else 0
-    # loop-invariant host views, materialized once (not per block)
-    sd = np.asarray(dim_scales(qstore.scales, d, qstore.group_size))
-    qy = np.asarray(qstore.q)
-    yerr = np.asarray(qstore.err)
-    out: list[np.ndarray] = []
-    n_esc = 0
-    n_rerank = 0
-    for q0 in range(0, X.shape[0], block):
-        q1 = min(q0 + block, X.shape[0])
-        xb = X[q0:q1]
-        sxc, sxcum = sketch_queries(xb, sstore)
-        h = ops.pairwise_hamming(sxc, sstore.codes, impl=impl)
-        lb_s = np.asarray(sketch_lower_bound_pairwise(
-            h, sxcum, sstore.cum, sstore.hs, sstore.iso))
-        qi, yi = np.nonzero(lb_s < th2)           # sketch survivors
-        n_esc += int(qi.size)
-        if not qi.size:
-            continue
-        qx, _, xe = quantize_queries(xb, qstore)
-        qx = np.asarray(qx)
-        xe = np.asarray(xe)
-        for p0 in range(0, qi.size, pair_block):
-            qp, yp = qi[p0:p0 + pair_block], yi[p0:p0 + pair_block]
-            diff = (qx[qp].astype(np.int32) - qy[yp].astype(np.int32)
-                    ).astype(np.float32) * sd[None, :]
-            dhat = jnp.sum(jnp.asarray(diff) ** 2, axis=1)
-            slack = jnp.asarray(xe[qp] + yerr[yp])
-            lb8 = np.asarray(ops.quant_lower_bound(dhat, slack))
-            ub8 = np.asarray(ops.quant_upper_bound(dhat, slack))
-            sure = ub8 < th2
-            out.append(np.stack([qp[sure] + q0, yp[sure]], axis=1))
-            amb = (np.maximum(lb8, lb_s[qp, yp]) < th2) & ~sure
-            n_rerank += int(amb.sum())
-            if amb.any():
-                qa, ya = qp[amb], yp[amb]
-                dxy = xb[jnp.asarray(qa)] - Y[jnp.asarray(ya)]
-                dd = np.asarray(jnp.sum(dxy * dxy, axis=1))
-                m = dd < th2
-                out.append(np.stack([qa[m] + q0, ya[m]], axis=1))
-    pairs = (np.concatenate(out, axis=0) if out
-             else np.empty((0, 2), np.int64)).astype(np.int64)
-    return pairs, n_esc, n_rerank
+    """All (query, data) pairs with L2 distance < theta — the ground truth
+    (the no-cascade configuration of ``cascade_join_pairs``)."""
+    pairs, _ = cascade_join_pairs(X, Y, theta, None, block=block, impl=impl)
+    return pairs
 
 
 # ---------------------------------------------------------------------------

@@ -28,11 +28,13 @@ import jax.numpy as jnp
 
 from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
 from repro.kernels import ops
-from repro.quant.sketch import sketch_lower_bound_gather
 
 Array = jax.Array
 _INF = jnp.float32(jnp.inf)
 _SORT_PAD = jnp.int32(2**30)
+# Offset that sorts beam entries protected by a certified upper bound
+# ahead of every unprotected entry (distances are finite f32 ≪ 1e30).
+_PROTECT_OFF = jnp.float32(1e30)
 
 
 def bitmap_words(n_nodes: int) -> int:
@@ -43,37 +45,77 @@ def bitmap_words(n_nodes: int) -> int:
 # probing: distances + visited-dedup for a (B, K) candidate id matrix
 # ---------------------------------------------------------------------------
 
+def cascade_bounds(cascade, qc, cand: Array, valid: Array, esc_th2, *,
+                   dist_impl: str | None
+                   ) -> tuple[Array, Array, Array]:
+    """Walk gathered candidates through a ``FilterCascade``'s tier chain.
+
+    Tier 0 bounds every candidate; each subsequent tier evaluates only the
+    *escalation set* — candidates whose running certified lower bound is
+    still below ``esc_th2`` (θ²). Pruned candidates' gather indices
+    collapse to row 0, so each tier's HBM traffic stays proportional to
+    the previous tier's survivors. Escalated candidates take the ``max``
+    of lower bounds (both certified ⇒ the max is the tighter certified
+    bound, and the chain lb₀ ≤ lb₁ ≤ … ≤ d stays monotone).
+
+    Pruned candidates keep their certified floor (≥ θ², so they can never
+    pool or satisfy a found-test) but are *ordered* by the pruning tier's
+    navigation estimate where it provides one — the certified bound
+    compresses all far candidates toward θ², which would erase the greedy
+    phase's navigation gradient. Ordering may use an estimate; threshold
+    tests only ever see certified bounds.
+
+    Returns ``(dist, ub, n_esc)``: the navigation/threshold distance per
+    candidate, a certified upper bound (+inf where no tier with upper
+    bounds evaluated the candidate — consumed by the hybrid beam's
+    eviction guard), and the per-lane count of candidates escalated into
+    tier 1 (the ``n_esc8`` statistic).
+    """
+    B = cand.shape[0]
+    lb = ub = est = None
+    esc = valid
+    n_esc = jnp.zeros((B,), jnp.int32)
+    for i, (tier, q) in enumerate(zip(cascade.tiers, qc)):
+        if i == 0:
+            idx = cand
+        else:
+            esc = esc & (lb < esc_th2)
+            if i == 1:
+                n_esc = jnp.sum(esc, axis=1).astype(jnp.int32)
+            idx = jnp.where(esc, cand, 0)
+        tlb, tub, test = tier.gather_bounds(q, idx, impl=dist_impl)
+        lb = tlb if i == 0 else jnp.where(esc, jnp.maximum(lb, tlb), lb)
+        if tub is not None:
+            tub = tub if i == 0 else jnp.where(esc, tub, _INF)
+            ub = tub if ub is None else jnp.minimum(ub, tub)
+        if test is not None and est is None:
+            est = test
+    dist = lb if est is None else jnp.where(esc, lb, jnp.maximum(lb, est))
+    if ub is None:
+        ub = jnp.full(lb.shape, _INF)
+    return dist, ub, n_esc
+
+
 def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
            *, n_data: int, traverse_nondata: bool, dist_impl: str | None,
-           quant=None, qx: Array | None = None, xerr: Array | None = None,
-           sketch=None, sx: Array | None = None, sxcum: Array | None = None,
-           esc_th2=None) -> tuple[Array, Array, Array, Array, Array]:
+           cascade=None, qc=None, esc_th2=None
+           ) -> tuple[Array, Array, Array, Array, Array, Array]:
     """Compute distances to candidate ids with dedup + visited masking.
 
     Args:
       vecs: (N, d) node vectors; x: (B, d) queries.
       cand: (B, K) candidate node ids (NO_NODE allowed); valid: (B, K).
       visited: (B, W) uint32 bitmap.
-      quant/qx/xerr: optional QuantStore + queries quantized on its grid +
-        exact per-query errors. When given, gathers int8 codes (d×1 bytes
-        per candidate instead of d×4) and returns *certified lower bounds*
-        on the true squared distances, so downstream `< θ²` tests accept a
-        superset; the wave runner re-ranks pooled survivors exactly.
-      sketch/sx/sxcum/esc_th2: optional SketchStore + queries encoded on
-        its grid (codes, slack tables) + the escalation threshold θ²
-        (sketch8 mode, requires ``quant``). Gathers 1-bit codes plus two
-        slack-table entries first (d/8 + 8 bytes per candidate) and
-        escalates only candidates whose
-        sketch bound beats θ² to the int8 tier — their gather indices
-        collapse to row 0, keeping int8 traffic proportional to sketch
-        survivors. Escalated candidates take ``max(int8 lb, sketch lb)``
-        (both certified, so the max is the tighter certified bound, and
-        the per-tier chain sketch_lb ≤ dist ≤ true stays monotone);
-        pruned ones keep the sketch bound, which is ≥ θ² and therefore
-        never pooled.
+      cascade/qc/esc_th2: optional ``FilterCascade`` over ``vecs`` +
+        queries encoded on its tiers' grids (``cascade.encode``) + the
+        escalation threshold θ². When given, distances are *certified
+        lower bounds* walked through the tier chain (``cascade_bounds``),
+        so downstream `< θ²` tests accept a superset; the wave runner
+        re-ranks pooled survivors exactly.
     Returns:
-      (dist (B,K) f32 — +inf at invalid, valid (B,K), new_visited,
-       n_new (B,), n_esc (B,) — candidates escalated to int8 (sketch8)).
+      (dist (B,K) f32 — +inf at invalid, ub (B,K) certified upper bounds
+       (= dist on the exact f32 path), valid (B,K), new_visited,
+       n_new (B,), n_esc (B,) — candidates escalated into tier 1).
     """
     B, K = cand.shape
     valid = valid & (cand != NO_NODE)
@@ -97,73 +139,38 @@ def _probe(vecs: Array, x: Array, cand: Array, valid: Array, visited: Array,
     valid = valid & keep
     # distances (masked)
     n_esc = jnp.zeros((B,), jnp.int32)
-    if quant is not None and sketch is not None:
-        # --- tier 0: 1-bit sketch bounds for every candidate (codes +
-        # two slack-table entries: d/8 + 8 bytes gathered per cand) ---
-        scands = sketch.codes[cand_c]                       # (B, K, W) u32
-        hh = ops.rowwise_hamming(sx, scands, impl=dist_impl)
-        lb_s, nc = sketch_lower_bound_gather(hh, sxcum, sketch.cum,
-                                             cand_c, sketch.hs,
-                                             sketch.iso)
-        # --- tier 1: int8 confirm, survivors only ---
-        esc = valid & (lb_s < esc_th2)
-        idx8 = jnp.where(esc, cand_c, 0)
-        qc = quant.q[idx8]                                  # (B, K, d) int8
-        dhat = ops.rowwise_sq_dists_int8(
-            qx, qc, quant.scales, group_size=quant.group_size,
-            impl=dist_impl)
-        slack = xerr[:, None] + quant.err[idx8]
-        lb8 = ops.quant_lower_bound(dhat, slack)
-        # Pruned candidates keep their certified floor (≥ θ², so they can
-        # never pool or satisfy a found-test) but are *ordered* by the
-        # SimHash angle estimate — the certified bound compresses all far
-        # candidates toward θ², which would erase the greedy phase's
-        # navigation gradient. Ordering may use an estimate; threshold
-        # tests only ever see certified bounds.
-        nq = sxcum[:, -1][:, None]
-        cos = jnp.cos(jnp.pi * hh.astype(jnp.float32) / sketch.mu.shape[0])
-        est = nq + nc - 2.0 * jnp.sqrt(jnp.maximum(nq * nc, 0.0)) * cos
-        dist = jnp.where(esc, jnp.maximum(lb8, lb_s),
-                         jnp.maximum(lb_s, est))
-        n_esc = jnp.sum(esc, axis=1).astype(jnp.int32)
-    elif quant is not None:
-        qc = quant.q[cand_c]                                # (B, K, d) int8
-        dhat = ops.rowwise_sq_dists_int8(
-            qx, qc, quant.scales, group_size=quant.group_size,
-            impl=dist_impl)
-        slack = xerr[:, None] + quant.err[cand_c]
-        dist = ops.quant_lower_bound(dhat, slack)
+    if cascade is not None:
+        dist, ub, n_esc = cascade_bounds(cascade, qc, cand_c, valid,
+                                         esc_th2, dist_impl=dist_impl)
     else:
         cvec = vecs[cand_c]                                 # (B, K, d)
         dist = ops.rowwise_sq_dists(x, cvec, impl=dist_impl)
+        ub = dist
     dist = jnp.where(valid, dist, _INF)
+    ub = jnp.where(valid, ub, _INF)
     # mark visited: deduped ⇒ each (word,bit) contributed once ⇒ add == or
     add = jnp.where(valid, bit, jnp.uint32(0))
     lane = jnp.arange(B, dtype=jnp.int32)[:, None]
     visited = visited.at[lane, w].add(add)
     n_new = jnp.sum(valid, axis=1).astype(jnp.int32)
-    return dist, valid, visited, n_new, n_esc
+    return dist, ub, valid, visited, n_new, n_esc
 
 
 def _expand(index_vecs: Array, index_nbrs: Array, x: Array, sel_ids: Array,
             sel_valid: Array, visited: Array, *, n_data: int,
             traverse_nondata: bool, dist_impl: str | None,
-            quant=None, qx: Array | None = None,
-            xerr: Array | None = None, sketch=None,
-            sx: Array | None = None, sxcum: Array | None = None,
-            esc_th2=None):
+            cascade=None, qc=None, esc_th2=None):
     """Gather neighbor rows of selected nodes and probe them."""
     B, E = sel_ids.shape
     R = index_nbrs.shape[1]
     rows = index_nbrs[jnp.clip(sel_ids, 0)]                 # (B, E, R)
     cand = rows.reshape(B, E * R)
     valid = jnp.broadcast_to(sel_valid[:, :, None], (B, E, R)).reshape(B, E * R)
-    dist, valid, visited, n_new, n_esc = _probe(
+    dist, ub, valid, visited, n_new, n_esc = _probe(
         index_vecs, x, cand, valid, visited, n_data=n_data,
         traverse_nondata=traverse_nondata, dist_impl=dist_impl,
-        quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx, sxcum=sxcum,
-        esc_th2=esc_th2)
-    return cand, dist, valid, visited, n_new, n_esc
+        cascade=cascade, qc=qc, esc_th2=esc_th2)
+    return cand, dist, ub, valid, visited, n_new, n_esc
 
 
 def _beam_merge(bd, bi, bexp, cd, ci, cexp):
@@ -176,6 +183,34 @@ def _beam_merge(bd, bi, bexp, cd, ci, cexp):
     return (jnp.take_along_axis(alld, order, axis=1),
             jnp.take_along_axis(alli, order, axis=1),
             jnp.take_along_axis(alle, order, axis=1))
+
+
+def _hybrid_merge(bd, bi, bexp, bub, cd, ci, cexp, cub, *, protect_th2):
+    """Merge the hybrid out-range beam, keeping L entries; carry certified
+    upper bounds alongside.
+
+    Eviction order is the navigation distance — except that entries whose
+    certified upper bound beats ``protect_th2`` sort ahead of every
+    unprotected entry (ordered among themselves by that upper bound).
+    Under quantized modes navigation distances are lower bounds and
+    estimates, which can compress or reorder genuinely-near candidates
+    toward the back of a full beam; the guard makes eviction unable to
+    drop a candidate that is *certifiably* within the protection radius —
+    the per-query recall floor for OOD queries. ``protect_th2 = None``
+    (exact f32 or guard disabled) reduces to a plain distance merge."""
+    L = bd.shape[1]
+    alld = jnp.concatenate([bd, cd], axis=1)
+    alli = jnp.concatenate([bi, ci], axis=1)
+    alle = jnp.concatenate([bexp, cexp], axis=1)
+    allu = jnp.concatenate([bub, cub], axis=1)
+    key = alld
+    if protect_th2 is not None:
+        key = jnp.where(allu < protect_th2, allu - _PROTECT_OFF, alld)
+    order = jnp.argsort(key, axis=1)[:, :L]
+    return (jnp.take_along_axis(alld, order, axis=1),
+            jnp.take_along_axis(alli, order, axis=1),
+            jnp.take_along_axis(alle, order, axis=1),
+            jnp.take_along_axis(allu, order, axis=1))
 
 
 # ---------------------------------------------------------------------------
@@ -203,19 +238,15 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
                   seeds_valid: Array, theta: float | Array, *,
                   cfg: TraversalConfig, n_data: int,
                   traverse_nondata: bool = True,
-                  quant=None, qx: Array | None = None,
-                  xerr: Array | None = None, sketch=None,
-                  sx: Array | None = None,
-                  sxcum: Array | None = None) -> GreedyState:
+                  cascade=None, qc=None) -> GreedyState:
     """Batched best-first search until an in-range point is found per lane.
 
     Args:
       x: (B, d) wave of queries; seeds: (B, S) start node ids.
       theta: L2 threshold (scalar).
-      quant/qx/xerr: optional sq8 mode — traversal runs on certified
-        lower bounds from int8 codes (see ``_probe``).
-      sketch/sx/sxcum: optional sketch8 mode — 1-bit sketch bounds prune
-        candidates before the int8 tier (escalation threshold θ²).
+      cascade/qc: optional ``FilterCascade`` over the index vectors +
+        queries encoded on its tiers' grids — traversal runs on certified
+        lower bounds walked through the tier chain (see ``_probe``).
     """
     vecs, nbrs = index.vecs, index.nbrs
     B = x.shape[0]
@@ -225,11 +256,10 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
     visited0 = jnp.zeros((B, W), jnp.uint32)
 
     # --- seed probing (Alg. 2 lines 5–11) ---
-    d0, v0, visited0, n0, e0 = _probe(
+    d0, _, v0, visited0, n0, e0 = _probe(
         vecs, x, seeds, seeds_valid, visited0, n_data=n_data,
         traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-        quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx, sxcum=sxcum,
-        esc_th2=th2)
+        cascade=cascade, qc=qc, esc_th2=th2)
     bd = jnp.full((B, L), _INF)
     bi = jnp.full((B, L), NO_NODE, jnp.int32)
     bexp = jnp.zeros((B, L), bool)
@@ -265,11 +295,10 @@ def greedy_search(index: GraphIndex, x: Array, seeds: Array,
         new_exp = s.beam_exp.at[lane, selpos].max(sel_valid)
         exhausted = ~jnp.any(sel_valid, axis=1) & active
 
-        cand, cd, cv, visited, n_new, n_esc = _expand(
+        cand, cd, _, cv, visited, n_new, n_esc = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
             traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-            quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx,
-            sxcum=sxcum, esc_th2=th2)
+            cascade=cascade, qc=qc, esc_th2=th2)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist = s.n_dist + jnp.where(active, n_new, 0)
         n_esc2 = s.n_esc + jnp.where(active, n_esc, 0)
@@ -328,6 +357,7 @@ class _ExpState(NamedTuple):
     hb_dist: Array         # (B, Lh) hybrid out-range beam
     hb_idx: Array
     hb_exp: Array
+    hb_ub: Array           # (B, Lh) certified upper bounds (eviction guard)
     visited: Array
     best_dist: Array
     best_idx: Array
@@ -347,9 +377,8 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
                  traverse_nondata: bool,
                  init_idx: Array, init_dist: Array, init_valid: Array,
                  visited: Array, best_dist: Array, best_idx: Array,
-                 n_dist: Array, quant=None, qx: Array | None = None,
-                 xerr: Array | None = None, sketch=None,
-                 sx: Array | None = None, sxcum: Array | None = None,
+                 n_dist: Array, cascade=None, qc=None,
+                 init_ub: Array | None = None,
                  n_esc: Array | None = None) -> ExpandResult:
     """Enumerate all reachable in-range data points from initial candidates.
 
@@ -358,17 +387,29 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
     In-range data entries seed the result pool; the rest seed the hybrid
     out-range beam (BBFS only — plain BFS drops them, paper Alg. 2 line 29).
 
-    In sq8 mode (``quant`` given) all distances are certified lower
-    bounds, so the pool is a superset of the exact pool over the visited
-    region; the caller must re-rank pooled entries with the exact kernel
-    before emitting pairs.
+    Under a ``cascade`` all distances are certified lower bounds, so the
+    pool is a superset of the exact pool over the visited region; the
+    caller must re-rank pooled entries with the exact kernel before
+    emitting pairs. ``init_ub`` optionally supplies certified upper
+    bounds for the initial candidates (from ``_probe``); the hybrid
+    out-range beam carries (lb, ub) pairs so eviction can never drop a
+    candidate whose certified upper bound beats the protection radius
+    ``cfg.hybrid_guard · θ²`` (the OOD recall floor — see
+    ``_hybrid_merge``).
     """
     vecs, nbrs = index.vecs, index.nbrs
     B, K0 = init_idx.shape
     C, Lh, E = cfg.pool_cap, cfg.hybrid_beam, cfg.expand_per_iter
     th2 = jnp.float32(theta) ** 2
+    # eviction protection only matters when distances are bounds, and
+    # only if the guard is enabled (cfg.hybrid_guard > 0)
+    protect_th2 = (jnp.float32(cfg.hybrid_guard) * th2
+                   if cascade is not None and cfg.hybrid_guard > 0
+                   else None)
     if n_esc is None:
         n_esc = jnp.zeros((B,), jnp.int32)
+    if init_ub is None:
+        init_ub = jnp.full(init_dist.shape, _INF)
 
     is_data = (init_idx >= 0) & (init_idx < n_data)
     inr = init_valid & is_data & (init_dist < th2)
@@ -390,19 +431,22 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
     hb_dist = jnp.full((B, max(Lh, 1)), _INF)
     hb_idx = jnp.full((B, max(Lh, 1)), NO_NODE, jnp.int32)
     hb_exp = jnp.zeros((B, max(Lh, 1)), bool)
+    hb_ub = jnp.full((B, max(Lh, 1)), _INF)
     if hybrid and Lh > 0:
         outr = init_valid & ~inr
-        hb_dist, hb_idx, hb_exp = _beam_merge(
-            hb_dist, hb_idx, hb_exp,
+        hb_dist, hb_idx, hb_exp, hb_ub = _hybrid_merge(
+            hb_dist, hb_idx, hb_exp, hb_ub,
             jnp.where(outr, init_dist, _INF),
             jnp.where(outr, init_idx, NO_NODE),
-            jnp.zeros_like(outr))
+            jnp.zeros_like(outr),
+            jnp.where(outr, init_ub, _INF),
+            protect_th2=protect_th2)
 
     state = _ExpState(
         pool_idx=pool_idx, pool_dist=pool_dist,
         pool_exp=jnp.zeros((B, C + 1), bool).at[:, C].set(True),
         n_pool=n_pool, overflow=overflow0,
-        hb_dist=hb_dist, hb_idx=hb_idx, hb_exp=hb_exp,
+        hb_dist=hb_dist, hb_idx=hb_idx, hb_exp=hb_exp, hb_ub=hb_ub,
         visited=visited, best_dist=best_dist, best_idx=best_idx,
         qmax_prev=jnp.full((B,), _INF), stall=jnp.zeros((B,), jnp.int32),
         done=jnp.zeros((B,), bool), n_dist=n_dist, n_esc=n_esc,
@@ -438,11 +482,10 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
             (~pool_exp) & (s.pool_idx != NO_NODE), axis=1)
         exhausted = ~jnp.any(sel_valid, axis=1) & active
 
-        cand, cd, cv, visited, n_new, n_esc_new = _expand(
+        cand, cd, cub, cv, visited, n_new, n_esc_new = _expand(
             vecs, nbrs, x, sel_ids, sel_valid, s.visited, n_data=n_data,
             traverse_nondata=traverse_nondata, dist_impl=cfg.dist_impl,
-            quant=quant, qx=qx, xerr=xerr, sketch=sketch, sx=sx,
-            sxcum=sxcum, esc_th2=th2)
+            cascade=cascade, qc=qc, esc_th2=th2)
         visited = jnp.where(active[:, None], visited, s.visited)
         n_dist2 = s.n_dist + jnp.where(active, n_new, 0)
         n_esc2 = s.n_esc + jnp.where(active, n_esc_new, 0)
@@ -468,13 +511,16 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
         # --- hybrid beam absorbs the rest (bounded, Alg. 4 lines 12–16) ---
         if hybrid and Lh > 0:
             cout = cv & ~cinr & active[:, None]
-            hb_dist2, hb_idx2, hb_exp3 = _beam_merge(
-                s.hb_dist, s.hb_idx, hb_exp2,
+            hb_dist2, hb_idx2, hb_exp3, hb_ub2 = _hybrid_merge(
+                s.hb_dist, s.hb_idx, hb_exp2, s.hb_ub,
                 jnp.where(cout, cd, _INF),
                 jnp.where(cout, cand, NO_NODE),
-                jnp.zeros_like(cout))
+                jnp.zeros_like(cout),
+                jnp.where(cout, cub, _INF),
+                protect_th2=protect_th2)
         else:
-            hb_dist2, hb_idx2, hb_exp3 = s.hb_dist, s.hb_idx, hb_exp2
+            hb_dist2, hb_idx2, hb_exp3, hb_ub2 = (
+                s.hb_dist, s.hb_idx, hb_exp2, s.hb_ub)
 
         # --- best-seen tracking (Alg. 2 lines 38–39; feeds SWS cache) ---
         cbest = jnp.min(cd, axis=1)
@@ -514,7 +560,7 @@ def range_expand(index: GraphIndex, x: Array, theta: float | Array, *,
         return _ExpState(pool_idx2, pool_dist2, pool_exp,
                          jnp.where(keep, n_pool2, s.n_pool),
                          jnp.where(keep, overflow2, s.overflow),
-                         hb_dist2, hb_idx2, hb_exp3, visited,
+                         hb_dist2, hb_idx2, hb_exp3, hb_ub2, visited,
                          best_dist2, best_idx2, qmax_prev2, stall2, done2,
                          n_dist2, n_esc2, s.n_iters + 1)
 

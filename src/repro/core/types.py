@@ -60,6 +60,12 @@ class TraversalConfig:
     hybrid_beam      — L for the BBFS out-range queue (paper Alg. 4);
                        0 = plain BFS.
     hybrid_patience  — BBFS early-stop plateau (paper: 1).
+    hybrid_guard     — eviction-protection radius for the BBFS out-range
+                       beam under quantized modes, as a multiple of θ²:
+                       entries whose *certified upper bound* is below
+                       ``hybrid_guard · θ²`` cannot be evicted ahead of
+                       unprotected entries (the OOD recall floor; ≤ 0
+                       disables, exact f32 is unaffected either way).
     seeds_max        — max seeds probed per query (caps HWS parent caches).
     max_iters        — hard bound on loop iterations (safety net).
     """
@@ -69,6 +75,7 @@ class TraversalConfig:
     pool_cap: int = 1024
     hybrid_beam: int = 64
     hybrid_patience: int = 1
+    hybrid_guard: float = 4.0
     seeds_max: int = 16
     max_iters: int = 4096
     dist_impl: str | None = None   # kernels.ops impl override

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.types import (QUANT_FILTER_MODES, GraphIndex, JoinConfig,
                               JoinResult, JoinStats)
 from repro.engine import waves as W
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -142,11 +143,12 @@ class JoinEngine:
         self._index_x = _LRU(max_cached_indexes)
         self._merged = _LRU(max_cached_indexes)
         self._sharded = _LRU(max_cached_indexes)
-        # QuantStore / SketchStore artifacts mirror the index artifacts
-        # they compress (one per shard for the sharded path), keyed by
-        # artifact kind (+ X fingerprint for per-X artifacts).
-        self._qstores = _LRU(2 * max_cached_indexes)
-        self._sstores = _LRU(2 * max_cached_indexes)
+        # Compressed tier stores mirror the index artifacts they compress
+        # (one per shard for the sharded path), keyed by (tier name,
+        # artifact kind[, X fingerprint]). FilterCascades are assembled
+        # from this one cache, so tiers are shared across modes (a
+        # sketch8 join reuses the int8 store an sq8 join built).
+        self._tier_stores = _LRU(4 * max_cached_indexes)
         self.build_counts: dict[str, int] = {
             "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0,
             "quant": 0, "sketch": 0}
@@ -154,11 +156,16 @@ class JoinEngine:
         self.serve_stats: dict[str, int] = {
             "joins": 0, "batches": 0, "queries": 0, "pairs": 0}
 
-        # streaming state (global query ids, carried work-sharing cache)
+        # streaming state (global query ids, carried work-sharing cache).
+        # Under a quantized mode the carry window holds int8 codes +
+        # norms instead of f32 vectors (streaming-side compression): the
+        # parent-assignment matmuls then run int8 as well.
         self._stream_n = 0
         self._stream_cache: dict[int, np.ndarray] = {}
         self._stream_entry_n = 0         # cached ids, not cached queries
         self._carry_vecs: np.ndarray | None = None
+        self._carry_codes: np.ndarray | None = None
+        self._carry_norms: np.ndarray | None = None
         self._carry_qids = np.empty(0, np.int64)
 
     # -- index lifecycle ----------------------------------------------------
@@ -167,12 +174,26 @@ class JoinEngine:
     def n_index_builds(self) -> int:
         return sum(self.build_counts.values())
 
+    def _build_kw_for(self, key: tuple, vecs) -> dict:
+        """``build_kw`` with a ``quant`` mode resolved to a prebuilt
+        cascade from the engine's tier-store cache, so a cascade-driven
+        index build and the joins served from that artifact share one
+        int8 store instead of quantizing the same table twice."""
+        bk = dict(self.build_kw)
+        mode = bk.pop("quant", None)
+        if mode and mode != "off":
+            from repro.quant.cascade import make_cascade
+            bk["quant"] = make_cascade(
+                [("int8", self.tier_store(key, "int8", vecs))])
+        return bk
+
     def index_y(self) -> GraphIndex:
         """The data-side index G_Y (built once, reused forever)."""
         if self._index_y is None:
             from repro.core import graph
             t0 = time.perf_counter()
-            self._index_y = graph.build_index(self.Y, **self.build_kw)
+            self._index_y = graph.build_index(
+                self.Y, **self._build_kw_for(("index_y",), self.Y))
             self.build_seconds += time.perf_counter() - t0
             self.build_counts["index_y"] += 1
         return self._index_y
@@ -183,8 +204,10 @@ class JoinEngine:
         hit = self._index_x.touch(fp)
         if hit is None:
             from repro.core import graph
+            X = jnp.asarray(X)
             t0 = time.perf_counter()
-            hit = graph.build_index(jnp.asarray(X), **self.build_kw)
+            hit = graph.build_index(
+                X, **self._build_kw_for(("index_x", fp), X))
             self.build_seconds += time.perf_counter() - t0
             self.build_counts["index_x"] += 1
             self._index_x.put(fp, hit)
@@ -197,8 +220,11 @@ class JoinEngine:
         if hit is None:
             from repro.core import graph
             t0 = time.perf_counter()
-            hit = graph.build_merged_index(self.Y, jnp.asarray(X),
-                                           **self.build_kw)
+            merged_vecs = jnp.concatenate(
+                [self.Y, jnp.asarray(X, self.Y.dtype)], axis=0)
+            hit = graph.build_index(
+                merged_vecs, n_data=int(self.Y.shape[0]),
+                **self._build_kw_for(("merged", fp), merged_vecs))
             self.build_seconds += time.perf_counter() - t0
             self.build_counts["merged"] += 1
             self._merged.put(fp, hit)
@@ -218,69 +244,57 @@ class JoinEngine:
             self._sharded.put(fp, hit)
         return hit
 
-    def quant_store(self, key: tuple, vecs):
-        """The sq8 companion of one index artifact (built once, LRU'd).
+    def tier_store(self, key: tuple, tier_name: str, vecs):
+        """The compressed store behind one cascade tier of one index
+        artifact (built once, LRU'd).
 
         ``key`` names the artifact (("y",), ("index_y",), ("merged", fp),
         ("sharded", fp)); ``vecs`` is the f32 table to compress — or, for
         the sharded key, the ``ShardedMergedIndex`` whose per-shard tables
-        each get their own store (per-shard scale grids).
+        each get their own store (per-shard scale/sketch grids).
         """
-        hit = self._qstores.touch(key)
+        from repro.quant.cascade import build_tier_store, tier_class
+
+        ck = (tier_name,) + key
+        hit = self._tier_stores.touch(ck)
         if hit is None:
             t0 = time.perf_counter()
             if key[0] == "sharded":
                 from repro.core import distributed
-                hit = distributed.quantize_sharded(
-                    vecs, n_data=int(self.Y.shape[0]))
+                hit = distributed.build_sharded_tier(
+                    tier_name, vecs, n_data=int(self.Y.shape[0]))
             else:
-                from repro.quant import build_store
-                hit = build_store(vecs)
+                hit = build_tier_store(tier_name, vecs)
             self.build_seconds += time.perf_counter() - t0
-            self.build_counts["quant"] += 1
-            self._qstores.put(key, hit)
+            self.build_counts[tier_class(tier_name).build_counter] += 1
+            self._tier_stores.put(ck, hit)
         return hit
 
-    def sketch_store(self, key: tuple, vecs):
-        """The 1-bit sketch companion of one index artifact (sketch8 mode;
-        built once, LRU'd). Same key scheme as ``quant_store`` — the
-        sketch tier always rides on top of the int8 tier it filters for.
-        """
-        hit = self._sstores.touch(key)
-        if hit is None:
-            t0 = time.perf_counter()
-            if key[0] == "sharded":
-                from repro.core import distributed
-                hit = distributed.sketch_sharded(
-                    vecs, n_data=int(self.Y.shape[0]))
-            else:
-                from repro.quant import build_sketch
-                hit = build_sketch(vecs)
-            self.build_seconds += time.perf_counter() - t0
-            self.build_counts["sketch"] += 1
-            self._sstores.put(key, hit)
-        return hit
+    def cascade_for(self, key: tuple, vecs, cfg: JoinConfig,
+                    stats: JoinStats):
+        """The ``FilterCascade`` (or ``ShardedCascade``) of one index
+        artifact under ``cfg.quant`` — the single cache behind every
+        quantized path; ``stats.quant_bytes`` accumulates what is
+        resident. Returns None for non-filtering modes."""
+        from repro.quant.cascade import TIERS_BY_MODE, make_cascade
 
-    def _filter_stores(self, key: tuple, vecs, cfg: JoinConfig,
-                       stats: JoinStats):
-        """(qstore, sstore) for one artifact under ``cfg.quant`` — the
-        int8 store for both filter modes, plus the sketch tier for
-        sketch8; ``stats.quant_bytes`` accumulates what is resident."""
         if cfg.quant not in QUANT_FILTER_MODES:
-            return None, None
-        qstore = self.quant_store(key, vecs)
-        stats.quant_bytes += qstore.nbytes
-        sstore = None
-        if cfg.quant == "sketch8":
-            sstore = self.sketch_store(key, vecs)
-            stats.quant_bytes += sstore.nbytes
-        return qstore, sstore
+            return None
+        names = TIERS_BY_MODE[cfg.quant]
+        stores = [(n, self.tier_store(key, n, vecs)) for n in names]
+        if key[0] == "sharded":
+            from repro.core.distributed import ShardedCascade
+            casc = ShardedCascade(names=tuple(n for n, _ in stores),
+                                  stores=tuple(s for _, s in stores))
+        else:
+            casc = make_cascade(stores)
+        stats.quant_bytes += casc.nbytes
+        return casc
 
     def warm_quant(self, X, cfg: JoinConfig | None = None, *,
                    method: str | None = None) -> None:
-        """Pre-build the QuantStore (and, for sketch8, SketchStore)
-        artifacts a join of ``X`` would use (no-op unless the resolved
-        config names a filtering quant mode).
+        """Pre-build the cascade tier stores a join of ``X`` would use
+        (no-op unless the resolved config names a filtering quant mode).
 
         The single owner of the artifact-key scheme — benchmarks and
         deployments warm through this instead of mirroring the keys."""
@@ -295,7 +309,7 @@ class JoinEngine:
             key, vecs = ("merged", _fingerprint(X)), self.merged_index(X).vecs
         else:
             key, vecs = ("index_y",), self.index_y().vecs
-        self._filter_stores(key, vecs, cfg, JoinStats())
+        self.cascade_for(key, vecs, cfg, JoinStats())
 
     def adopt(self, *, index_y: GraphIndex | None = None, X=None,
               index_x: GraphIndex | None = None,
@@ -346,14 +360,12 @@ class JoinEngine:
         """Join X against the engine's Y. Cached indexes are reused;
         whatever the method needs and is missing is built (and counted).
 
-        ``cfg.quant == "sq8"`` routes the distance hot path through the
-        cached QuantStore companion of whichever index artifact the
-        method uses (filter on certified int8 lower bounds, exact f32
-        re-rank of survivors — emitted pairs are unchanged);
-        ``"sketch8"`` adds the cached 1-bit SketchStore tier in front
-        (Hamming bounds prune before any int8 work)."""
-        from repro.core.join import (exact_join_pairs, quant_join_pairs,
-                                     sketch_join_pairs)
+        ``cfg.quant`` routes the distance hot path through the cached
+        ``FilterCascade`` companion of whichever index artifact the
+        method uses (filter on certified lower bounds walked through the
+        tier chain, exact f32 re-rank of the ambiguous band — emitted
+        pairs are unchanged)."""
+        from repro.core.join import cascade_join_pairs
 
         cfg = self._resolve(cfg, method, theta)
         X = jnp.asarray(X)
@@ -367,18 +379,12 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            qstore, sstore = self._filter_stores(("y",), self.Y, cfg, stats)
-            if cfg.quant == "sketch8":
-                pairs, stats.n_esc8, stats.n_rerank = sketch_join_pairs(
-                    X, self.Y, cfg.theta, sstore, qstore,
-                    impl=cfg.traversal.dist_impl)
-            elif cfg.quant == "sq8":
-                pairs, stats.n_rerank = quant_join_pairs(
-                    X, self.Y, cfg.theta, qstore,
-                    impl=cfg.traversal.dist_impl)
-            else:
-                pairs = exact_join_pairs(X, self.Y, cfg.theta,
-                                         impl=cfg.traversal.dist_impl)
+            casc = self.cascade_for(("y",), self.Y, cfg, stats)
+            pairs, counts = cascade_join_pairs(
+                X, self.Y, cfg.theta, casc, impl=cfg.traversal.dist_impl)
+            stats.n_rerank = counts["n_rerank"]
+            if counts["escalated"]:
+                stats.n_esc8 = counts["escalated"][0]
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = int(X.shape[0]) * int(self.Y.shape[0])
             return self._done(JoinResult(pairs=pairs, stats=stats), X)
@@ -390,20 +396,18 @@ class JoinEngine:
         t0 = time.perf_counter()
         if cfg.method in _MI_METHODS:
             merged = self.merged_index(X)
-            qstore, sstore = self._filter_stores(
+            casc = self.cascade_for(
                 ("merged", _fingerprint(X)), merged.vecs, cfg, stats)
             stats.other_seconds += time.perf_counter() - t0
-            W.run_mi_join(X, merged, cfg, stats, all_pairs, qstore=qstore,
-                          sstore=sstore)
+            W.run_mi_join(X, merged, cfg, stats, all_pairs, cascade=casc)
         else:
             iy = self.index_y()
             ix = (self.index_x(X)
                   if cfg.method in ("es_hws", "es_sws") else None)
-            qstore, sstore = self._filter_stores(("index_y",), iy.vecs,
-                                                 cfg, stats)
+            casc = self.cascade_for(("index_y",), iy.vecs, cfg, stats)
             stats.other_seconds += time.perf_counter() - t0
             W.run_search_join(X, iy, ix, cfg, stats, all_pairs,
-                              qstore=qstore, sstore=sstore)
+                              cascade=casc)
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
@@ -426,10 +430,10 @@ class JoinEngine:
                 f"{cfg.method!r} (work-sharing caches are per-device)")
         mesh, axes = self._mesh_axes()
         smi = self.sharded_index(X)
-        # one QuantStore / SketchStore per shard (per-shard scale and
-        # sketch grids), cached alongside the sharded index they compress
-        qstore, sstore = self._filter_stores(
-            ("sharded", _fingerprint(X)), smi, cfg, stats)
+        # one tier store per shard (per-shard scale and sketch grids),
+        # cached alongside the sharded index they compress
+        casc = self.cascade_for(("sharded", _fingerprint(X)), smi, cfg,
+                                stats)
         # adapt ⇒ hybrid BBFS for every query: a sound superset of the
         # per-query adaptive split (per-shard OOD prediction would need
         # per-shard side tables; the hybrid path subsumes the BFS one).
@@ -437,8 +441,8 @@ class JoinEngine:
         t0 = time.perf_counter()
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
-            wave_size=cfg.wave_size, hybrid=hybrid, qstore=qstore,
-            sstore=sstore, n_data=int(self.Y.shape[0]))
+            wave_size=cfg.wave_size, hybrid=hybrid, cascade=casc,
+            n_data=int(self.Y.shape[0]))
         stats.expand_seconds += time.perf_counter() - t0
         stats.n_dist += int(dstats["n_dist"])
         stats.n_overflow += int(dstats["n_overflow"])
@@ -459,6 +463,8 @@ class JoinEngine:
         self._stream_cache.clear()
         self._stream_entry_n = 0
         self._carry_vecs = None
+        self._carry_codes = None
+        self._carry_norms = None
         self._carry_qids = np.empty(0, np.int64)
 
     def submit(self, X_batch, cfg: JoinConfig | None = None, *,
@@ -473,8 +479,7 @@ class JoinEngine:
         of s_Y, so later batches keep getting cheaper (the streaming form
         of the paper's MST parent order).
         """
-        from repro.core.join import (exact_join_pairs, quant_join_pairs,
-                                     sketch_join_pairs)
+        from repro.core.join import cascade_join_pairs
 
         if self.n_shards > 1:
             raise NotImplementedError(
@@ -488,20 +493,13 @@ class JoinEngine:
 
         if cfg.method == "nlj":
             t0 = time.perf_counter()
-            qstore, sstore = self._filter_stores(("y",), self.Y, cfg,
-                                                 stats)
-            if cfg.quant == "sketch8":
-                pairs, stats.n_esc8, stats.n_rerank = sketch_join_pairs(
-                    X_batch, self.Y, cfg.theta, sstore, qstore,
-                    impl=cfg.traversal.dist_impl)
-            elif cfg.quant == "sq8":
-                pairs, stats.n_rerank = quant_join_pairs(
-                    X_batch, self.Y, cfg.theta, qstore,
-                    impl=cfg.traversal.dist_impl)
-            else:
-                pairs = exact_join_pairs(X_batch, self.Y, cfg.theta,
-                                         impl=cfg.traversal.dist_impl)
-                pairs = pairs.copy()
+            casc = self.cascade_for(("y",), self.Y, cfg, stats)
+            pairs, counts = cascade_join_pairs(
+                X_batch, self.Y, cfg.theta, casc,
+                impl=cfg.traversal.dist_impl)
+            stats.n_rerank = counts["n_rerank"]
+            if counts["escalated"]:
+                stats.n_esc8 = counts["escalated"][0]
             pairs[:, 0] += offset
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = nb * int(self.Y.shape[0])
@@ -512,10 +510,10 @@ class JoinEngine:
             # distinct batch — greedy work offloaded to construction.
             all_pairs: list[np.ndarray] = []
             merged = self.merged_index(X_batch)
-            qstore, sstore = self._filter_stores(
+            casc = self.cascade_for(
                 ("merged", _fingerprint(X_batch)), merged.vecs, cfg, stats)
             W.run_mi_join(X_batch, merged, cfg, stats, all_pairs,
-                          qid_offset=offset, qstore=qstore, sstore=sstore)
+                          qid_offset=offset, cascade=casc)
             pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                      else np.empty((0, 2), np.int64))
             result = JoinResult(pairs=pairs, stats=stats)
@@ -531,8 +529,8 @@ class JoinEngine:
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
                        stats: JoinStats, offset: int) -> JoinResult:
         iy = self.index_y()
-        qstore, sstore = self._filter_stores(("index_y",), iy.vecs, cfg,
-                                             stats)
+        casc = self.cascade_for(("index_y",), iy.vecs, cfg, stats)
+        int8 = casc.tier("int8") if casc is not None else None
         sy = int(iy.start)
         S = cfg.traversal.seeds_max
         nb = int(X_batch.shape[0])
@@ -545,10 +543,15 @@ class JoinEngine:
             qids_l, lane_valid = W.pad_wave(local, cfg.wave_size)
             qids_g = qids_l + offset
             xw = X_batch[jnp.asarray(qids_l)]
+            # queries are encoded on the cascade grids exactly once per
+            # wave: the codes drive parent assignment, the carry window,
+            # *and* the traversal (streaming-side compression)
+            qc = casc.encode(xw) if casc is not None else None
+            qc8 = qc[casc.names.index("int8")] if int8 is not None else None
 
             t0 = time.perf_counter()
-            parent = self._assign_parents(X_np[qids_l], qids_g, lane_valid,
-                                          caching)
+            parent = self._assign_parents(X_np[qids_l], qc8, int8, qids_g,
+                                          lane_valid, caching)
             seeds, seeds_valid = W.seeds_from_cache(
                 qids_g, lane_valid, parent, self._stream_cache, sy,
                 cfg.wave_size, S)
@@ -556,7 +559,7 @@ class JoinEngine:
 
             out = W.run_search_wave(iy, xw, qids_g, lane_valid, cfg, stats,
                                     seeds=seeds, seeds_valid=seeds_valid,
-                                    qstore=qstore, sstore=sstore)
+                                    cascade=casc, qc=qc)
             all_pairs.append(out.pairs)
 
             if caching:
@@ -564,36 +567,77 @@ class JoinEngine:
                 self._stream_entry_n = W.update_sws_cache(
                     self._stream_cache, out, qids_g, cfg, stats,
                     self._stream_entry_n)
-                self._remember(X_np[qids_l[lane_valid]],
-                               qids_g[lane_valid])
+                lv = lane_valid
+                if qc8 is not None:
+                    self._remember(None, qids_g[lv],
+                                   codes=np.asarray(qc8.q)[lv],
+                                   norms=np.asarray(qc8.norms)[lv])
+                else:
+                    self._remember(X_np[qids_l[lv]], qids_g[lv])
                 stats.other_seconds += time.perf_counter() - t0
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
         return JoinResult(pairs=pairs, stats=stats)
 
-    def _assign_parents(self, xw: np.ndarray, qids_g: np.ndarray,
-                        lane_valid: np.ndarray,
+    def _assign_parents(self, xw: np.ndarray, qc8, int8_tier,
+                        qids_g: np.ndarray, lane_valid: np.ndarray,
                         caching: bool) -> dict[int, int]:
-        """Streaming parent = nearest completed query in the carry window."""
-        if not caching or self._carry_vecs is None \
-                or not len(self._carry_qids):
+        """Streaming parent = nearest completed query in the carry window.
+
+        Under a quantized mode both sides of the nearest-donor matmul are
+        int8: the wave's codes were already computed for traversal, and
+        the carry window stores donor codes + norms instead of f32
+        vectors (4× smaller window, d×1 bytes per donor through the
+        kernel). Parent choice is a seeding heuristic, so quantized
+        distances need no certification here.
+        """
+        if not caching or not len(self._carry_qids):
             return {}
-        C = self._carry_vecs
-        d2 = (np.sum(xw * xw, axis=1, keepdims=True)
-              + np.sum(C * C, axis=1)[None, :] - 2.0 * xw @ C.T)
+        if qc8 is not None and self._carry_codes is not None:
+            st = int8_tier.store
+            d2 = np.asarray(ops.pairwise_sq_dists_int8(
+                qc8.q, jnp.asarray(self._carry_codes), st.scales,
+                group_size=st.group_size, xn=qc8.norms,
+                yn=jnp.asarray(self._carry_norms)))
+        elif self._carry_vecs is not None:
+            C = self._carry_vecs
+            d2 = (np.sum(xw * xw, axis=1, keepdims=True)
+                  + np.sum(C * C, axis=1)[None, :] - 2.0 * xw @ C.T)
+        else:
+            # carry representation doesn't match the current quant mode
+            # (mode switched mid-stream): fall back to rootless seeding
+            return {}
         nearest = self._carry_qids[np.argmin(d2, axis=1)]
         return {int(q): int(p)
                 for q, p, v in zip(qids_g, nearest, lane_valid) if v}
 
-    def _remember(self, vecs: np.ndarray, qids: np.ndarray) -> None:
-        if self._carry_vecs is None:
-            self._carry_vecs = vecs.copy()
-            self._carry_qids = qids.astype(np.int64).copy()
-        else:
-            self._carry_vecs = np.concatenate([self._carry_vecs, vecs])
-            self._carry_qids = np.concatenate(
-                [self._carry_qids, qids.astype(np.int64)])
+    def _remember(self, vecs: np.ndarray | None, qids: np.ndarray, *,
+                  codes: np.ndarray | None = None,
+                  norms: np.ndarray | None = None) -> None:
+        def _append(cur, new):
+            if new is None:
+                return cur
+            return new.copy() if cur is None else np.concatenate([cur, new])
+
+        # a mode switch mid-stream changes the carry representation
+        # (f32 vecs ↔ int8 codes); old donors can't be compared against
+        # the new wave, so the window restarts rather than misalign —
+        # dropped donors leave the work-sharing cache with their slots,
+        # exactly like the normal eviction path below
+        if (codes is not None) != (self._carry_codes is not None) \
+                and len(self._carry_qids):
+            for q in self._carry_qids:
+                gone = self._stream_cache.pop(int(q), None)
+                if gone is not None:
+                    self._stream_entry_n -= len(gone)
+            self._carry_vecs = self._carry_codes = self._carry_norms = None
+            self._carry_qids = np.empty(0, np.int64)
+        self._carry_vecs = _append(self._carry_vecs, vecs)
+        self._carry_codes = _append(self._carry_codes, codes)
+        self._carry_norms = _append(self._carry_norms, norms)
+        self._carry_qids = np.concatenate(
+            [self._carry_qids, qids.astype(np.int64)])
         if len(self._carry_qids) > self.carry_window:
             keep = len(self._carry_qids) - self.carry_window
             evicted = self._carry_qids[:keep]
@@ -601,7 +645,10 @@ class JoinEngine:
                 gone = self._stream_cache.pop(int(q), None)
                 if gone is not None:
                     self._stream_entry_n -= len(gone)
-            self._carry_vecs = self._carry_vecs[keep:]
+            for attr in ("_carry_vecs", "_carry_codes", "_carry_norms"):
+                cur = getattr(self, attr)
+                if cur is not None:
+                    setattr(self, attr, cur[keep:])
             self._carry_qids = self._carry_qids[keep:]
 
     # -- bookkeeping --------------------------------------------------------

@@ -31,8 +31,6 @@ from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
                               TraversalConfig)
 from repro.kernels import ops
-from repro.quant.sketch import SketchStore, sketch_queries
-from repro.quant.store import QuantStore, quantize_queries
 
 Array = jax.Array
 
@@ -68,23 +66,20 @@ def collect_pairs(qids: np.ndarray, keep: np.ndarray,
 
 def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
                 keep: np.ndarray, theta: float, stats: JoinStats, *,
-                dist_impl: str | None, qstore: QuantStore,
-                xerr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Exact f32 re-rank of sq8 filter survivors (the second stage of
+                dist_impl: str | None, cascade,
+                qc) -> tuple[np.ndarray, np.ndarray]:
+    """Exact f32 re-rank of cascade filter survivors (the second stage of
     filter-then-rerank).
 
     The traversal pooled every candidate whose *certified lower bound*
     beat θ² — a superset of the exact in-range set over the visited
-    region. Entries whose certified *upper* bound also beats θ² are
-    guaranteed true pairs and are emitted without touching the f32 table;
-    only the ambiguous band (lb < θ² ≤ ub) is re-computed exactly. The
-    emitted set is therefore identical to what the f32 pipeline emits for
-    the same visited region, while re-rank traffic stays proportional to
-    the quantization band, not the join size.
-
-    ``pool_dist`` holds the pooled lower bounds; with per-pair slack
-    ``s`` the matching upper bound is ``(√lb + 2s)²`` (looser only where
-    the lower bound was clamped to 0, which stays sound). Band
+    region. The cascade's confirming tier splits the pool
+    (``pool_band``): entries whose certified *upper* bound also beats θ²
+    are guaranteed true pairs and are emitted without touching the f32
+    table; only the ambiguous band (lb < θ² ≤ ub) is re-computed
+    exactly. The emitted set is therefore identical to what the f32
+    pipeline emits for the same visited region, while re-rank traffic
+    stays proportional to the quantization band, not the join size. Band
     evaluations are counted in ``stats.n_rerank`` (``n_dist`` stays the
     quantized-filter count).
 
@@ -92,10 +87,8 @@ def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
     lower bound elsewhere.
     """
     th2 = np.float32(theta) ** 2
-    s = (np.asarray(xerr)[:, None]
-         + np.asarray(qstore.err)[np.clip(pool_idx, 0, None)])
-    sure, amb = ops.quant_band_from_lb(jnp.asarray(pool_dist),
-                                       jnp.asarray(s), th2)
+    sure, amb = cascade.final.pool_band(qc[-1], jnp.asarray(pool_dist),
+                                        jnp.asarray(pool_idx), th2)
     sure = keep & np.asarray(sure)
     amb = keep & np.asarray(amb)
     stats.n_rerank += int(amb.sum())
@@ -118,10 +111,7 @@ def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
 @functools.partial(jax.jit, static_argnames=("traverse_nondata", "dist_impl"))
 def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
               traverse_nondata: bool, dist_impl: str | None,
-              quant: QuantStore | None = None, qx: Array | None = None,
-              xerr: Array | None = None,
-              sketch: SketchStore | None = None, sx: Array | None = None,
-              sxcum: Array | None = None, esc_th2=None):
+              cascade=None, qc=None, esc_th2=None):
     """Probe each query's own neighborhood row in the merged index."""
     B = x.shape[0]
     W = traversal.bitmap_words(merged.n_nodes)
@@ -132,16 +122,15 @@ def _mi_probe(merged: GraphIndex, x: Array, qids: Array, lane_valid: Array, *,
         jnp.uint32(1) << (qids & 31).astype(jnp.uint32))
     rows = merged.nbrs[qids]                                 # (B, R)
     valid = jnp.broadcast_to(lane_valid[:, None], rows.shape)
-    dist, valid, visited, n_new, n_esc = traversal._probe(
+    dist, ub, valid, visited, n_new, n_esc = traversal._probe(
         merged.vecs, x, rows, valid, visited,
         n_data=merged.n_data, traverse_nondata=traverse_nondata,
-        dist_impl=dist_impl, quant=quant, qx=qx, xerr=xerr,
-        sketch=sketch, sx=sx, sxcum=sxcum, esc_th2=esc_th2)
+        dist_impl=dist_impl, cascade=cascade, qc=qc, esc_th2=esc_th2)
     best = jnp.min(dist, axis=1)
     besti = jnp.take_along_axis(
         jnp.where(valid, rows, NO_NODE),
         jnp.argmin(dist, axis=1)[:, None], axis=1)[:, 0]
-    return rows, dist, valid, visited, n_new, n_esc, best, besti
+    return rows, dist, ub, valid, visited, n_new, n_esc, best, besti
 
 
 # ---------------------------------------------------------------------------
@@ -174,35 +163,32 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
                     lane_valid: np.ndarray, cfg: JoinConfig,
                     stats: JoinStats, *, seeds: np.ndarray,
                     seeds_valid: np.ndarray,
-                    qstore: QuantStore | None = None,
-                    sstore: SketchStore | None = None) -> WaveOutput:
+                    cascade=None, qc=None) -> WaveOutput:
     """One padded wave of greedy search + range expansion (Alg. 1 online).
 
     ``seeds``/``seeds_valid`` are (B, S) arrays the caller filled from
     whatever work-sharing cache applies (parent caches for the MST order,
     the streaming carry cache for ``JoinEngine.submit``).
 
-    With ``qstore`` (sq8 mode) the traversal filters on certified lower
-    bounds from int8 codes and the pooled survivors are re-ranked with
-    the exact f32 kernel before pairs are emitted. ``sstore`` (sketch8
-    mode) adds the 1-bit sketch tier in front: Hamming bounds prune
-    candidates before any int8 work (pruned vs escalated counts land in
-    ``stats.n_dist`` / ``stats.n_esc8``).
+    With a ``cascade`` the traversal filters on certified lower bounds
+    walked through the tier chain and the pooled survivors are re-ranked
+    with the exact f32 kernel before pairs are emitted (per-tier
+    escalation counts land in ``stats.n_dist`` / ``stats.n_esc8``).
+    ``qc`` optionally supplies queries already encoded on the cascade's
+    grids (the streaming path encodes once per wave and reuses the codes
+    for parent assignment).
     """
     tcfg = effective_tcfg(cfg)
     seeds_j = jnp.asarray(seeds)
     sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
-    qx = xerr = sx = sxcum = None
-    if qstore is not None:
-        qx, _, xerr = quantize_queries(xw, qstore)
-    if sstore is not None:
-        sx, sxcum = sketch_queries(xw, sstore)
+    if cascade is not None and qc is None:
+        qc = cascade.encode(xw)
 
     t0 = time.perf_counter()
     g = traversal.greedy_search(
         index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
         n_data=index_y.n_data, traverse_nondata=True,
-        quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sx, sxcum=sxcum)
+        cascade=cascade, qc=qc)
     jax.block_until_ready(g.beam_dist)
     stats.greedy_seconds += time.perf_counter() - t0
 
@@ -213,8 +199,7 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         hybrid=False, traverse_nondata=True,
         init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
         visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
-        n_dist=g.n_dist, quant=qstore, qx=qx, xerr=xerr,
-        sketch=sstore, sx=sx, sxcum=sxcum, n_esc=g.n_esc)
+        n_dist=g.n_dist, cascade=cascade, qc=qc, n_esc=g.n_esc)
     jax.block_until_ready(r.pool_idx)
     stats.expand_seconds += time.perf_counter() - t0
 
@@ -224,11 +209,11 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
     n_pool = np.asarray(r.n_pool)
     lv = np.asarray(lane_valid)
     keep = pool_mask(lv, n_pool, pool_idx.shape[1])
-    if qstore is not None:
+    if cascade is not None:
         keep, pool_dist = rerank_pool(index_y.vecs, xw, pool_idx, pool_dist,
                                       keep, cfg.theta, stats,
                                       dist_impl=tcfg.dist_impl,
-                                      qstore=qstore, xerr=xerr)
+                                      cascade=cascade, qc=qc)
     pairs = collect_pairs(qids, keep, pool_idx)
     stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
     stats.n_esc8 += int(np.asarray(r.n_esc)[lv].sum())
@@ -290,8 +275,7 @@ def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
 def run_search_join(X: Array, index_y: GraphIndex,
                     index_x: GraphIndex | None, cfg: JoinConfig,
                     stats: JoinStats, all_pairs: list[np.ndarray], *,
-                    qstore: QuantStore | None = None,
-                    sstore: SketchStore | None = None) -> None:
+                    cascade=None) -> None:
     """Full-batch index / es / es_hws / es_sws join (greedy + BFS)."""
     nq = X.shape[0]
     needs_mst = cfg.method in ("es_hws", "es_sws")
@@ -321,7 +305,7 @@ def run_search_join(X: Array, index_y: GraphIndex,
         stats.other_seconds += time.perf_counter() - t0
         out = run_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
                               seeds=seeds, seeds_valid=seeds_valid,
-                              qstore=qstore, sstore=sstore)
+                              cascade=cascade)
         all_pairs.append(out.pairs)
         t0 = time.perf_counter()
         cache_n = update_sws_cache(cache, out, qids, cfg, stats, cache_n)
@@ -334,16 +318,13 @@ def run_search_join(X: Array, index_y: GraphIndex,
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 stats: JoinStats, all_pairs: list[np.ndarray], *,
-                qid_offset: int = 0,
-                qstore: QuantStore | None = None,
-                sstore: SketchStore | None = None) -> None:
+                qid_offset: int = 0, cascade=None) -> None:
     """es_mi / es_mi_adapt join (greedy offloaded; BFS or adaptive BBFS).
 
     ``qid_offset`` shifts the emitted query ids — used by the streaming
     engine, where a batch of local queries carries global ids.
-    ``qstore`` quantizes the *merged* index (data + query nodes); pooled
-    survivors are re-ranked exactly before emission. ``sstore`` adds the
-    1-bit sketch tier above int8 (sketch8 mode).
+    ``cascade`` compresses the *merged* index (data + query nodes);
+    pooled survivors are re-ranked exactly before emission.
     """
     nq = X.shape[0]
     tcfg = cfg.traversal
@@ -373,19 +354,15 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
             node_ids = jnp.asarray(qids, jnp.int32) + n_data
             lv_j = jnp.asarray(lane_valid)
 
-            qx = xerr = sx = sxcum = None
-            if qstore is not None:
-                qx, _, xerr = quantize_queries(xw, qstore)
-            if sstore is not None:
-                sx, sxcum = sketch_queries(xw, sstore)
+            qc = cascade.encode(xw) if cascade is not None else None
 
             t0 = time.perf_counter()
-            rows, dist, valid, visited, n_new, n_esc0, best, besti = \
+            rows, dist, ub, valid, visited, n_new, n_esc0, best, besti = \
                 _mi_probe(
                     merged, xw, node_ids, lv_j,
                     traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
-                    quant=qstore, qx=qx, xerr=xerr, sketch=sstore, sx=sx,
-                    sxcum=sxcum, esc_th2=jnp.float32(cfg.theta) ** 2)
+                    cascade=cascade, qc=qc,
+                    esc_th2=jnp.float32(cfg.theta) ** 2)
             jax.block_until_ready(dist)
             stats.greedy_seconds += time.perf_counter() - t0
 
@@ -395,8 +372,8 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 hybrid=hybrid, traverse_nondata=hybrid,
                 init_idx=rows, init_dist=dist, init_valid=valid,
                 visited=visited, best_dist=best, best_idx=besti,
-                n_dist=n_new, quant=qstore, qx=qx, xerr=xerr,
-                sketch=sstore, sx=sx, sxcum=sxcum, n_esc=n_esc0)
+                n_dist=n_new, cascade=cascade, qc=qc, init_ub=ub,
+                n_esc=n_esc0)
             jax.block_until_ready(r.pool_idx)
             stats.expand_seconds += time.perf_counter() - t0
 
@@ -404,12 +381,12 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
             lv = np.asarray(lane_valid)
             pool_idx = np.asarray(r.pool_idx)
             keep = pool_mask(lv, np.asarray(r.n_pool), pool_idx.shape[1])
-            if qstore is not None:
+            if cascade is not None:
                 keep, _ = rerank_pool(merged.vecs, xw, pool_idx,
                                       np.asarray(r.pool_dist), keep,
                                       cfg.theta, stats,
                                       dist_impl=tcfg.dist_impl,
-                                      qstore=qstore, xerr=xerr)
+                                      cascade=cascade, qc=qc)
             all_pairs.append(collect_pairs(qids + qid_offset, keep,
                                            pool_idx))
             stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())

@@ -38,11 +38,19 @@ def main(argv=None) -> int:
     ap.add_argument("--wave", type=int, default=256)
     ap.add_argument("--quant", choices=("off", "sq8", "sketch8"),
                     default=None,
-                    help="compressed storage: sq8 traverses int8 "
-                         "QuantStore codes and re-ranks survivors with "
-                         "exact f32; sketch8 adds a 1-bit Hamming-sketch "
-                         "prune tier above int8 "
+                    help="compressed storage: the FilterCascade tier "
+                         "chain joins filter through — sq8 traverses "
+                         "int8 codes and re-ranks survivors with exact "
+                         "f32; sketch8 adds a 1-bit Hamming-sketch prune "
+                         "tier above int8 "
                          "(default: the engine spec's quant mode)")
+    ap.add_argument("--quant-build", choices=("off", "sq8", "sketch8"),
+                    default=None,
+                    help="drive the offline index builds through the "
+                         "cascade too: certified bounds resolve the kNN "
+                         "sweep and RNG prune, f32 only for the ambiguous "
+                         "band — identical edges, less f32 traffic "
+                         "(default: the engine spec's quant_build mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine-spec", default="default",
                     help="EngineSpec preset "
@@ -64,20 +72,23 @@ def main(argv=None) -> int:
                       dim=args.dim, seed=args.seed)
     grid = [float(t) for t in thresholds(ds, 7)]
     theta = args.theta or grid[args.theta_q - 1]
-    # --quant wins; otherwise inherit the engine spec's mode (so
-    # --engine-spec serving_sq8 actually serves compressed)
+    # --quant / --quant-build win; otherwise inherit the engine spec's
+    # modes (so --engine-spec serving_sq8 actually serves compressed)
     quant = args.quant or ENGINE_PRESETS[args.engine_spec].quant
+    quant_build = (args.quant_build
+                   if args.quant_build is not None
+                   else ENGINE_PRESETS[args.engine_spec].quant_build)
     cfg = preset(args.method, theta=theta)
     cfg = dataclasses.replace(cfg, wave_size=args.wave, quant=quant)
 
     n_shards = 0 if args.distributed else args.shards
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
-                      n_shards=n_shards)
+                      n_shards=n_shards, quant_build=quant_build)
     if args.stream and eng.n_shards > 1:
         ap.error("--stream runs single-device; drop --shards/--distributed")
     print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
           f"dim={args.dim} θ={theta:.4f} method={args.method} "
-          f"shards={eng.n_shards} quant={quant}")
+          f"shards={eng.n_shards} quant={quant} quant_build={quant_build}")
 
     t0 = time.perf_counter()
     if args.stream:

@@ -1,20 +1,25 @@
 """Compressed vector storage with certified re-rank bounds.
 
-Two tiers, composable as a progressive-refinement cascade (sketch8 mode):
+The tiers compose as a ``FilterCascade`` (``cascade.py``) — the single
+owner of the certified-bounds pipeline every consumer escalates through
+(traversal, NLJ, serving, sharding, and the offline graph build):
 
-  * ``QuantStore`` (int8, ``store.py``) — per-dimension-group scaled int8
-    with exact per-vector errors; ``kernels/int8.py`` computes
+  * ``QuantStore`` (int8, ``store.py``) — per-dim-group scaled int8 with
+    exact per-vector errors; ``kernels/int8.py`` computes
     quantized-domain distances and ``kernels/ops.quant_lower_bound``
-    converts them into certified bounds.
+    converts them into certified bounds. Wrapped by ``Int8Tier``.
   * ``SketchStore`` (1-bit, ``sketch.py``) — packed sign bits of rotated,
     centered dims with exact per-vector order-statistics slack tables;
     ``kernels/bits.py`` computes Hamming distances and
     ``sketch.sketch_lower_bound_*`` converts them into certified bounds
-    that prune candidates before any int8 work.
+    that prune candidates before any int8 work. Wrapped by ``SketchTier``.
 
 The filter-then-rerank join pipeline filters on these bounds and re-ranks
-survivors exactly. See docs/ARCHITECTURE.md §"Quantized storage & re-rank".
+survivors exactly. See docs/ARCHITECTURE.md §"The FilterCascade".
 """
+from repro.quant.cascade import (TIERS_BY_MODE, FilterCascade, Int8Tier,
+                                 SketchTier, build_cascade,
+                                 build_tier_store, make_cascade)
 from repro.quant.sketch import (DEFAULT_N_CHECKPOINTS, SketchStore,
                                 build_sketch, sketch_lower_bound_pairwise,
                                 sketch_lower_bound_rowwise, sketch_queries)
@@ -25,12 +30,19 @@ from repro.quant.store import (DEFAULT_GROUP_SIZE, QuantStore, build_store,
 __all__ = [
     "DEFAULT_GROUP_SIZE",
     "DEFAULT_N_CHECKPOINTS",
+    "FilterCascade",
+    "Int8Tier",
     "QuantStore",
     "SketchStore",
+    "SketchTier",
+    "TIERS_BY_MODE",
+    "build_cascade",
     "build_sketch",
     "build_store",
+    "build_tier_store",
     "dequantize",
     "dim_scales",
+    "make_cascade",
     "quantize_on_grid",
     "quantize_queries",
     "sketch_lower_bound_pairwise",

@@ -1,0 +1,325 @@
+"""FilterCascade — the single owner of the certified-bounds tier pipeline.
+
+Every efficiency win in this repo reduces to one primitive: bracket each
+candidate distance with cheap certified bounds and escalate only the
+ambiguous band to the next, more expensive representation. Before this
+module the primitive was re-implemented per call-site (three NLJ loops in
+``core/join.py``, hard-coded sketch→int8 escalation in
+``traversal._probe``, parallel store caches in the engine, and an
+all-f32 offline graph build). A ``FilterCascade`` owns it in one place:
+
+    FilterCascade(tiers = (SketchTier, Int8Tier, ...))   # cheap → precise
+
+Each ``Tier`` wraps one compressed representation of the *same* vector
+table and exposes a uniform bound algebra:
+
+  * ``encode(x)``          — queries encoded on the store's grid;
+  * ``gather_bounds``      — per-candidate certified (lb, ub, nav-estimate)
+                             for the traversal's gathered-id shape;
+  * ``pairwise_bounds``    — (lb, ub) against the whole store (NLJ shape);
+  * ``pair_refine``        — (lb, ub) for explicit (query, data) id pairs
+                             (the NLJ escalation shape);
+  * ``pool_band``          — split filtered survivors into certified-sure
+                             vs ambiguous (the re-rank band).
+
+The certified chain is monotone by construction: every tier's ``lb`` is a
+true lower bound on ``‖x − y‖²`` and every ``ub`` a true upper bound, so
+``max`` of lower bounds (what escalation takes) and ``min`` of upper
+bounds only ever *tighten* — ``lb_sketch ≤ lb_int8 ≤ d ≤ ub_int8`` —
+which is what ``tests/test_cascade.py`` property-checks for every tier
+subset. Threshold tests on ``lb`` never reject a true pair; tests on
+``ub`` never admit a false one; everything between is the band the f32
+re-rank resolves. Adding a tier (int4, multi-bit sketches) means adding
+one ``Tier`` class here and an entry in ``TIERS_BY_MODE`` — traversal,
+NLJ, serving, and the offline build all pick it up unchanged; only the
+sharded path additionally needs the tier's stacked-store mirror in
+``core/distributed.py`` (``build_sharded_tier`` + ``_local_cascade``,
+which raises on names it cannot reconstruct).
+
+Consumers:
+
+  * ``core/join.cascade_join_pairs``   — the one NLJ entry point;
+  * ``core/traversal._probe``          — escalation through the tier chain;
+  * ``engine/waves.rerank_pool``       — band split + exact re-rank;
+  * ``engine.JoinEngine.cascade_for``  — per-artifact cascade cache;
+  * ``core/distributed._local_mi_join``— per-shard local cascades;
+  * ``core/graph.build_index``         — certified-bounds offline build.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.quant.sketch import (SketchStore, sketch_lower_bound_gather,
+                                sketch_lower_bound_rowwise, sketch_queries)
+from repro.quant.store import QuantStore, dim_scales, quantize_queries
+
+Array = jax.Array
+
+# Relative f32 error of the matmul-form distance epilogue
+# (xn + yn − 2·x·y): catastrophic cancellation when the norms dominate
+# the distance makes the absolute error ~ c·eps·(xn + yn). The factor 8
+# keeps an order of magnitude of headroom over worst case (established
+# empirically by the sq8 NLJ path in PR 2; shared here so the NLJ filter
+# and the offline build can never drift apart).
+MATMUL_GUARD = 8 * 1.2e-7
+
+
+def matmul_guard(xn: Array, yn: Array) -> Array:
+    """(B,) × (N,) norms → (B, N) absolute-error guard for matmul-form
+    f32 distances between those rows."""
+    return jnp.float32(MATMUL_GUARD) * (xn[:, None] + yn[None, :])
+
+
+# ---------------------------------------------------------------------------
+# per-tier query encodings
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Int8Queries:
+    """Queries quantized on an Int8Tier's scale grid."""
+    q: Array                # (B, d) int8 codes
+    norms: Array            # (B,) f32 dequantized squared norms
+    err: Array              # (B,) f32 exact per-query L2 error
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SketchQueries:
+    """Queries encoded on a SketchTier's sketch grid."""
+    codes: Array            # (B, W) uint32 packed sign bits
+    cum: Array              # (B, K) f32 exact slack tables
+
+
+# ---------------------------------------------------------------------------
+# tiers
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Int8Tier:
+    """The int8 confirming tier (QuantStore): certified lower *and* upper
+    bounds — the tier that defines the re-rank band."""
+    store: QuantStore
+
+    name = "int8"
+    build_counter = "quant"     # JoinEngine.build_counts key
+    has_upper = True
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes
+
+    def encode(self, x) -> Int8Queries:
+        q, norms, err = quantize_queries(x, self.store)
+        return Int8Queries(q=q, norms=norms, err=err)
+
+    def rows_as_queries(self, i0: int, i1: int) -> Int8Queries:
+        """Store rows themselves as queries (self-join shape: the offline
+        build bounds node↔node distances straight from the stored codes,
+        no re-encoding)."""
+        st = self.store
+        return Int8Queries(q=st.q[i0:i1], norms=st.norms[i0:i1],
+                           err=st.err[i0:i1])
+
+    def gather_bounds(self, qc: Int8Queries, cand: Array, *,
+                      impl: str | None):
+        """(B, K) candidate ids → certified (lb, ub, None).
+
+        Difference-form int8 distances (exact on the shared grid, no
+        matmul guard needed); d×1 bytes gathered per candidate."""
+        st = self.store
+        qcands = st.q[cand]                                  # (B, K, d)
+        dhat = ops.rowwise_sq_dists_int8(
+            qc.q, qcands, st.scales, group_size=st.group_size, impl=impl)
+        slack = qc.err[:, None] + st.err[cand]
+        return (ops.quant_lower_bound(dhat, slack),
+                ops.quant_upper_bound(dhat, slack), None)
+
+    def pairwise_bounds(self, qc: Int8Queries, *, impl: str | None):
+        """(B, N) certified (lb, ub) against the whole store.
+
+        The pairwise kernel uses the matmul-form epilogue, whose f32
+        cancellation error is covered by ``matmul_guard`` before the
+        triangle-inequality slack is applied — rounding can neither
+        reject a true pair nor certify a false one."""
+        st = self.store
+        dhat = ops.pairwise_sq_dists_int8(
+            qc.q, st.q, st.scales, group_size=st.group_size,
+            xn=qc.norms, yn=st.norms, impl=impl)
+        slack = qc.err[:, None] + st.err[None, :]
+        guard = matmul_guard(qc.norms, st.norms)
+        lb = ops.quant_lower_bound(jnp.maximum(dhat - guard, 0.0), slack)
+        ub = ops.quant_upper_bound(dhat + guard, slack)
+        return lb, ub
+
+    def pair_refine(self, qc: Int8Queries, qi, yi):
+        """Certified (lb, ub) for explicit (query, data) id pairs —
+        difference form, the NLJ escalation shape."""
+        st = self.store
+        sd = dim_scales(st.scales, st.dim, st.group_size)
+        dq = (qc.q[qi].astype(jnp.int32) - st.q[yi].astype(jnp.int32)
+              ).astype(jnp.float32) * sd[None, :]
+        dhat = jnp.sum(dq * dq, axis=1)
+        slack = qc.err[qi] + st.err[yi]
+        return (ops.quant_lower_bound(dhat, slack),
+                ops.quant_upper_bound(dhat, slack))
+
+    def pool_band(self, qc: Int8Queries, pool_lb: Array, pool_idx: Array,
+                  th2):
+        """Split pooled lower-bound survivors into (sure, ambiguous) —
+        the single source of the re-rank band arithmetic."""
+        s = qc.err[:, None] + self.store.err[jnp.clip(pool_idx, 0)]
+        return ops.quant_band_from_lb(pool_lb, s, th2)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SketchTier:
+    """The 1-bit pruning tier (SketchStore): certified lower bounds only
+    (a sign sketch cannot upper-bound), plus a SimHash navigation
+    estimate for candidates it prunes."""
+    store: SketchStore
+
+    name = "sketch1"
+    build_counter = "sketch"
+    has_upper = False
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes
+
+    def encode(self, x) -> SketchQueries:
+        codes, cum = sketch_queries(x, self.store)
+        return SketchQueries(codes=codes, cum=cum)
+
+    def gather_bounds(self, qc: SketchQueries, cand: Array, *,
+                      impl: str | None):
+        """(B, K) candidate ids → (lb, None, nav-estimate).
+
+        Gathers codes + two slack-table entries (d/8 + 8 bytes per
+        candidate). The estimate is the SimHash angle reconstruction
+        ``n_x + n_y − 2√(n_x n_y)·cos(πh/d)`` — *not* certified; callers
+        may use it only to order pruned candidates (whose certified
+        floor is ≥ θ²), never for threshold tests."""
+        st = self.store
+        scands = st.codes[cand]                              # (B, K, W)
+        h = ops.rowwise_hamming(qc.codes, scands, impl=impl)
+        lb, nc = sketch_lower_bound_gather(h, qc.cum, st.cum, cand,
+                                           st.hs, st.iso)
+        nq = qc.cum[:, -1][:, None]
+        cos = jnp.cos(jnp.pi * h.astype(jnp.float32) / st.dim)
+        est = nq + nc - 2.0 * jnp.sqrt(jnp.maximum(nq * nc, 0.0)) * cos
+        return lb, None, est
+
+    def pairwise_bounds(self, qc: SketchQueries, *, impl: str | None):
+        from repro.quant.sketch import sketch_lower_bound_pairwise
+        st = self.store
+        h = ops.pairwise_hamming(qc.codes, st.codes, impl=impl)
+        lb = sketch_lower_bound_pairwise(h, qc.cum, st.cum, st.hs, st.iso)
+        return lb, None
+
+    def pair_refine(self, qc: SketchQueries, qi, yi):
+        st = self.store
+        h = ops.rowwise_hamming(qc.codes[qi], st.codes[yi][:, None, :])
+        lb = sketch_lower_bound_rowwise(h, qc.cum[qi],
+                                        st.cum[yi][:, None, :],
+                                        st.hs, st.iso)[:, 0]
+        return lb, None
+
+    def pool_band(self, qc: SketchQueries, pool_lb: Array, pool_idx: Array,
+                  th2):
+        """No upper bounds ⇒ nothing is certified-sure; the whole pool is
+        the ambiguous band (a sketch-only cascade re-ranks everything)."""
+        sure = jnp.zeros(pool_lb.shape, bool)
+        return sure, ~sure
+
+
+# ---------------------------------------------------------------------------
+# the cascade
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FilterCascade:
+    """Ordered tier chain, cheapest representation first.
+
+    The last tier is the *confirming* tier — the one whose upper bounds
+    define the re-rank band (``pool_band``). A cascade whose final tier
+    has no upper bounds is still sound: its band is simply everything
+    that survived the filter."""
+    tiers: tuple
+
+    @property
+    def final(self):
+        return self.tiers[-1]
+
+    @property
+    def names(self) -> tuple:
+        return tuple(t.name for t in self.tiers)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(t.nbytes for t in self.tiers)
+
+    def encode(self, x) -> tuple:
+        """Queries encoded on every tier's grid, aligned with ``tiers``."""
+        return tuple(t.encode(x) for t in self.tiers)
+
+    def tier(self, name: str):
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        return None
+
+
+# mode string (core.types.QUANT_MODES) → ordered tier names. Adding a
+# tier/mode is a change *here* plus a Tier class above; every consumer
+# dispatches through this table.
+TIERS_BY_MODE: dict[str, tuple] = {
+    "off": (),
+    "sq8": ("int8",),
+    "sketch8": ("sketch1", "int8"),
+}
+
+_TIER_CLASSES = {Int8Tier.name: Int8Tier, SketchTier.name: SketchTier}
+
+
+def tier_class(name: str):
+    return _TIER_CLASSES[name]
+
+
+def build_tier_store(name: str, vecs, *, scale_rows=None, **kw):
+    """Build the compressed store behind one tier (the offline step)."""
+    if name == Int8Tier.name:
+        from repro.quant.store import build_store
+        return build_store(vecs, scale_rows=scale_rows, **kw)
+    if name == SketchTier.name:
+        from repro.quant.sketch import build_sketch
+        return build_sketch(vecs, scale_rows=scale_rows, **kw)
+    raise ValueError(f"unknown tier {name!r}; one of {sorted(_TIER_CLASSES)}")
+
+
+def make_cascade(named_stores) -> FilterCascade | None:
+    """Assemble a cascade from (tier_name, store) pairs (ordered)."""
+    tiers = tuple(tier_class(n)(store) for n, store in named_stores)
+    return FilterCascade(tiers=tiers) if tiers else None
+
+
+def build_cascade(vecs, mode: str, *, scale_rows=None) -> FilterCascade | None:
+    """Build every store a quant mode needs over one vector table.
+
+    The one-shot constructor (offline build, tests, benchmarks); the
+    engine assembles cascades from its per-artifact store cache instead
+    so tiers are shared across modes."""
+    names = TIERS_BY_MODE[mode]
+    return make_cascade(
+        (n, build_tier_store(n, vecs, scale_rows=scale_rows))
+        for n in names)

@@ -1,0 +1,171 @@
+"""FilterCascade contract suite.
+
+Two contracts the whole refactor rests on:
+
+  * **Golden build equivalence** — ``build_index(..., quant="sq8")``
+    (certified bounds resolve the kNN sweep and RNG prune; f32 only for
+    the ambiguous band) produces *bit-identical* neighbor lists to the
+    plain f32 build, on all four data regimes, while ``BuildStats``
+    reports a real f32-traffic reduction.
+  * **Monotone bound chain for every tier subset** — for any ordered
+    subset of a cascade's tiers, walking a pair through the chain
+    (running max of lower bounds, min of upper bounds) brackets the
+    exact f32 distance: ``lb_sketch ≤ max(lb_sketch, lb_int8) ≤ d ≤
+    ub_int8``. Hypothesis hunts violations across random dims, scale
+    regimes, and offsets; a violation means a filter could reject a true
+    pair — the failure mode the exact re-rank cannot repair.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_index, exact_knn
+from repro.core.graph import BuildStats
+from repro.data.vectors import make_dataset
+from repro.kernels import ref
+from repro.quant import (FilterCascade, Int8Tier, SketchTier, TIERS_BY_MODE,
+                         build_cascade, make_cascade, build_tier_store)
+
+import jax.numpy as jnp
+
+REGIMES = ("manifold", "weak", "clustered", "ood")
+
+
+# -- golden build equivalence -----------------------------------------------
+
+
+@pytest.mark.parametrize("regime", REGIMES)
+def test_cascade_build_bit_identical_edges(regime):
+    ds = make_dataset(regime, n_data=800, n_query=32, dim=32, seed=11)
+    g32 = build_index(ds.Y, k=20, degree=10)
+    bs = BuildStats()
+    g8 = build_index(ds.Y, k=20, degree=10, quant="sq8", build_stats=bs)
+    np.testing.assert_array_equal(np.asarray(g32.nbrs), np.asarray(g8.nbrs))
+    assert int(g32.start) == int(g8.start)
+    # the point of the cascade build: a real f32-traffic reduction, with
+    # the survivor accounting to back it
+    assert bs.f32_bytes < 0.5 * bs.f32_bytes_full, bs.as_dict()
+    assert 0 < bs.knn_exact < bs.knn_pairs
+    assert 0 <= bs.prune_exact <= bs.prune_pairs
+
+
+def test_cascade_build_merged_index_identical():
+    """The merged-index build (what the engine's quant_build drives) goes
+    through the same path — check it end-to-end once."""
+    from repro.core import build_merged_index
+    ds = make_dataset("manifold", n_data=700, n_query=48, dim=32, seed=3)
+    m32 = build_merged_index(ds.Y, ds.X, k=20, degree=10)
+    m8 = build_merged_index(ds.Y, ds.X, k=20, degree=10, quant="sq8")
+    np.testing.assert_array_equal(np.asarray(m32.nbrs), np.asarray(m8.nbrs))
+
+
+def test_cascade_knn_identical_lists():
+    ds = make_dataset("clustered", n_data=600, n_query=16, dim=24, seed=5)
+    d32, i32 = exact_knn(jnp.asarray(ds.Y), 12)
+    casc = build_cascade(ds.Y, "sq8")
+    bs = BuildStats()
+    d8, i8 = exact_knn(jnp.asarray(ds.Y), 12, cascade=casc, stats=bs)
+    np.testing.assert_array_equal(i32, i8)
+    # distances agree up to kernel-form rounding (matmul vs difference)
+    np.testing.assert_allclose(d32, d8, rtol=1e-4, atol=1e-4)
+    assert bs.knn_exact < bs.knn_pairs
+
+
+def test_build_stats_off_mode_untouched():
+    """quant=None / "off" must not touch the stats or build a cascade."""
+    ds = make_dataset("manifold", n_data=300, n_query=8, dim=16, seed=1)
+    bs = BuildStats()
+    build_index(ds.Y, k=10, degree=6, quant="off", build_stats=bs)
+    assert bs.f32_bytes_full == 0 and bs.knn_pairs == 0
+    assert bs.f32_saved_frac == 0.0
+
+
+# -- tier subset bound chain (hypothesis) -----------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYP = False
+
+_SUBSETS = [("int8",), ("sketch1",), ("sketch1", "int8")]
+
+
+def _tol(d, scale):
+    return 1e-3 * max(d, 1) * scale ** 2
+
+
+if _HAVE_HYP:
+
+    @settings(max_examples=20, deadline=None)
+    @given(d=st.integers(2, 70), scale=st.sampled_from([0.05, 1.0, 30.0]),
+           offset=st.sampled_from([0.0, 50.0]),
+           seed=st.integers(0, 2**31 - 1),
+           subset=st.sampled_from(_SUBSETS))
+    def test_tier_subset_preserves_monotone_chain(d, scale, offset, seed,
+                                                  subset):
+        """For any ordered tier subset: each prefix's running-max lower
+        bound stays ≤ the exact distance, the running max is monotone in
+        the prefix, and the confirming tier's upper bound stays ≥ it."""
+        rng = np.random.default_rng(seed)
+        N, B = 48, 8
+        Y = (rng.normal(size=(N, d)) * scale + offset).astype(np.float32)
+        X = (rng.normal(size=(B, d)) * scale + offset).astype(np.float32)
+        casc = make_cascade((n, build_tier_store(n, Y)) for n in subset)
+        true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X),
+                                                jnp.asarray(Y)))
+        tol = _tol(d, scale + offset)
+        qcs = casc.encode(jnp.asarray(X))
+        running_lb = np.zeros((B, N), np.float32)
+        for tier, qc in zip(casc.tiers, qcs):
+            lb, ub = tier.pairwise_bounds(qc, impl="ref")
+            lb = np.asarray(lb)
+            new_lb = np.maximum(running_lb, lb)
+            # monotone: escalation can only tighten
+            assert (new_lb >= running_lb - 1e-6).all()
+            running_lb = new_lb
+            # certified: never above the exact distance
+            assert (running_lb <= true + tol).all(), subset
+            if ub is not None:
+                assert (np.asarray(ub) >= true - tol).all(), subset
+        # the pair-refine (NLJ escalation) shape agrees with pairwise
+        qi = rng.integers(0, B, size=16)
+        yi = rng.integers(0, N, size=16)
+        for tier, qc in zip(casc.tiers, qcs):
+            plb, pub = tier.pair_refine(qc, qi, yi)
+            assert (np.asarray(plb) <= true[qi, yi] + tol).all()
+            if pub is not None:
+                assert (np.asarray(pub) >= true[qi, yi] - tol).all()
+
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_tier_subset_preserves_monotone_chain():
+        pass
+
+
+def test_cascade_mode_table_consistent():
+    """Every mode's tier chain assembles, encodes, and reports names in
+    order — the one-file extension point stays wired."""
+    rng = np.random.default_rng(9)
+    Y = rng.normal(size=(32, 16)).astype(np.float32)
+    for mode, names in TIERS_BY_MODE.items():
+        casc = build_cascade(Y, mode)
+        if not names:
+            assert casc is None
+            continue
+        assert casc.names == names
+        assert casc.final is casc.tiers[-1]
+        assert casc.nbytes > 0
+        qcs = casc.encode(jnp.asarray(Y[:4]))
+        assert len(qcs) == len(casc.tiers)
+
+
+def test_cascade_direct_assembly():
+    """Cascades assemble from prebuilt stores too (the test/bench path)."""
+    rng = np.random.default_rng(0)
+    Y = rng.normal(size=(64, 24)).astype(np.float32)
+    from repro.quant import build_sketch, build_store
+    casc = FilterCascade(tiers=(SketchTier(build_sketch(Y)),
+                                Int8Tier(build_store(Y))))
+    assert casc.names == ("sketch1", "int8")
+    assert casc.tier("int8") is casc.final
+    assert casc.tier("nope") is None

@@ -8,11 +8,12 @@ import numpy as np
 import pytest
 
 from repro.core import JoinConfig, TraversalConfig, exact_join_pairs
-from repro.core.join import quant_join_pairs
+from repro.core.join import cascade_join_pairs
 from repro.data.vectors import make_dataset, thresholds
 from repro.engine import JoinEngine
 from repro.kernels import ops, ref
-from repro.quant import build_store, dequantize, quantize_queries
+from repro.quant import (FilterCascade, Int8Tier, build_store, dequantize,
+                         quantize_queries)
 
 TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
                      hybrid_beam=64, seeds_max=8, max_iters=2048)
@@ -70,16 +71,17 @@ def test_bounds_bracket_true_distance(ds_manifold, store):
 # -- exact NLJ through the filter -------------------------------------------
 
 
-def test_quant_join_pairs_equals_exact(ds_manifold, store, theta_mid,
-                                       truth_mid):
-    pairs, n_rerank = quant_join_pairs(ds_manifold.X, ds_manifold.Y,
-                                       theta_mid, store)
+def test_cascade_join_pairs_int8_equals_exact(ds_manifold, store, theta_mid,
+                                              truth_mid):
+    casc = FilterCascade(tiers=(Int8Tier(store),))
+    pairs, counts = cascade_join_pairs(ds_manifold.X, ds_manifold.Y,
+                                       theta_mid, casc)
     got = set(map(tuple, pairs.tolist()))
     want = set(map(tuple, truth_mid.tolist()))
     assert got == want
     # only the ambiguous band needs f32: far fewer re-ranks than |X|·|Y|,
     # and typically far fewer than the join size itself
-    assert 0 <= n_rerank < ds_manifold.X.shape[0] * \
+    assert 0 <= counts["n_rerank"] < ds_manifold.X.shape[0] * \
         ds_manifold.Y.shape[0] // 4
 
 

@@ -15,10 +15,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.common import dist_bytes  # noqa: E402
 
 from repro.core import JoinConfig, TraversalConfig, exact_join_pairs
-from repro.core.join import sketch_join_pairs
+from repro.core.join import cascade_join_pairs
 from repro.data.vectors import make_dataset, thresholds
 from repro.engine import JoinEngine
-from repro.quant import build_sketch, build_store
+from repro.quant import (FilterCascade, Int8Tier, SketchTier, build_sketch,
+                         build_store)
 
 TC = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
                      hybrid_beam=64, seeds_max=8, max_iters=2048)
@@ -67,18 +68,20 @@ def test_sketch_rotation_certified(sketch):
 # -- exact NLJ through the cascade ------------------------------------------
 
 
-def test_sketch_join_pairs_equals_exact(ds_manifold, sketch, theta_mid,
-                                        truth_mid):
+def test_cascade_join_pairs_sketch8_equals_exact(ds_manifold, sketch,
+                                                 theta_mid, truth_mid):
     store = build_store(ds_manifold.Y, group_size=16)
-    pairs, n_esc, n_rerank = sketch_join_pairs(
-        ds_manifold.X, ds_manifold.Y, theta_mid, sketch, store)
+    casc = FilterCascade(tiers=(SketchTier(sketch), Int8Tier(store)))
+    pairs, counts = cascade_join_pairs(
+        ds_manifold.X, ds_manifold.Y, theta_mid, casc)
     assert set(map(tuple, pairs.tolist())) == set(
         map(tuple, truth_mid.tolist()))
     total = ds_manifold.X.shape[0] * ds_manifold.Y.shape[0]
     # the sketch tier must prune a nontrivial share before any int8 work,
     # and the f32 band must stay a small fraction of the int8 survivors
+    n_esc, = counts["escalated"]
     assert 0 < n_esc < total
-    assert 0 <= n_rerank <= n_esc
+    assert 0 <= counts["n_rerank"] <= n_esc
 
 
 def test_engine_nlj_sketch8_equals_exact(ds_manifold, engine, theta_mid,
