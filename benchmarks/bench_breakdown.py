@@ -31,7 +31,12 @@ def run(scale: str = "ci", *, regime: str = "manifold",
     for ti in theta_idxs:
         theta = grid[ti - 1]
         for method in METHODS:
-            res, dt, rec = run_method(regime, method, theta, scale=scale)
+            # per-phase timing needs the sequential path: the pipelined
+            # loop never blocks between greedy and expand, so their split
+            # is unobservable there (bench_overall reports the pipelined
+            # wall-clock instead)
+            res, dt, rec = run_method(regime, method, theta, scale=scale,
+                                      overlap=False)
             s = res.stats
             rows.append(dict(
                 dataset=regime, theta_idx=ti, method=method,
@@ -55,7 +60,8 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
             base_bytes = None
             for quant in modes:
                 res, dt, rec = run_method(regime, method, theta,
-                                          scale=scale, quant=quant)
+                                          scale=scale, quant=quant,
+                                          overlap=False)
                 s = res.stats
                 nbytes = dist_bytes(res, dim, quant)
                 if quant == "off":

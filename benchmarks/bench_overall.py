@@ -6,8 +6,20 @@ online-memory metric; the index itself is offline, Fig. 13). Each row
 carries the compressed-storage mode (``quant``) plus the distance-kernel
 bytes moved per emitted pair, so an f32-vs-int8 sweep is
 ``run(quant_modes=("off", "sq8"))``.
+
+``run_overlap`` is the wave-pipeline breakdown: the MI-join methods run
+once with the double-buffered traversal⇆assembly overlap and once with
+the sequential reference path, asserting the pair sets are identical and
+reporting wall-clock plus the band-compacted re-rank's f32 gather bytes
+per pair. ``--json PATH`` writes both tables as a JSON artifact
+(``BENCH_overall.json``) — CI runs the ``--overlap-only`` form as a smoke
+step and uploads it so the serving-path perf trajectory is recorded per
+commit alongside ``BENCH_offline.json``.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 from benchmarks.common import (REGIMES, SCALES, dist_bytes, emit,
                                run_method, theta_grid)
@@ -40,8 +52,69 @@ def run(scale: str = "ci", *, regimes=REGIMES, theta_idxs=(1, 3, 5, 7),
     return rows
 
 
-def main(scale: str = "ci") -> None:
-    emit(run(scale))
+def run_overlap(scale: str = "ci", *, regime: str = "manifold",
+                theta_idx: int = 2,
+                methods=("es_mi", "es_mi_adapt"),
+                quant: str = "sq8") -> list[dict]:
+    """MI-join wave-pipeline breakdown: overlap-on vs overlap-off
+    wall-clock on identical configs, plus re-rank gather traffic.
+
+    Each method cell runs both paths against the same cached indexes and
+    asserts the emitted pair sets match bit-for-bit (``pairs_match``) —
+    the pipeline is a pure scheduling change. ``rerank_bytes_per_pair``
+    is the f32 traffic the band-compacted gather dispatched
+    (``n_rerank_gather`` rows × d × 4B) amortized over emitted pairs:
+    with compaction it tracks band occupancy, not pool capacity.
+    """
+    dim = SCALES[scale]["dim"]
+    theta = theta_grid(regime, scale)[theta_idx - 1]
+    rows = []
+    for method in methods:
+        cells = {}
+        for overlap in (True, False):
+            res, dt, rec = run_method(regime, method, theta, scale=scale,
+                                      quant=quant, overlap=overlap)
+            cells[overlap] = (res, dt, rec)
+        res_on, dt_on, rec_on = cells[True]
+        res_off, dt_off, _ = cells[False]
+        match = res_on.pair_set() == res_off.pair_set()
+        npairs = max(len(res_on.pairs), 1)
+        rows.append(dict(
+            dataset=regime, theta_idx=theta_idx, theta=theta,
+            method=method, quant=quant,
+            overlap_on_s=dt_on, overlap_off_s=dt_off,
+            speedup=dt_off / max(dt_on, 1e-9),
+            pairs=len(res_on.pairs), pairs_match=match,
+            recall=rec_on, n_rerank=res_on.stats.n_rerank,
+            rerank_gather=res_on.stats.n_rerank_gather,
+            rerank_bytes_per_pair=(res_on.stats.n_rerank_gather * dim * 4
+                                   / npairs),
+            wait_s=res_on.stats.wait_seconds))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", default="ci")
+    ap.add_argument("--regimes", nargs="*", default=list(REGIMES))
+    ap.add_argument("--overlap-only", action="store_true",
+                    help="run only the wave-pipeline breakdown (the CI "
+                         "smoke configuration)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + metadata as a JSON artifact "
+                         "(e.g. BENCH_overall.json for the CI upload)")
+    args = ap.parse_args(argv)
+    rows = ([] if args.overlap_only
+            else run(args.scale, regimes=tuple(args.regimes)))
+    overlap_rows = run_overlap(args.scale, regime=args.regimes[0])
+    emit(rows)
+    emit(overlap_rows)
+    if args.json:
+        payload = dict(bench="overall", scale=args.scale, rows=rows,
+                       overlap=overlap_rows)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -81,13 +81,15 @@ _WARMED: set = set()
 
 def run_method(regime: str, method: str, theta: float, *, scale: str = "ci",
                tcfg: TraversalConfig | None = None, wave: int = 128,
-               style: str = "nsg", quant: str = "off"
+               style: str = "nsg", quant: str = "off",
+               overlap: bool = True
                ) -> tuple[JoinResult, float, float]:
     """(result, seconds, recall) for one (dataset, method, θ) cell."""
     ds = dataset(regime, scale)
     eng = engine(regime, scale, style=style)
     cfg = JoinConfig(method=method, theta=theta, wave_size=wave,
-                     traversal=tcfg or TraversalConfig(), quant=quant)
+                     traversal=tcfg or TraversalConfig(), quant=quant,
+                     overlap=overlap)
     # warm the jit caches (keyed on wave shape + traversal config) with a
     # query subset so reported latency is compile-free, like the paper's
     # steady-state measurements. The warm-up runs through a *transient*

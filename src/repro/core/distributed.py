@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat, traversal
 from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
-from repro.kernels import ref as kref
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -254,7 +254,8 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                    xw, qids, lane_valid, *,
                    theta: float, cfg: TraversalConfig, shard_size: int,
                    hybrid: bool, axis: str, group_size: int,
-                   tier_names: tuple, n_shards: int, pad: int):
+                   tier_names: tuple, n_shards: int, pad: int,
+                   rerank_cap: int):
     """Per-shard MI join body (runs under shard_map; all-local compute).
 
     With ``tier_names`` the shard reconstructs its *local*
@@ -264,6 +265,14 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     distances before returning — the same escalation code path as the
     single-device engine, so the merged host-side result is identical to
     the f32 path. Escalation counts return per shard.
+
+    The in-shard re-rank is *sparse*: the ambiguous band is stably
+    compacted into ``rerank_cap`` slots (``ops.band_compact``) and only
+    those rows are gathered from the f32 table — per-shard re-rank
+    traffic scales with the shard's band occupancy, not its pool
+    capacity. Band entries beyond the capacity are left un-re-ranked and
+    reported in the overflow output; the host driver retries the wave at
+    a larger capacity, so emitted pairs never depend on the cap.
     """
     vecs, nbrs, mnd = vecs[0], nbrs[0], mnd[0]
     index = GraphIndex(vecs=vecs, nbrs=nbrs, start=start[0],
@@ -308,43 +317,47 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     C = r.pool_idx.shape[1]
     keep = jnp.arange(C)[None, :] < r.n_pool[:, None]
     n_rerank = jnp.zeros((B,), jnp.int32)
+    n_band_over = jnp.zeros((B,), jnp.int32)
     if cascade is not None:
-        # in-shard filter-then-rerank, mirroring waves.rerank_pool: the
-        # confirming tier splits the pool (pool_band); certified-sure
-        # entries are emitted free, only the ambiguous band is
-        # re-computed exactly. The gather is fixed-shape, but collapsing
-        # non-band ids to row 0 keeps the unique-row traffic
-        # proportional to the band.
+        # in-shard filter-then-rerank, mirroring waves._finalize_wave:
+        # the confirming tier splits the pool (pool_band); certified-sure
+        # entries are emitted free, and the ambiguous band is stably
+        # compacted into rerank_cap slots before the exact gather — the
+        # f32 rows fetched per shard scale with the band, not with C.
         th2 = jnp.float32(theta) ** 2
-        qc_final = qc[-1]
-        sure, amb = cascade.final.pool_band(qc_final, r.pool_dist,
-                                            r.pool_idx, th2)
+        sure, amb = cascade.pool_band(qc, r.pool_dist, r.pool_idx, th2)
         sure = keep & sure
         amb = keep & amb
         n_rerank = jnp.sum(amb, axis=1).astype(jnp.int32)
-        cvec = vecs[jnp.where(amb, r.pool_idx, 0)]
-        exact = kref.rowwise_sq_dists(xw, cvec)
-        keep = sure | (amb & (exact < th2))
+        cap = min(rerank_cap, C) if rerank_cap > 0 else C
+        exact, within, _ = ops.compact_gather_sq_dists(
+            vecs, xw, r.pool_idx, amb, cap, impl=cfg.dist_impl)
+        keep = sure | (within & (exact < th2))
+        n_band_over = jnp.sum(amb & ~within, axis=1).astype(jnp.int32)
     # globalize result ids
     gids = jnp.where(r.pool_idx != NO_NODE,
                      r.pool_idx + rank * shard_size, NO_NODE)
     return (gids[None], r.pool_dist[None], keep[None], r.overflow[None],
-            r.n_dist[None], n_rerank[None], r.n_esc[None])
+            r.n_dist[None], n_rerank[None], r.n_esc[None],
+            n_band_over[None])
 
 
 def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                              *, theta: float, cfg: TraversalConfig,
                              hybrid: bool = False,
                              cascade: ShardedCascade | None = None,
-                             n_data: int | None = None):
+                             n_data: int | None = None,
+                             rerank_cap: int | None = None):
     """Build the pjit'd per-wave distributed join step.
 
     shard_axes: mesh axis name (or tuple of names) the index is sharded
     over — e.g. ``("pod", "data")`` on the production mesh. ``cascade``
     switches each shard onto its local tier chain (certified-bounds
-    filter + in-shard re-rank — the same ``FilterCascade`` escalation as
-    the single-device engine, reconstructed per shard); ``n_data`` (the
-    unpadded |Y|) lets the body hide sentinel pad rows.
+    filter + band-compacted in-shard re-rank — the same ``FilterCascade``
+    escalation as the single-device engine, reconstructed per shard);
+    ``n_data`` (the unpadded |Y|) lets the body hide sentinel pad rows.
+    ``rerank_cap`` overrides ``cfg.rerank_cap`` (the driver's overflow
+    retry rebuilds the step at a larger capacity).
 
     Returns ``(step, qargs)``: ``step`` takes the tier-store arrays as
     its trailing runtime arguments (tiny placeholders when off) so
@@ -372,7 +385,8 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
         hybrid=hybrid, axis=flat,
         group_size=qstore.group_size if quant else 0, tier_names=names,
-        n_shards=smi.n_shards, pad=pad)
+        n_shards=smi.n_shards, pad=pad,
+        rerank_cap=cfg.rerank_cap if rerank_cap is None else rerank_cap)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
@@ -381,7 +395,7 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                   spec_idx, spec_idx, spec_idx, P(), P(), P(),
                   P(), P(), P()),
         out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
-                   spec_idx, spec_idx),
+                   spec_idx, spec_idx, spec_idx),
         check_vma=False)
 
     S = smi.n_shards
@@ -419,26 +433,66 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
                         *, theta: float, cfg: TraversalConfig,
                         wave_size: int = 256, hybrid: bool = False,
                         cascade: ShardedCascade | None = None,
-                        n_data: int | None = None):
-    """Host driver: waves of queries against all shards; assemble pairs."""
+                        n_data: int | None = None, overlap: bool = True):
+    """Host driver: waves of queries against all shards; assemble pairs.
+
+    Pipelined like the single-device wave loop: shard waves are mutually
+    independent, so wave *k+1* is dispatched before wave *k*'s per-shard
+    pools are transferred and merged on the host — the host-side pair
+    assembly runs in the shadow of the devices. ``overlap=False``
+    serializes the same steps (the bisection escape hatch).
+
+    With a ``cascade`` the in-shard re-rank is band-compacted; a wave
+    whose band overflows the capacity on any shard is retried through a
+    step built at the next power-of-two capacity (sticky for the rest of
+    the call), so the merged pair set never depends on the capacity.
+    """
     X = jnp.asarray(X)
     nq = X.shape[0]
-    step, qargs = make_distributed_mi_join(
-        mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
-        cascade=cascade, n_data=n_data)
+    C = cfg.pool_cap
+    cap0 = (min(ops.next_pow2(cfg.rerank_cap), C)
+            if cfg.rerank_cap > 0 else C)
+    steps: dict[int, tuple] = {}
+
+    def get_step(cap: int):
+        if cap not in steps:
+            steps[cap] = make_distributed_mi_join(
+                mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
+                cascade=cascade, n_data=n_data, rerank_cap=cap)
+        return steps[cap]
+
+    cur_cap = cap0 if cascade is not None else C
     pairs_out = []
-    stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0)
-    for q0 in range(0, nq, wave_size):
-        ids = np.arange(q0, min(q0 + wave_size, nq))
-        padded = np.zeros(wave_size, np.int32)
-        padded[:ids.size] = ids
-        lane_valid = np.zeros(wave_size, bool)
-        lane_valid[:ids.size] = True
+    stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0,
+                 n_rerank_gather=0,
+                 band_per_shard=np.zeros(smi.n_shards, np.int64))
+
+    def dispatch(padded, lane_valid, cap: int):
+        step, qargs = get_step(cap)
         with compat.set_mesh(mesh):
-            gids, gdist, keep, overflow, n_dist, n_rerank, n_esc = step(
+            outs = step(
                 smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
                 jnp.asarray(lane_valid))
+        if cascade is not None:
+            stats["n_rerank_gather"] += (smi.n_shards
+                                         * int(lane_valid.shape[0]) * cap)
+        return outs
+
+    def assemble(wave) -> None:
+        nonlocal cur_cap
+        padded, lane_valid, outs = wave
+        (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
+         n_band_over) = outs
+        over = np.asarray(n_band_over)[:, lane_valid]
+        if over.sum() > 0:
+            # a shard's band outgrew the compaction capacity: re-rank
+            # this wave at a capacity covering the worst shard band and
+            # keep the larger step for the rest of the call
+            needed = int(np.asarray(n_rerank)[:, lane_valid].max())
+            cur_cap = ops.grow_cap(cur_cap, needed, C)
+            (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
+             n_band_over) = dispatch(padded, lane_valid, cur_cap)
         gids = np.asarray(gids)          # (S, B, C)
         # (S, B, C) kept pool slots, restricted to real lanes
         mask = np.asarray(keep) & lane_valid[None, :, None]
@@ -448,6 +502,25 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
         stats["n_rerank"] += int(np.asarray(n_rerank)[:, lane_valid].sum())
         stats["n_esc8"] += int(np.asarray(n_esc)[:, lane_valid].sum())
+        stats["band_per_shard"] += np.asarray(n_rerank)[:, lane_valid].sum(
+            axis=1).astype(np.int64)
+
+    pending = None
+    for q0 in range(0, nq, wave_size):
+        ids = np.arange(q0, min(q0 + wave_size, nq))
+        padded = np.zeros(wave_size, np.int32)
+        padded[:ids.size] = ids
+        lane_valid = np.zeros(wave_size, bool)
+        lane_valid[:ids.size] = True
+        outs = dispatch(padded, lane_valid, cur_cap)
+        if overlap:
+            if pending is not None:
+                assemble(pending)
+            pending = (padded, lane_valid, outs)
+        else:
+            assemble((padded, lane_valid, outs))
+    if pending is not None:
+        assemble(pending)
     pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
              else np.empty((0, 2), np.int64)).astype(np.int64)
     return pairs, stats

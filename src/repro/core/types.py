@@ -68,6 +68,16 @@ class TraversalConfig:
                        disables, exact f32 is unaffected either way).
     seeds_max        — max seeds probed per query (caps HWS parent caches).
     max_iters        — hard bound on loop iterations (safety net).
+    rerank_cap       — initial capacity of the band-compacted exact
+                       re-rank (quantized modes): pooled ambiguous-band
+                       entries are stably compacted device-side into this
+                       many slots before the f32 gather kernel runs, so
+                       re-rank traffic scales with band occupancy instead
+                       of ``pool_cap``. Waves whose band overflows the
+                       capacity are transparently re-ranked at the next
+                       power-of-two capacity (sticky per runner) — the
+                       emitted pair set never depends on the cap. ≤ 0
+                       disables compaction (full ``pool_cap`` width).
     """
     beam_width: int = 256
     expand_per_iter: int = 4
@@ -78,6 +88,7 @@ class TraversalConfig:
     hybrid_guard: float = 4.0
     seeds_max: int = 16
     max_iters: int = 4096
+    rerank_cap: int = 128
     dist_impl: str | None = None   # kernels.ops impl override
 
 
@@ -104,6 +115,13 @@ class JoinConfig:
     wave_size: int = 256           # queries processed per batched wave
     ood_factor: float = 1.5        # paper §4.5 d1 > 1.5 * d2
     quant: str = "off"             # compressed-storage mode (QUANT_MODES)
+    # Two-stage wave pipeline: while the device traverses wave k+1, the
+    # host assembles wave k's pairs and work-sharing cache (the next wave
+    # is launched from a small seed-feedback transfer alone). Off ⇒ the
+    # fully sequential loop; pair sets and cache contents are identical
+    # either way. The REPRO_OVERLAP env var overrides this at run time
+    # (CI bisection escape hatch).
+    overlap: bool = True
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -131,10 +149,22 @@ class JoinStats:
     #                                counts sketch-tier probes; the sketch
     #                                pruned n_dist - n_esc8 before any int8
     #                                work)
+    wait_seconds: float = 0.0      # pipelined runs: host blocked on the
+    #                                device (seed-feedback fetch); the
+    #                                sequential path reports its device
+    #                                time under greedy/expand instead
+    n_rerank_gather: int = 0       # f32 rows dispatched to the re-rank
+    #                                gather kernel — with band compaction
+    #                                this is lanes × capacity (sized to
+    #                                band occupancy), not lanes × pool_cap
+    band_occ_per_shard: tuple = () # sharded path: ambiguous-band entries
+    #                                re-ranked per shard (aligned with
+    #                                shard ids; sums to n_rerank)
 
     @property
     def total_seconds(self) -> float:
-        return self.greedy_seconds + self.expand_seconds + self.other_seconds
+        return (self.greedy_seconds + self.expand_seconds
+                + self.other_seconds + self.wait_seconds)
 
     def as_dict(self) -> dict[str, Any]:
         return dict(dataclasses.asdict(self), total_seconds=self.total_seconds)

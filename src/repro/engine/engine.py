@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from collections import OrderedDict
+from collections import ChainMap, OrderedDict
 from typing import Any
 
 import jax
@@ -442,12 +442,15 @@ class JoinEngine:
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
             wave_size=cfg.wave_size, hybrid=hybrid, cascade=casc,
-            n_data=int(self.Y.shape[0]))
+            n_data=int(self.Y.shape[0]), overlap=W.overlap_enabled(cfg))
         stats.expand_seconds += time.perf_counter() - t0
         stats.n_dist += int(dstats["n_dist"])
         stats.n_overflow += int(dstats["n_overflow"])
         stats.n_rerank += int(dstats.get("n_rerank", 0))
         stats.n_esc8 += int(dstats.get("n_esc8", 0))
+        stats.n_rerank_gather += int(dstats.get("n_rerank_gather", 0))
+        stats.band_occ_per_shard = tuple(
+            int(b) for b in dstats.get("band_per_shard", ()))
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
         pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
         return JoinResult(pairs=pairs, stats=stats)
@@ -528,6 +531,12 @@ class JoinEngine:
 
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
                        stats: JoinStats, offset: int) -> JoinResult:
+        """Streaming search-path waves, double-buffered like
+        ``waves.run_search_join``: wave *k+1* is dispatched from wave
+        *k*'s seed feedback (the carry window needs only the wave's
+        query codes, which exist before traversal), while the host
+        assembles wave *k*'s pairs and work-sharing cache in the shadow
+        of the device. ``overlap`` off serializes the same primitives."""
         iy = self.index_y()
         casc = self.cascade_for(("index_y",), iy.vecs, cfg, stats)
         int8 = casc.tier("int8") if casc is not None else None
@@ -537,6 +546,34 @@ class JoinEngine:
         X_np = np.asarray(X_batch, np.float32)
         caching = cfg.method in _CACHING_METHODS
         all_pairs: list[np.ndarray] = []
+        ov = W.overlap_enabled(cfg)
+        capctl = W.RerankCap(W.effective_tcfg(cfg))
+        # seed overlay: feedback entries of the wave whose full cache
+        # update is still pending (equal to the first S ids that
+        # update_sws_cache will write for the same queries)
+        overlay: dict[int, np.ndarray] = {}
+        seed_cache = ChainMap(overlay, self._stream_cache)
+        pending: W.WaveHandles | None = None
+
+        def drain(h: W.WaveHandles) -> None:
+            out = W.assemble_wave(h, stats)
+            all_pairs.append(out.pairs)
+            if caching:
+                t1 = time.perf_counter()
+                self._stream_entry_n = W.update_sws_cache(
+                    self._stream_cache, out, h.qids, cfg, stats,
+                    self._stream_entry_n)
+                for q in h.qids[h.lane_valid]:
+                    overlay.pop(int(q), None)
+                # donors evicted from the carry before their cache entry
+                # landed (carry_window < wave_size): drop the entry now
+                # that update_sws_cache wrote it, as the sequential
+                # update-then-evict order would have
+                for q in h.tombstones:
+                    gone = self._stream_cache.pop(int(q), None)
+                    if gone is not None:
+                        self._stream_entry_n -= len(gone)
+                stats.other_seconds += time.perf_counter() - t1
 
         for c0 in range(0, nb, cfg.wave_size):
             local = np.arange(c0, min(c0 + cfg.wave_size, nb))
@@ -553,28 +590,44 @@ class JoinEngine:
             parent = self._assign_parents(X_np[qids_l], qc8, int8, qids_g,
                                           lane_valid, caching)
             seeds, seeds_valid = W.seeds_from_cache(
-                qids_g, lane_valid, parent, self._stream_cache, sy,
+                qids_g, lane_valid, parent, seed_cache, sy,
                 cfg.wave_size, S)
             stats.other_seconds += time.perf_counter() - t0
 
-            out = W.run_search_wave(iy, xw, qids_g, lane_valid, cfg, stats,
-                                    seeds=seeds, seeds_valid=seeds_valid,
-                                    cascade=casc, qc=qc)
-            all_pairs.append(out.pairs)
-
+            h = W.launch_search_wave(iy, xw, qids_g, lane_valid, cfg,
+                                     stats, seeds=seeds,
+                                     seeds_valid=seeds_valid, cascade=casc,
+                                     qc=qc, capctl=capctl, sync=not ov,
+                                     collect_seeds=caching and ov)
+            if ov and pending is not None:
+                drain(pending)
+                pending = None
             if caching:
+                if ov:
+                    overlay.update(W.fetch_feedback(h, stats))
+                # append this wave's donors to the carry window *before*
+                # the next wave assigns parents — codes only, no
+                # traversal dependency. Eviction may name queries whose
+                # cache entry is still pending; those become tombstones
+                # resolved at drain time.
                 t0 = time.perf_counter()
-                self._stream_entry_n = W.update_sws_cache(
-                    self._stream_cache, out, qids_g, cfg, stats,
-                    self._stream_entry_n)
                 lv = lane_valid
                 if qc8 is not None:
-                    self._remember(None, qids_g[lv],
-                                   codes=np.asarray(qc8.q)[lv],
-                                   norms=np.asarray(qc8.norms)[lv])
+                    missed = self._remember(None, qids_g[lv],
+                                            codes=np.asarray(qc8.q)[lv],
+                                            norms=np.asarray(qc8.norms)[lv])
                 else:
-                    self._remember(X_np[qids_l[lv]], qids_g[lv])
+                    missed = self._remember(X_np[qids_l[lv]], qids_g[lv])
+                for q in missed:
+                    overlay.pop(int(q), None)
+                h.tombstones.extend(missed)
                 stats.other_seconds += time.perf_counter() - t0
+            if ov:
+                pending = h
+            else:
+                drain(h)
+        if pending is not None:
+            drain(pending)
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
@@ -614,11 +667,27 @@ class JoinEngine:
 
     def _remember(self, vecs: np.ndarray | None, qids: np.ndarray, *,
                   codes: np.ndarray | None = None,
-                  norms: np.ndarray | None = None) -> None:
+                  norms: np.ndarray | None = None) -> list[int]:
+        """Append donors to the carry window, evicting beyond capacity.
+
+        Returns the evicted qids whose work-sharing cache entry did not
+        exist yet (the pipelined path appends donors before the wave's
+        cache update lands; the caller turns these into tombstones that
+        drop the entry once it is written)."""
         def _append(cur, new):
             if new is None:
                 return cur
             return new.copy() if cur is None else np.concatenate([cur, new])
+
+        missed: list[int] = []
+
+        def _evict(qs) -> None:
+            for q in qs:
+                gone = self._stream_cache.pop(int(q), None)
+                if gone is not None:
+                    self._stream_entry_n -= len(gone)
+                else:
+                    missed.append(int(q))
 
         # a mode switch mid-stream changes the carry representation
         # (f32 vecs ↔ int8 codes); old donors can't be compared against
@@ -627,10 +696,7 @@ class JoinEngine:
         # exactly like the normal eviction path below
         if (codes is not None) != (self._carry_codes is not None) \
                 and len(self._carry_qids):
-            for q in self._carry_qids:
-                gone = self._stream_cache.pop(int(q), None)
-                if gone is not None:
-                    self._stream_entry_n -= len(gone)
+            _evict(self._carry_qids)
             self._carry_vecs = self._carry_codes = self._carry_norms = None
             self._carry_qids = np.empty(0, np.int64)
         self._carry_vecs = _append(self._carry_vecs, vecs)
@@ -640,16 +706,13 @@ class JoinEngine:
             [self._carry_qids, qids.astype(np.int64)])
         if len(self._carry_qids) > self.carry_window:
             keep = len(self._carry_qids) - self.carry_window
-            evicted = self._carry_qids[:keep]
-            for q in evicted:
-                gone = self._stream_cache.pop(int(q), None)
-                if gone is not None:
-                    self._stream_entry_n -= len(gone)
+            _evict(self._carry_qids[:keep])
             for attr in ("_carry_vecs", "_carry_codes", "_carry_norms"):
                 cur = getattr(self, attr)
                 if cur is not None:
                     setattr(self, attr, cur[keep:])
             self._carry_qids = self._carry_qids[keep:]
+        return missed
 
     # -- bookkeeping --------------------------------------------------------
 

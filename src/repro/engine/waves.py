@@ -5,21 +5,51 @@ work-sharing methods (parents always complete before children), arbitrary
 chunks otherwise. Lanes beyond a short final wave are padded with invalid
 seeds and masked throughout.
 
+Since PR 5 the wave loop is a **two-stage software pipeline** (HARMONY's
+overlapped-serving lever, arXiv:2506.14707). Each wave is split into
+
+  * a *device phase* — greedy search, range expansion, and the
+    band-compacted exact re-rank, dispatched asynchronously
+    (``launch_search_wave`` / ``launch_mi_wave``); and
+  * a *host phase* — the bulky pool transfer, pair assembly, and
+    work-sharing cache update (``assemble_wave``).
+
+The MST parent order makes wave *k+1* depend on wave *k*, but **only**
+through the per-lane seed entries (the top-``seeds_max`` kept pool slots
+for HWS, the single best node for SWS): those are computed device-side
+and fetched as a small *seed-feedback* transfer (``fetch_feedback``), so
+wave *k+1*'s traversal can be dispatched immediately while the host
+assembles wave *k* in the shadow of the device. With ``overlap`` off
+(``JoinConfig.overlap`` / the ``REPRO_OVERLAP`` env override) the same
+primitives run strictly sequentially; pair sets and cache contents are
+identical either way.
+
+The exact re-rank runs on device through a band compaction
+(``kernels.ops.band_compact``): the cascade's ambiguous band is stably
+compacted into a small fixed capacity and only those rows reach the
+scalar-prefetch ``gather_sq_dists`` kernel — f32 re-rank traffic scales
+with band occupancy (PDX's pruning-proportional byte traffic,
+arXiv:2503.04422), not with ``pool_cap``. Waves whose band overflows the
+capacity are transparently retried at the next power of two
+(``RerankCap``), so results never depend on the cap.
+
 This module is the shared substrate of both entry points:
 
   * ``run_search_join`` / ``run_mi_join`` — one-shot full-batch joins
     (what ``vector_join`` and ``JoinEngine.join`` execute);
-  * ``run_search_wave`` — a single padded wave with caller-supplied seeds,
-    used by ``JoinEngine.submit`` to stream query batches while carrying
-    the soft-work-sharing cache forward between batches.
+  * ``run_search_wave`` — a single padded wave with caller-supplied seeds
+    (launch + fetch + assemble, sequentially), kept for callers that
+    manage their own pipeline like ``JoinEngine.submit``.
 
 All functions mutate the ``JoinStats`` they are handed and append
 ``(query_id, data_id)`` int64 pair blocks to ``all_pairs``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import os
 import time
 
 import jax
@@ -33,6 +63,43 @@ from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
 from repro.kernels import ops
 
 Array = jax.Array
+_INF = jnp.float32(jnp.inf)
+
+
+def overlap_enabled(cfg: JoinConfig) -> bool:
+    """``cfg.overlap``, unless the ``REPRO_OVERLAP`` env var overrides it
+    (CI bisection: ``REPRO_OVERLAP=off`` forces the sequential path
+    everywhere without touching configs). An empty value counts as
+    unset, so CI matrices can template the variable per leg."""
+    env = os.environ.get("REPRO_OVERLAP")
+    if env is not None and env.strip():
+        return env.strip().lower() not in ("0", "off", "false", "no")
+    return cfg.overlap
+
+
+# single owner of the capacity-growth policy, shared with the sharded
+# driver's retry (core/distributed.py)
+next_pow2 = ops.next_pow2
+
+
+class RerankCap:
+    """Sticky band-compaction capacity for one runner invocation.
+
+    Starts at ``cfg.rerank_cap`` (rounded up to a power of two, clamped
+    to ``pool_cap``); a wave whose ambiguous band overflows grows it to
+    the next power of two covering the observed occupancy and is retried.
+    Powers of two keep the set of jit specializations tiny while the
+    capacity tracks the high-water band — re-rank gather traffic stays
+    proportional to what the cascade actually leaves ambiguous.
+    """
+
+    def __init__(self, tcfg: TraversalConfig):
+        self.limit = tcfg.pool_cap
+        init = tcfg.rerank_cap if tcfg.rerank_cap > 0 else tcfg.pool_cap
+        self.cap = min(next_pow2(init), self.limit)
+
+    def grow(self, needed: int) -> None:
+        self.cap = ops.grow_cap(self.cap, needed, self.limit)
 
 
 # ---------------------------------------------------------------------------
@@ -64,44 +131,175 @@ def collect_pairs(qids: np.ndarray, keep: np.ndarray,
         np.int64)
 
 
-def rerank_pool(vecs, xw, pool_idx: np.ndarray, pool_dist: np.ndarray,
-                keep: np.ndarray, theta: float, stats: JoinStats, *,
-                dist_impl: str | None, cascade,
-                qc) -> tuple[np.ndarray, np.ndarray]:
-    """Exact f32 re-rank of cascade filter survivors (the second stage of
-    filter-then-rerank).
+# ---------------------------------------------------------------------------
+# device-side wave epilogue: band-compacted re-rank + seed feedback
+# ---------------------------------------------------------------------------
 
-    The traversal pooled every candidate whose *certified lower bound*
-    beat θ² — a superset of the exact in-range set over the visited
-    region. The cascade's confirming tier splits the pool
-    (``pool_band``): entries whose certified *upper* bound also beats θ²
-    are guaranteed true pairs and are emitted without touching the f32
-    table; only the ambiguous band (lb < θ² ≤ ub) is re-computed
-    exactly. The emitted set is therefore identical to what the f32
-    pipeline emits for the same visited region, while re-rank traffic
-    stays proportional to the quantization band, not the join size. Band
-    evaluations are counted in ``stats.n_rerank`` (``n_dist`` stays the
-    quantized-filter count).
+@functools.partial(jax.jit, static_argnames=("cap", "dist_impl", "seed_mode",
+                                             "seeds_max"))
+def _finalize_wave(cascade, qc, vecs, xw, pool_idx, pool_dist, n_pool,
+                   lane_valid, best_idx, th2, *, cap: int,
+                   dist_impl: str | None, seed_mode: str, seeds_max: int):
+    """Device epilogue of one wave: split the pooled lower-bound
+    survivors into certified-sure vs ambiguous, re-rank only the
+    band-compacted ambiguous entries with the exact scalar-prefetch
+    gather kernel, and derive the seed-feedback arrays the next wave
+    needs — all without a host round-trip.
 
-    Returns ``(keep', dist')`` — dist' is exact where re-ranked, the
-    lower bound elsewhere.
+    Replaces the old host-side ``rerank_pool``'s four-plus transfers
+    (sure/amb masks down, ids back up, exact dists down) with device
+    arrays the caller fetches in one fused ``device_get``.
+
+    Returns ``(keep, dist, n_amb, seed_ids, seed_valid)``:
+      * ``keep``   (B, C) — emitted slots (post-rerank survivors);
+      * ``dist``   (B, C) — exact where re-ranked, the certified lower
+        bound on certified-sure slots, +inf elsewhere;
+      * ``n_amb``  (B,)   — ambiguous-band occupancy per lane (band
+        entries with rank ≥ ``cap`` were NOT re-ranked: the caller must
+        retry at a larger cap whenever ``n_amb > cap``);
+      * ``seed_ids`` / ``seed_valid`` (B, S) — per-lane seed feedback:
+        the kept pool slots in ascending (dist, id) order for
+        ``es_hws``, the single best node for ``es_sws``, empty
+        otherwise. The (dist, id) key makes the order total, so the
+        device sort and the host cache (``update_sws_cache``) agree
+        bit-for-bit.
     """
-    th2 = np.float32(theta) ** 2
-    sure, amb = cascade.final.pool_band(qc[-1], jnp.asarray(pool_dist),
-                                        jnp.asarray(pool_idx), th2)
-    sure = keep & np.asarray(sure)
-    amb = keep & np.asarray(amb)
-    stats.n_rerank += int(amb.sum())
+    B, C = pool_idx.shape
+    keep = (jnp.arange(C)[None, :] < n_pool[:, None]) & lane_valid[:, None]
     dist = pool_dist
-    if amb.any():
-        idx = np.where(amb, pool_idx, NO_NODE)
-        exact = np.asarray(ops.gather_sq_dists(vecs, xw, jnp.asarray(idx),
-                                               impl=dist_impl))
-        keep = sure | (amb & (exact < th2))
-        dist = np.where(amb & np.isfinite(exact), exact, pool_dist)
+    n_amb = jnp.zeros((B,), jnp.int32)
+    if cascade is not None:
+        sure, amb = cascade.pool_band(qc, pool_dist, pool_idx, th2)
+        sure = keep & sure
+        amb = keep & amb
+        exact, within, n_amb = ops.compact_gather_sq_dists(
+            vecs, xw, pool_idx, amb, min(cap, C), impl=dist_impl)
+        keep = sure | (within & (exact < th2))
+        dist = jnp.where(within & jnp.isfinite(exact), exact, pool_dist)
+    dist = jnp.where(keep, dist, _INF)
+    if seed_mode == "es_hws":
+        S = min(seeds_max, C)
+        sd, si = jax.lax.sort((jnp.where(keep, dist, _INF), pool_idx),
+                              dimension=1, num_keys=2, is_stable=True)
+        seed_ids, seed_valid = si[:, :S], jnp.isfinite(sd[:, :S])
+    elif seed_mode == "es_sws":
+        seed_ids = best_idx[:, None].astype(jnp.int32)
+        seed_valid = (best_idx != NO_NODE)[:, None] & lane_valid[:, None]
     else:
-        keep = sure
-    return keep, np.where(keep, dist, np.float32(np.inf))
+        seed_ids = jnp.zeros((B, 0), jnp.int32)
+        seed_valid = jnp.zeros((B, 0), bool)
+    return keep, dist, n_amb, seed_ids, seed_valid
+
+
+@dataclasses.dataclass
+class WaveHandles:
+    """One in-flight wave: device handles plus everything needed to
+    retry the re-rank epilogue at a larger band capacity."""
+    qids: np.ndarray               # (B,) global query ids
+    lane_valid: np.ndarray         # (B,) bool
+    xw: Array                      # (B, d) wave queries (device)
+    vecs: Array                    # index vector table (device)
+    cascade: object                # FilterCascade | None
+    qc: tuple | None
+    th2: Array
+    # raw traversal outputs (kept for the retry path)
+    pool_idx: Array
+    raw_pool_dist: Array
+    n_pool: Array
+    best_idx: Array
+    n_dist: Array
+    n_esc: Array
+    overflow: Array
+    n_iters: tuple                 # device scalars, summed at assembly
+    # epilogue outputs (replaced wholesale on a capacity retry)
+    keep: Array
+    dist: Array
+    n_amb: Array
+    seed_ids: Array
+    seed_valid: Array
+    # epilogue parameters
+    capctl: RerankCap
+    dist_impl: str | None
+    seed_mode: str
+    seeds_max: int
+    # host-side state filled by the feedback fetch
+    n_amb_host: np.ndarray | None = None
+    tombstones: list = dataclasses.field(default_factory=list)
+
+
+def _refinalize(h: WaveHandles, stats: JoinStats) -> None:
+    """Re-run the device epilogue at the (grown) capacity."""
+    (h.keep, h.dist, h.n_amb, h.seed_ids, h.seed_valid) = _finalize_wave(
+        h.cascade, h.qc, h.vecs, h.xw, h.pool_idx, h.raw_pool_dist,
+        h.n_pool, jnp.asarray(h.lane_valid), h.best_idx, h.th2,
+        cap=h.capctl.cap, dist_impl=h.dist_impl, seed_mode=h.seed_mode,
+        seeds_max=h.seeds_max)
+    if h.cascade is not None:
+        stats.n_rerank_gather += int(h.xw.shape[0]) * h.capctl.cap
+
+
+def _resolve_band(h: WaveHandles, stats: JoinStats) -> None:
+    """Fetch the per-lane band occupancy; if any lane's band overflowed
+    the compaction capacity, grow the cap and re-run the epilogue so the
+    emitted set never depends on the capacity choice."""
+    if h.n_amb_host is not None:
+        return
+    t0 = time.perf_counter()
+    n_amb = np.asarray(jax.device_get(h.n_amb))
+    max_amb = int(n_amb.max()) if n_amb.size else 0
+    if h.cascade is not None and max_amb > h.capctl.cap:
+        h.capctl.grow(max_amb)
+        _refinalize(h, stats)
+        n_amb = np.asarray(jax.device_get(h.n_amb))
+    h.n_amb_host = n_amb
+    stats.wait_seconds += time.perf_counter() - t0
+
+
+def fetch_feedback(h: WaveHandles, stats: JoinStats) -> dict[int, np.ndarray]:
+    """The small blocking transfer between waves: band occupancy (for the
+    capacity-overflow retry) plus the per-lane seed entries. Returns the
+    seed-cache overlay ``{qid: ids}`` — for a caching method these are
+    exactly the first ``seeds_max`` ids ``update_sws_cache`` will later
+    store for the same queries, so the next wave can seed from them
+    before the bulky pool ever reaches the host."""
+    _resolve_band(h, stats)
+    if h.seed_mode == "none":
+        return {}
+    t0 = time.perf_counter()
+    seed_ids, seed_valid = jax.device_get((h.seed_ids, h.seed_valid))
+    stats.wait_seconds += time.perf_counter() - t0
+    entries = {}
+    for i, q in enumerate(h.qids):
+        if h.lane_valid[i]:
+            entries[int(q)] = np.asarray(seed_ids[i][seed_valid[i]],
+                                         np.int32)
+    return entries
+
+
+def assemble_wave(h: WaveHandles, stats: JoinStats, *,
+                  qid_offset: int = 0) -> "WaveOutput":
+    """The host phase of one wave: one fused device→host transfer of the
+    (idx, dist, keep, stats) block, then pair assembly. In a pipelined
+    run this executes while the device traverses the next wave."""
+    _resolve_band(h, stats)
+    t0 = time.perf_counter()
+    (pool_idx, pool_dist, keep, n_pool, best_idx, n_dist, n_esc,
+     overflow, *iters) = jax.device_get(
+        (h.pool_idx, h.dist, h.keep, h.n_pool, h.best_idx, h.n_dist,
+         h.n_esc, h.overflow) + h.n_iters)
+    lv = h.lane_valid
+    pairs = collect_pairs(h.qids + qid_offset, keep, pool_idx)
+    stats.n_dist += int(n_dist[lv].sum())
+    stats.n_esc8 += int(n_esc[lv].sum())
+    stats.n_overflow += int(overflow[lv].sum())
+    stats.n_rerank += int(h.n_amb_host[lv].sum())
+    stats.n_iters += sum(int(i) for i in iters)
+    stats.other_seconds += time.perf_counter() - t0
+    return WaveOutput(pairs=pairs, pool_idx=np.asarray(pool_idx),
+                      pool_dist=np.asarray(pool_dist),
+                      pool_keep=np.asarray(keep),
+                      n_pool=np.asarray(n_pool),
+                      best_idx=np.asarray(best_idx), lane_valid=lv)
 
 
 # ---------------------------------------------------------------------------
@@ -159,12 +357,18 @@ def effective_tcfg(cfg: JoinConfig) -> TraversalConfig:
     return tcfg
 
 
-def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
-                    lane_valid: np.ndarray, cfg: JoinConfig,
-                    stats: JoinStats, *, seeds: np.ndarray,
-                    seeds_valid: np.ndarray,
-                    cascade=None, qc=None) -> WaveOutput:
-    """One padded wave of greedy search + range expansion (Alg. 1 online).
+def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
+                       lane_valid: np.ndarray, cfg: JoinConfig,
+                       stats: JoinStats, *, seeds: np.ndarray,
+                       seeds_valid: np.ndarray, cascade=None, qc=None,
+                       capctl: RerankCap | None = None, sync: bool = True,
+                       collect_seeds: bool = False) -> WaveHandles:
+    """Dispatch the device phase of one search wave (Alg. 1 online):
+    greedy search, range expansion, and the band-compacted re-rank +
+    seed-feedback epilogue. With ``sync`` the greedy/expand phases are
+    timed individually (the sequential path); otherwise nothing blocks —
+    the caller overlaps ``assemble_wave`` of the previous wave with this
+    wave's device execution.
 
     ``seeds``/``seeds_valid`` are (B, S) arrays the caller filled from
     whatever work-sharing cache applies (parent caches for the MST order,
@@ -179,20 +383,24 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
     for parent assignment).
     """
     tcfg = effective_tcfg(cfg)
+    if capctl is None:
+        capctl = RerankCap(tcfg)
     seeds_j = jnp.asarray(seeds)
     sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
     if cascade is not None and qc is None:
         qc = cascade.encode(xw)
+    th2 = jnp.float32(cfg.theta) ** 2
 
     t0 = time.perf_counter()
     g = traversal.greedy_search(
         index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
         n_data=index_y.n_data, traverse_nondata=True,
         cascade=cascade, qc=qc)
-    jax.block_until_ready(g.beam_dist)
-    stats.greedy_seconds += time.perf_counter() - t0
+    if sync:
+        jax.block_until_ready(g.beam_dist)
+        stats.greedy_seconds += time.perf_counter() - t0
+        t0 = time.perf_counter()
 
-    t0 = time.perf_counter()
     init_valid = (g.beam_idx != NO_NODE) & jnp.isfinite(g.beam_dist)
     r = traversal.range_expand(
         index_y, xw, cfg.theta, cfg=tcfg, n_data=index_y.n_data,
@@ -200,42 +408,57 @@ def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         init_idx=g.beam_idx, init_dist=g.beam_dist, init_valid=init_valid,
         visited=g.visited, best_dist=g.best_dist, best_idx=g.best_idx,
         n_dist=g.n_dist, cascade=cascade, qc=qc, n_esc=g.n_esc)
-    jax.block_until_ready(r.pool_idx)
-    stats.expand_seconds += time.perf_counter() - t0
+    if sync:
+        jax.block_until_ready(r.pool_idx)
+        stats.expand_seconds += time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    pool_idx = np.asarray(r.pool_idx)
-    pool_dist = np.asarray(r.pool_dist)
-    n_pool = np.asarray(r.n_pool)
-    lv = np.asarray(lane_valid)
-    keep = pool_mask(lv, n_pool, pool_idx.shape[1])
+    seed_mode = cfg.method if collect_seeds else "none"
+    keep, dist, n_amb, seed_ids, seed_valid2 = _finalize_wave(
+        cascade, qc, index_y.vecs, xw, r.pool_idx, r.pool_dist, r.n_pool,
+        jnp.asarray(lane_valid), r.best_idx, th2, cap=capctl.cap,
+        dist_impl=tcfg.dist_impl, seed_mode=seed_mode,
+        seeds_max=tcfg.seeds_max)
     if cascade is not None:
-        keep, pool_dist = rerank_pool(index_y.vecs, xw, pool_idx, pool_dist,
-                                      keep, cfg.theta, stats,
-                                      dist_impl=tcfg.dist_impl,
-                                      cascade=cascade, qc=qc)
-    pairs = collect_pairs(qids, keep, pool_idx)
-    stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
-    stats.n_esc8 += int(np.asarray(r.n_esc)[lv].sum())
-    stats.n_iters += int(g.n_iters) + int(r.n_iters)
-    stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
-    stats.other_seconds += time.perf_counter() - t0
-    return WaveOutput(pairs=pairs, pool_idx=pool_idx, pool_dist=pool_dist,
-                      pool_keep=keep, n_pool=n_pool,
-                      best_idx=np.asarray(r.best_idx), lane_valid=lv)
+        stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
+    return WaveHandles(
+        qids=qids, lane_valid=np.asarray(lane_valid), xw=xw,
+        vecs=index_y.vecs, cascade=cascade, qc=qc, th2=th2,
+        pool_idx=r.pool_idx, raw_pool_dist=r.pool_dist, n_pool=r.n_pool,
+        best_idx=r.best_idx, n_dist=r.n_dist, n_esc=r.n_esc,
+        overflow=r.overflow, n_iters=(g.n_iters, r.n_iters),
+        keep=keep, dist=dist, n_amb=n_amb, seed_ids=seed_ids,
+        seed_valid=seed_valid2, capctl=capctl, dist_impl=tcfg.dist_impl,
+        seed_mode=seed_mode, seeds_max=tcfg.seeds_max)
+
+
+def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
+                    lane_valid: np.ndarray, cfg: JoinConfig,
+                    stats: JoinStats, *, seeds: np.ndarray,
+                    seeds_valid: np.ndarray,
+                    cascade=None, qc=None) -> WaveOutput:
+    """One padded wave, strictly sequential (launch + fetch + assemble) —
+    the single-wave convenience the pipelined runners are built from."""
+    h = launch_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
+                           seeds=seeds, seeds_valid=seeds_valid,
+                           cascade=cascade, qc=qc, sync=True)
+    return assemble_wave(h, stats)
 
 
 def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
                      qids: np.ndarray, cfg: JoinConfig,
                      stats: JoinStats, cache_n: int) -> int:
     """SelectDataToCache (Alg. 3) — HWS caches the whole in-range pool,
-    SWS the single closest node. Returns the updated entry count."""
+    SWS the single closest node. Returns the updated entry count.
+
+    HWS entries are ordered by the total (dist, id) key — the same key
+    the device-side seed feedback sorts by, so a pipelined wave seeds
+    from exactly the prefix of the entry this writes."""
     if cfg.method == "es_hws":
         for i, q in enumerate(qids):
             if not out.lane_valid[i]:
                 continue
             ids = out.pool_idx[i][out.pool_keep[i]]
-            o = np.argsort(out.pool_dist[i][out.pool_keep[i]])
+            o = np.lexsort((ids, out.pool_dist[i][out.pool_keep[i]]))
             cache[int(q)] = ids[o]
             cache_n += int(ids.size)
     elif cfg.method == "es_sws":
@@ -252,10 +475,14 @@ def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
 
 def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
                      parent: np.ndarray | dict[int, int],
-                     cache: dict[int, np.ndarray], sy: int,
+                     cache, sy: int,
                      wave_size: int, seeds_max: int
                      ) -> tuple[np.ndarray, np.ndarray]:
-    """Seed lanes from parent caches (Alg. 1 lines 5–9); s_Y fallback."""
+    """Seed lanes from parent caches (Alg. 1 lines 5–9); s_Y fallback.
+
+    ``cache`` is any mapping qid → id array — the pipelined runners pass
+    a ``ChainMap(seed_overlay, cache)`` so a wave can seed from the
+    feedback of the still-being-assembled previous wave."""
     seeds = np.full((wave_size, seeds_max), sy, np.int32)
     seeds_valid = np.zeros((wave_size, seeds_max), bool)
     seeds_valid[:, 0] = True
@@ -276,7 +503,14 @@ def run_search_join(X: Array, index_y: GraphIndex,
                     index_x: GraphIndex | None, cfg: JoinConfig,
                     stats: JoinStats, all_pairs: list[np.ndarray], *,
                     cascade=None) -> None:
-    """Full-batch index / es / es_hws / es_sws join (greedy + BFS)."""
+    """Full-batch index / es / es_hws / es_sws join (greedy + BFS).
+
+    Pipelined (``overlap_enabled``): wave *k+1* launches from wave *k*'s
+    seed feedback while wave *k*'s pool is still on the device; the host
+    assembles pairs and the work-sharing cache one wave behind. The seed
+    overlay is dropped as soon as ``update_sws_cache`` writes the full
+    entry, so cache contents match the sequential path exactly.
+    """
     nq = X.shape[0]
     needs_mst = cfg.method in ("es_hws", "es_sws")
     sy = int(index_y.start)
@@ -295,26 +529,109 @@ def run_search_join(X: Array, index_y: GraphIndex,
     S = cfg.traversal.seeds_max
     cache: dict[int, np.ndarray] = {}
     cache_n = 0
+    overlay: dict[int, np.ndarray] = {}
+    seed_cache = collections.ChainMap(overlay, cache)
+    capctl = RerankCap(effective_tcfg(cfg))
+    ov = overlap_enabled(cfg)
+    pending: WaveHandles | None = None
+
+    def drain(h: WaveHandles) -> None:
+        nonlocal cache_n
+        out = assemble_wave(h, stats)
+        all_pairs.append(out.pairs)
+        t1 = time.perf_counter()
+        cache_n = update_sws_cache(cache, out, h.qids, cfg, stats, cache_n)
+        for q in h.qids[h.lane_valid]:
+            overlay.pop(int(q), None)
+        stats.other_seconds += time.perf_counter() - t1
 
     for wave in waves:
         qids, lane_valid = pad_wave(wave, cfg.wave_size)
         xw = X[jnp.asarray(qids)]
         t0 = time.perf_counter()
         seeds, seeds_valid = seeds_from_cache(
-            qids, lane_valid, parent, cache, sy, cfg.wave_size, S)
+            qids, lane_valid, parent, seed_cache, sy, cfg.wave_size, S)
         stats.other_seconds += time.perf_counter() - t0
-        out = run_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
-                              seeds=seeds, seeds_valid=seeds_valid,
-                              cascade=cascade)
-        all_pairs.append(out.pairs)
-        t0 = time.perf_counter()
-        cache_n = update_sws_cache(cache, out, qids, cfg, stats, cache_n)
-        stats.other_seconds += time.perf_counter() - t0
+        # the seed feedback only exists to bridge the one-wave gap the
+        # pipeline opens; the sequential path updates the cache in full
+        # before the next wave and needs neither the device sort nor the
+        # extra fetch
+        h = launch_search_wave(index_y, xw, qids, lane_valid, cfg, stats,
+                               seeds=seeds, seeds_valid=seeds_valid,
+                               cascade=cascade, capctl=capctl,
+                               sync=not ov, collect_seeds=needs_mst and ov)
+        if ov and pending is not None:
+            drain(pending)
+            pending = None
+        if needs_mst and ov:
+            overlay.update(fetch_feedback(h, stats))
+        if ov:
+            pending = h
+        else:
+            drain(h)
+    if pending is not None:
+        drain(pending)
 
 
 # ---------------------------------------------------------------------------
 # merged-index waves (es_mi / es_mi_adapt)
 # ---------------------------------------------------------------------------
+
+def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
+                   lane_valid: np.ndarray, cfg: JoinConfig,
+                   stats: JoinStats, *, hybrid: bool, cascade=None,
+                   qc=None, capctl: RerankCap | None = None,
+                   sync: bool = True) -> WaveHandles:
+    """Dispatch the device phase of one merged-index wave (probe +
+    BFS/BBFS expansion + band-compacted re-rank). MI waves carry no
+    work-sharing cache, so there is no seed feedback — the pipeline
+    overlaps the next wave with pure pair assembly."""
+    tcfg = cfg.traversal
+    n_data = merged.n_data
+    node_ids = jnp.asarray(qids, jnp.int32) + n_data
+    lv_j = jnp.asarray(lane_valid)
+    if cascade is not None and qc is None:
+        qc = cascade.encode(xw)
+    th2 = jnp.float32(cfg.theta) ** 2
+    if capctl is None:
+        capctl = RerankCap(tcfg)
+
+    t0 = time.perf_counter()
+    rows, dist, ub, valid, visited, n_new, n_esc0, best, besti = _mi_probe(
+        merged, xw, node_ids, lv_j,
+        traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
+        cascade=cascade, qc=qc, esc_th2=th2)
+    if sync:
+        jax.block_until_ready(dist)
+        stats.greedy_seconds += time.perf_counter() - t0
+        t0 = time.perf_counter()
+
+    r = traversal.range_expand(
+        merged, xw, cfg.theta, cfg=tcfg, n_data=n_data,
+        hybrid=hybrid, traverse_nondata=hybrid,
+        init_idx=rows, init_dist=dist, init_valid=valid,
+        visited=visited, best_dist=best, best_idx=besti,
+        n_dist=n_new, cascade=cascade, qc=qc, init_ub=ub, n_esc=n_esc0)
+    if sync:
+        jax.block_until_ready(r.pool_idx)
+        stats.expand_seconds += time.perf_counter() - t0
+
+    keep, dist2, n_amb, seed_ids, seed_valid = _finalize_wave(
+        cascade, qc, merged.vecs, xw, r.pool_idx, r.pool_dist, r.n_pool,
+        lv_j, r.best_idx, th2, cap=capctl.cap, dist_impl=tcfg.dist_impl,
+        seed_mode="none", seeds_max=tcfg.seeds_max)
+    if cascade is not None:
+        stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
+    return WaveHandles(
+        qids=qids, lane_valid=np.asarray(lane_valid), xw=xw,
+        vecs=merged.vecs, cascade=cascade, qc=qc, th2=th2,
+        pool_idx=r.pool_idx, raw_pool_dist=r.pool_dist, n_pool=r.n_pool,
+        best_idx=r.best_idx, n_dist=r.n_dist, n_esc=r.n_esc,
+        overflow=r.overflow, n_iters=(r.n_iters,),
+        keep=keep, dist=dist2, n_amb=n_amb, seed_ids=seed_ids,
+        seed_valid=seed_valid, capctl=capctl, dist_impl=tcfg.dist_impl,
+        seed_mode="none", seeds_max=tcfg.seeds_max)
+
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 stats: JoinStats, all_pairs: list[np.ndarray], *,
@@ -324,10 +641,11 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
     ``qid_offset`` shifts the emitted query ids — used by the streaming
     engine, where a batch of local queries carries global ids.
     ``cascade`` compresses the *merged* index (data + query nodes);
-    pooled survivors are re-ranked exactly before emission.
+    pooled survivors are re-ranked exactly before emission. MI waves are
+    mutually independent, so the pipeline double-buffers unconditionally
+    (including across the BFS/BBFS group boundary).
     """
     nq = X.shape[0]
-    tcfg = cfg.traversal
     n_data = merged.n_data
 
     # adaptive split: predict OOD once, vectorized (paper §4.5)
@@ -346,51 +664,28 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
     groups = [(np.flatnonzero(~ood), False), (np.flatnonzero(ood), True)]
     stats.other_seconds += time.perf_counter() - t0
 
+    capctl = RerankCap(cfg.traversal)
+    ov = overlap_enabled(cfg)
+    pending: WaveHandles | None = None
+
+    def drain(h: WaveHandles) -> None:
+        out = assemble_wave(h, stats, qid_offset=qid_offset)
+        all_pairs.append(out.pairs)
+
     for ids_all, hybrid in groups:
         for c0 in range(0, ids_all.size, cfg.wave_size):
             wave = ids_all[c0:c0 + cfg.wave_size]
             qids, lane_valid = pad_wave(wave, cfg.wave_size)
             xw = X[jnp.asarray(qids)]
-            node_ids = jnp.asarray(qids, jnp.int32) + n_data
-            lv_j = jnp.asarray(lane_valid)
-
             qc = cascade.encode(xw) if cascade is not None else None
-
-            t0 = time.perf_counter()
-            rows, dist, ub, valid, visited, n_new, n_esc0, best, besti = \
-                _mi_probe(
-                    merged, xw, node_ids, lv_j,
-                    traverse_nondata=hybrid, dist_impl=tcfg.dist_impl,
-                    cascade=cascade, qc=qc,
-                    esc_th2=jnp.float32(cfg.theta) ** 2)
-            jax.block_until_ready(dist)
-            stats.greedy_seconds += time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            r = traversal.range_expand(
-                merged, xw, cfg.theta, cfg=tcfg, n_data=n_data,
-                hybrid=hybrid, traverse_nondata=hybrid,
-                init_idx=rows, init_dist=dist, init_valid=valid,
-                visited=visited, best_dist=best, best_idx=besti,
-                n_dist=n_new, cascade=cascade, qc=qc, init_ub=ub,
-                n_esc=n_esc0)
-            jax.block_until_ready(r.pool_idx)
-            stats.expand_seconds += time.perf_counter() - t0
-
-            t0 = time.perf_counter()
-            lv = np.asarray(lane_valid)
-            pool_idx = np.asarray(r.pool_idx)
-            keep = pool_mask(lv, np.asarray(r.n_pool), pool_idx.shape[1])
-            if cascade is not None:
-                keep, _ = rerank_pool(merged.vecs, xw, pool_idx,
-                                      np.asarray(r.pool_dist), keep,
-                                      cfg.theta, stats,
-                                      dist_impl=tcfg.dist_impl,
-                                      cascade=cascade, qc=qc)
-            all_pairs.append(collect_pairs(qids + qid_offset, keep,
-                                           pool_idx))
-            stats.n_dist += int(np.asarray(r.n_dist)[lv].sum())
-            stats.n_esc8 += int(np.asarray(r.n_esc)[lv].sum())
-            stats.n_iters += int(r.n_iters)
-            stats.n_overflow += int(np.asarray(r.overflow)[lv].sum())
-            stats.other_seconds += time.perf_counter() - t0
+            h = launch_mi_wave(merged, xw, qids, lane_valid, cfg, stats,
+                               hybrid=hybrid, cascade=cascade, qc=qc,
+                               capctl=capctl, sync=not ov)
+            if ov:
+                if pending is not None:
+                    drain(pending)
+                pending = h
+            else:
+                drain(h)
+    if pending is not None:
+        drain(pending)

@@ -14,6 +14,14 @@ TPU adaptation notes: one (1, d) row per grid step is DMA-friendly for the
 paper's d (128–960: 512B–4KB transfers); the d-dim stays contiguous (lane
 dimension) so the VPU reduction is a single pass. Invalid ids (NO_NODE)
 must be pre-clamped to 0 by the wrapper and masked afterwards.
+
+This kernel is also the back end of the band-compacted re-rank
+(``ops.compact_gather_sq_dists``): the wave pipeline compacts the
+cascade's ambiguous band into a fixed small capacity and hands the
+compacted (B, cap) id matrix here, so K is the band capacity rather than
+the pool width — the scalar-prefetch index_map then DMAs only band rows.
+Unused capacity arrives as clamped id 0 (one hot row, L1-resident); the
+wrapper masks those slots to +inf.
 """
 from __future__ import annotations
 

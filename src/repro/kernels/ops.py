@@ -193,6 +193,89 @@ def gather_sq_dists(vecs: Array, x: Array, idx: Array, *,
 
 
 # ---------------------------------------------------------------------------
+# band compaction — sparse re-rank over a boolean band mask
+# ---------------------------------------------------------------------------
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def grow_cap(cur: int, needed: int, limit: int) -> int:
+    """The one capacity-growth rule for band-compaction overflow retries
+    (single-device ``waves.RerankCap`` and the sharded driver share it):
+    next power of two covering the observed band, never shrinking,
+    clamped to the pool width."""
+    return min(max(next_pow2(needed), cur), limit)
+
+
+def band_compact(mask: Array, ids: Array, cap: int
+                 ) -> tuple[Array, Array, Array]:
+    """Stably compact masked slots of a (B, C) id matrix into ``cap`` slots.
+
+    The re-rank front door: the cascade's ambiguous band is a sparse
+    subset of the pool, but the gather kernel wants a dense id matrix.
+    A ``cumsum`` over the mask assigns each masked slot its rank within
+    the lane (stable: pool order is preserved), slots beyond ``cap``
+    fall into a discarded sink column.
+
+    Returns ``(slots, cand, n_masked)``:
+      * ``slots``   (B, cap) int32 — source column of each compacted
+        entry, −1 for unused capacity;
+      * ``cand``    (B, cap) int32 — ``ids`` gathered through ``slots``
+        (−1, i.e. NO_NODE, where unused) — feed straight into
+        ``gather_sq_dists``;
+      * ``n_masked`` (B,) int32 — band occupancy per lane. Entries with
+        rank ≥ cap are *not* compacted (overflow = n_masked − cap);
+        callers must detect ``n_masked > cap`` and retry at a larger
+        capacity to keep results exact.
+    """
+    B, C = mask.shape
+    pos = jnp.cumsum(mask, axis=1) - 1                     # rank within lane
+    within = mask & (pos < cap)
+    tgt = jnp.where(within, pos, cap)                      # sink = cap
+    lane = jnp.arange(B, dtype=jnp.int32)[:, None]
+    col = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None, :], (B, C))
+    slots = jnp.full((B, cap + 1), -1, jnp.int32)
+    slots = slots.at[lane, tgt].set(jnp.where(within, col, -1))[:, :cap]
+    cand = jnp.where(slots >= 0,
+                     jnp.take_along_axis(ids, jnp.clip(slots, 0), axis=1),
+                     -1)
+    return slots, cand, jnp.sum(mask, axis=1).astype(jnp.int32)
+
+
+def band_scatter(slots: Array, vals: Array, C: int, fill=jnp.inf) -> Array:
+    """Inverse of ``band_compact``: scatter (B, cap) compacted values back
+    to their (B, C) source columns; unused slots read ``fill``."""
+    B, cap = slots.shape
+    lane = jnp.arange(B, dtype=jnp.int32)[:, None]
+    tgt = jnp.where(slots >= 0, slots, C)                  # sink = C
+    out = jnp.full((B, C + 1), fill, vals.dtype)
+    return out.at[lane, tgt].set(
+        jnp.where(slots >= 0, vals, jnp.asarray(fill, vals.dtype)))[:, :C]
+
+
+def compact_gather_sq_dists(vecs: Array, x: Array, ids: Array, mask: Array,
+                            cap: int, *, impl: str | None = None
+                            ) -> tuple[Array, Array, Array]:
+    """Exact f32 distances for the masked slots of a pooled id matrix,
+    computed through a ``cap``-wide compacted gather.
+
+    Returns ``(exact, within, n_masked)``: ``exact`` is (B, C) with the
+    true squared distance on every compacted masked slot and +inf
+    elsewhere; ``within`` marks the masked slots that actually got
+    re-ranked (rank < cap). The gather kernel only ever sees
+    ``B × cap`` ids — traffic scales with the band, not the pool."""
+    C = ids.shape[1]
+    slots, cand, n_masked = band_compact(mask, ids, cap)
+    exact_c = gather_sq_dists(vecs, x, cand, impl=impl)
+    exact = band_scatter(slots, exact_c, C)
+    pos = jnp.cumsum(mask, axis=1) - 1
+    within = mask & (pos < cap)
+    return exact, within, n_masked
+
+
+# ---------------------------------------------------------------------------
 # int8 (QuantStore) kernels
 # ---------------------------------------------------------------------------
 

@@ -51,6 +51,12 @@ def main(argv=None) -> int:
                          "sweep and RNG prune, f32 only for the ambiguous "
                          "band — identical edges, less f32 traffic "
                          "(default: the engine spec's quant_build mode)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the double-buffered wave pipeline and "
+                         "run the strictly sequential reference path "
+                         "(bisection escape hatch; pair sets are "
+                         "identical either way — the REPRO_OVERLAP env "
+                         "var overrides both)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine-spec", default="default",
                     help="EngineSpec preset "
@@ -79,7 +85,8 @@ def main(argv=None) -> int:
                    if args.quant_build is not None
                    else ENGINE_PRESETS[args.engine_spec].quant_build)
     cfg = preset(args.method, theta=theta)
-    cfg = dataclasses.replace(cfg, wave_size=args.wave, quant=quant)
+    cfg = dataclasses.replace(cfg, wave_size=args.wave, quant=quant,
+                              overlap=not args.no_overlap)
 
     n_shards = 0 if args.distributed else args.shards
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
@@ -88,7 +95,8 @@ def main(argv=None) -> int:
         ap.error("--stream runs single-device; drop --shards/--distributed")
     print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
           f"dim={args.dim} θ={theta:.4f} method={args.method} "
-          f"shards={eng.n_shards} quant={quant} quant_build={quant_build}")
+          f"shards={eng.n_shards} quant={quant} quant_build={quant_build} "
+          f"overlap={'off' if args.no_overlap else 'on'}")
 
     t0 = time.perf_counter()
     if args.stream:

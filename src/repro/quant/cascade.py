@@ -40,7 +40,8 @@ Consumers:
 
   * ``core/join.cascade_join_pairs``   — the one NLJ entry point;
   * ``core/traversal._probe``          — escalation through the tier chain;
-  * ``engine/waves.rerank_pool``       — band split + exact re-rank;
+  * ``engine/waves._finalize_wave``    — device-side band split +
+    band-compacted exact re-rank;
   * ``engine.JoinEngine.cascade_for``  — per-artifact cascade cache;
   * ``core/distributed._local_mi_join``— per-shard local cascades;
   * ``core/graph.build_index``         — certified-bounds offline build.
@@ -272,6 +273,17 @@ class FilterCascade:
     def encode(self, x) -> tuple:
         """Queries encoded on every tier's grid, aligned with ``tiers``."""
         return tuple(t.encode(x) for t in self.tiers)
+
+    def pool_band(self, qc: tuple, pool_lb, pool_idx, th2):
+        """Split a pooled (lb, idx) matrix into certified-sure vs
+        ambiguous via the confirming tier — the device-resident inputs of
+        the band-compacted re-rank (``kernels.ops.band_compact``).
+
+        ``qc`` is the full per-tier encoding tuple from ``encode``;
+        the split is the final tier's. Everything stays on device: the
+        wave pipeline feeds the returned masks straight into the
+        compaction + scalar-prefetch gather without a host round-trip."""
+        return self.final.pool_band(qc[-1], pool_lb, pool_idx, th2)
 
     def tier(self, name: str):
         for t in self.tiers:

@@ -1,0 +1,303 @@
+"""Wave-pipeline regression suite.
+
+Two contracts:
+
+  * **Golden equivalence** — the double-buffered traversal⇆assembly
+    pipeline (``JoinConfig.overlap``) is a pure scheduling change: on a
+    fixed-seed dataset, pipelined and sequential runs emit *identical*
+    pair sets and leave *identical* work-sharing cache state, across wave
+    sizes, quant modes (off/sq8/sketch8), methods (search path with both
+    HWS/SWS cache shapes, merged-index path), streaming submit batches,
+    and the 2-shard path — including when the band-compacted re-rank's
+    capacity overflows and triggers the power-of-two retry.
+  * **Band compaction properties** — ``kernels.ops.band_compact`` /
+    ``band_scatter`` / ``compact_gather_sq_dists`` are exercised by
+    hypothesis over arbitrary masks: empty bands, full bands, capacity
+    overflow, and sentinel (NO_NODE) rows. The compaction must be stable,
+    the scatter its inverse, and compacted exact distances must equal
+    the dense re-rank oracle wherever an entry was within capacity.
+
+CI runs the module in the quant-mode matrix (``REPRO_QUANT_MODE``
+narrows parametrization) and once more with ``REPRO_OVERLAP=off``, which
+forces both arms of the equivalence tests sequential — the tests then
+degenerate to self-consistency, while the rest of the suite exercises
+the sequential path end to end.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import JoinConfig, TraversalConfig
+from repro.core.types import QUANT_MODES
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
+from repro.engine import waves as W
+from repro.kernels import ops
+
+_ENV_MODE = os.environ.get("REPRO_QUANT_MODE")
+MODES_UNDER_TEST = (_ENV_MODE,) if _ENV_MODE else QUANT_MODES
+
+BK = dict(k=24, degree=12)
+
+
+def _tc(**kw):
+    base = dict(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                hybrid_beam=64, seeds_max=8, max_iters=2048)
+    base.update(kw)
+    return TraversalConfig(**base)
+
+
+def _cfg(method, theta, quant, *, overlap, wave=32, tc=None):
+    return JoinConfig(method=method, theta=theta, traversal=tc or _tc(),
+                      wave_size=wave, quant=quant, overlap=overlap)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("manifold", n_data=1500, n_query=96, dim=40,
+                        seed=42)
+
+
+@pytest.fixture(scope="module")
+def theta(ds):
+    # the second threshold: larger bands (more re-rank work) than θ₁
+    return float(thresholds(ds, 3)[1])
+
+
+# -- overlap knob plumbing ---------------------------------------------------
+
+
+def test_overlap_env_override(monkeypatch):
+    cfg_on = JoinConfig(overlap=True)
+    cfg_off = JoinConfig(overlap=False)
+    monkeypatch.delenv("REPRO_OVERLAP", raising=False)
+    assert W.overlap_enabled(cfg_on) and not W.overlap_enabled(cfg_off)
+    monkeypatch.setenv("REPRO_OVERLAP", "off")
+    assert not W.overlap_enabled(cfg_on)
+    monkeypatch.setenv("REPRO_OVERLAP", "1")
+    assert W.overlap_enabled(cfg_off)
+
+
+# -- golden equivalence: pipelined == sequential -----------------------------
+
+
+@pytest.mark.parametrize("quant", MODES_UNDER_TEST)
+@pytest.mark.parametrize("method", ["es_hws", "es_sws", "es_mi",
+                                    "es_mi_adapt"])
+@pytest.mark.parametrize("wave", [16, 64])
+def test_pipelined_matches_sequential(ds, theta, method, quant, wave):
+    """Identical pair sets across methods × quant modes × wave sizes.
+    One shared engine: both runs hit the same cached indexes/cascades."""
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    r_ov = eng.join(ds.X, _cfg(method, theta, quant, overlap=True,
+                               wave=wave))
+    r_seq = eng.join(ds.X, _cfg(method, theta, quant, overlap=False,
+                                wave=wave))
+    assert r_ov.pair_set() == r_seq.pair_set(), (method, quant, wave)
+    # re-rank work (band occupancy) is schedule-independent too
+    assert r_ov.stats.n_rerank == r_seq.stats.n_rerank
+
+
+@pytest.mark.parametrize("quant", [m for m in MODES_UNDER_TEST
+                                   if m != "off"])
+@pytest.mark.parametrize("method", ["es_hws", "es_mi"])
+def test_pipelined_matches_sequential_with_cap_overflow(ds, theta, method,
+                                                        quant):
+    """A deliberately tiny re-rank capacity forces the power-of-two
+    overflow retry on nearly every wave; emitted pairs must be identical
+    to the full-width (cap = pool_cap) re-rank, pipelined or not — the
+    capacity is a pure traffic knob."""
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    r_full = eng.join(ds.X, _cfg(method, theta, quant, overlap=False,
+                                 tc=_tc(rerank_cap=0)))
+    tc = _tc(rerank_cap=2)
+    r_ov = eng.join(ds.X, _cfg(method, theta, quant, overlap=True, tc=tc))
+    r_seq = eng.join(ds.X, _cfg(method, theta, quant, overlap=False,
+                                tc=tc))
+    assert r_ov.pair_set() == r_seq.pair_set() == r_full.pair_set()
+
+
+@pytest.mark.parametrize("quant", MODES_UNDER_TEST)
+@pytest.mark.parametrize("carry_window", [4096, 16])
+def test_streaming_pipeline_cache_state(ds, theta, quant, carry_window):
+    """Streaming submit: pipelined and sequential batches emit the same
+    pairs AND leave bit-identical work-sharing carry state — including
+    with a carry window smaller than the wave (the tombstone path, where
+    donors are evicted before their cache entry lands)."""
+    state = {}
+    for overlap in (True, False):
+        eng = JoinEngine(ds.Y, build_kw=BK, carry_window=carry_window)
+        cfg = _cfg("es_sws", theta, quant, overlap=overlap)
+        got = set()
+        for b0 in range(0, ds.X.shape[0], 40):
+            got |= eng.submit(ds.X[b0:b0 + 40], cfg).pair_set()
+        state[overlap] = (got, dict(eng._stream_cache),
+                          eng._stream_entry_n,
+                          np.asarray(eng._carry_qids).tolist())
+    pairs_ov, cache_ov, n_ov, qids_ov = state[True]
+    pairs_sq, cache_sq, n_sq, qids_sq = state[False]
+    assert pairs_ov == pairs_sq
+    assert cache_ov.keys() == cache_sq.keys()
+    assert all(np.array_equal(cache_ov[k], cache_sq[k]) for k in cache_ov)
+    assert n_ov == n_sq and qids_ov == qids_sq
+
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    from repro.core import JoinConfig, TraversalConfig
+    from repro.data.vectors import make_dataset, thresholds
+    from repro.engine import JoinEngine
+
+    ds = make_dataset("manifold", n_data=1501, n_query=64, dim=40, seed=42)
+    theta = float(thresholds(ds, 3)[1])
+    tc = TraversalConfig(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                         hybrid_beam=64, seeds_max=8, max_iters=2048,
+                         rerank_cap=2)
+    e2 = JoinEngine(ds.Y, build_kw=dict(k=24, degree=12), n_shards=2)
+    for quant in {modes}:
+        sets = dict()
+        for overlap in (True, False):
+            cfg = JoinConfig(method="es_mi", theta=theta, traversal=tc,
+                             wave_size=32, quant=quant, overlap=overlap)
+            r = e2.join(ds.X, cfg)
+            sets[overlap] = r.pair_set()
+            if quant != "off":
+                # in-shard band occupancy is reported per shard and the
+                # gather dispatch is capacity-, not pool-, shaped
+                assert len(r.stats.band_occ_per_shard) == 2
+                assert sum(r.stats.band_occ_per_shard) == r.stats.n_rerank
+                assert r.stats.n_rerank_gather < r.stats.n_dist * 8
+        assert sets[True] == sets[False], quant
+    print("OVERLAP_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipelined_matches_sequential_2shard():
+    """The 2-shard driver pipelines host assembly behind the devices;
+    pair sets must match the sequential driver under every quant mode,
+    with the tiny capacity forcing in-shard compaction overflow."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    script = _SHARD_SCRIPT.replace("{modes}",
+                                   repr(tuple(MODES_UNDER_TEST)))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OVERLAP_SHARDED_OK" in r.stdout
+
+
+# -- re-rank traffic scales with the band ------------------------------------
+
+
+@pytest.mark.parametrize("quant", [m for m in MODES_UNDER_TEST
+                                   if m != "off"])
+def test_rerank_gather_tracks_band_not_pool(ds, theta, quant):
+    """The f32 re-rank gather dispatches capacity-many slots per lane;
+    with the default capacity that is a small fraction of pool_cap, and
+    the emitted pairs equal the full-width (cap = pool_cap) re-rank."""
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    tc_c = _tc()                       # rerank_cap=128 default
+    tc_full = _tc(rerank_cap=0)        # 0 ⇒ full pool width
+    r_c = eng.join(ds.X, _cfg("es_mi", theta, quant, overlap=True,
+                              tc=tc_c))
+    r_full = eng.join(ds.X, _cfg("es_mi", theta, quant, overlap=True,
+                                 tc=tc_full))
+    assert r_c.pair_set() == r_full.pair_set()
+    assert r_c.stats.n_rerank == r_full.stats.n_rerank
+    # same lanes, 1024-wide vs 128-wide gather dispatch
+    assert r_c.stats.n_rerank_gather * 4 <= r_full.stats.n_rerank_gather
+    assert r_c.stats.n_rerank_gather >= r_c.stats.n_rerank
+
+
+# -- band compaction properties (hypothesis) ---------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYP = False
+
+if not _HAVE_HYP:                                      # pragma: no cover
+
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_band_compaction_properties():
+        pass
+
+if _HAVE_HYP:
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.integers(1, 6), st.integers(1, 40), st.integers(1, 48),
+           st.floats(0.0, 1.0), st.integers(0, 2**31 - 1))
+    def test_band_compact_roundtrip(B, C, cap, density, seed):
+        """Compaction is stable (pool order preserved), the scatter is
+        its inverse, and overflow slots are exactly the band entries of
+        rank ≥ cap — across empty, sparse, dense, and overflowing
+        masks, with NO_NODE sentinel ids mixed in."""
+        rng = np.random.default_rng(seed)
+        mask = rng.random((B, C)) < density
+        ids = rng.integers(0, 1000, size=(B, C)).astype(np.int32)
+        ids[rng.random((B, C)) < 0.2] = -1          # sentinel rows
+        slots, cand, n_masked = ops.band_compact(
+            jnp.asarray(mask), jnp.asarray(ids), cap)
+        slots, cand, n_masked = (np.asarray(slots), np.asarray(cand),
+                                 np.asarray(n_masked))
+        for b in range(B):
+            cols = np.flatnonzero(mask[b])
+            n = cols.size
+            assert n_masked[b] == n
+            k = min(n, cap)
+            # stable prefix: first k masked columns, in order
+            assert slots[b, :k].tolist() == cols[:k].tolist()
+            assert cand[b, :k].tolist() == ids[b, cols[:k]].tolist()
+            # unused capacity is sentinel-marked
+            assert (slots[b, k:] == -1).all()
+            assert (cand[b, k:] == -1).all()
+        # scatter-back inverse on the compacted prefix
+        vals = rng.random((B, cap)).astype(np.float32)
+        back = np.asarray(ops.band_scatter(
+            jnp.asarray(slots), jnp.asarray(vals), C))
+        for b in range(B):
+            cols = np.flatnonzero(mask[b])[:cap]
+            for j, c in enumerate(cols):
+                assert back[b, c] == vals[b, j]
+            others = np.setdiff1d(np.arange(C), cols)
+            assert np.isinf(back[b, others]).all()
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(1, 5), st.integers(1, 24), st.integers(1, 16),
+           st.integers(1, 12), st.integers(0, 2**31 - 1))
+    def test_compact_gather_matches_dense_rerank(B, C, cap, d, seed):
+        """compact_gather_sq_dists == the dense gather oracle on every
+        within-capacity band slot; +inf (never a spurious keep) on
+        overflow and unmasked slots, and on NO_NODE ids."""
+        rng = np.random.default_rng(seed)
+        N = 30
+        vecs = rng.normal(size=(N, d)).astype(np.float32)
+        x = rng.normal(size=(B, d)).astype(np.float32)
+        ids = rng.integers(0, N, size=(B, C)).astype(np.int32)
+        ids[rng.random((B, C)) < 0.15] = -1
+        mask = rng.random((B, C)) < 0.5
+        exact, within, n_masked = ops.compact_gather_sq_dists(
+            jnp.asarray(vecs), jnp.asarray(x), jnp.asarray(ids),
+            jnp.asarray(mask), cap, impl="ref")
+        exact, within = np.asarray(exact), np.asarray(within)
+        dense = np.asarray(ops.gather_sq_dists(
+            jnp.asarray(vecs), jnp.asarray(x), jnp.asarray(ids),
+            impl="ref"))
+        pos = np.cumsum(mask, axis=1) - 1
+        exp_within = mask & (pos < cap)
+        assert (within == exp_within).all()
+        assert (np.asarray(n_masked) == mask.sum(axis=1)).all()
+        ok = within & (ids >= 0)
+        np.testing.assert_allclose(exact[ok], dense[ok], rtol=1e-6)
+        assert np.isinf(exact[~ok]).all()
