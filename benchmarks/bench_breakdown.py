@@ -1,7 +1,8 @@
 """Paper Fig. 12: latency breakdown — greedy search vs BFS/BBFS vs other.
 
 Also the compressed-storage comparison: ``run_quant`` reruns methods with
-``quant ∈ {off, sq8, sketch8}`` on a high-dim (d ≥ 256) dataset — each
+``quant ∈ {off, sq8, sketch8, pdx8, sketchpdx8}`` on a high-dim (d ≥ 256)
+dataset — each
 mode names a ``FilterCascade`` tier chain (``quant.TIERS_BY_MODE``) the
 engine assembles per index artifact — and reports the per-tier split of
 distance work and bytes moved per emitted pair (``common.dist_bytes`` —
@@ -21,7 +22,7 @@ from benchmarks.common import (SCALES, dist_bytes, emit, run_method,
 
 METHODS = ("index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 QUANT_METHODS = ("nlj", "es", "es_mi", "es_mi_adapt")
-QUANT_MODES = ("off", "sq8", "sketch8")
+QUANT_MODES = ("off", "sq8", "sketch8", "pdx8", "sketchpdx8")
 
 
 def run(scale: str = "ci", *, regime: str = "manifold",
@@ -74,7 +75,11 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
                     n_esc8=s.n_esc8,
                     sketch_prune=(1.0 - s.n_esc8 / max(s.n_dist, 1)
                                   if quant == "sketch8" else 0.0),
-                    n_rerank=s.n_rerank, dist_bytes=nbytes,
+                    n_rerank=s.n_rerank,
+                    # PDX early exit: fraction of candidate dimensions
+                    # the slab kernels actually scanned (1.0 elsewhere)
+                    dims_scanned_frac=s.dims_scanned_frac,
+                    dist_bytes=nbytes,
                     # NaN, not 1.0, when the caller skipped the f32 leg:
                     # a fake unity ratio would read as "same bytes as f32"
                     bytes_vs_f32=(nbytes / max(base_bytes, 1)
@@ -88,8 +93,8 @@ def run_quant(scale: str = "ci_hd", *, regime: str = "manifold",
 def main(scale: str = "ci") -> None:
     emit(run(scale))
     # separate section: different schema than the breakdown table above
-    print("\n# quant: per-tier distance work and bytes, "
-          "f32 vs sq8 vs sketch8 (d >= 256)")
+    print("\n# quant: per-tier distance work, bytes, and dims scanned — "
+          "f32 vs sq8 vs sketch8 vs pdx8 vs sketchpdx8 (d >= 256)")
     emit(run_quant("full_hd" if scale == "full" else "ci_hd"))
 
 

@@ -11,10 +11,13 @@ bytes moved per emitted pair, so an f32-vs-int8 sweep is
 once with the double-buffered traversal⇆assembly overlap and once with
 the sequential reference path, asserting the pair sets are identical and
 reporting wall-clock plus the band-compacted re-rank's f32 gather bytes
-per pair. ``--json PATH`` writes both tables as a JSON artifact
-(``BENCH_overall.json``) — CI runs the ``--overlap-only`` form as a smoke
-step and uploads it so the serving-path perf trajectory is recorded per
-commit alongside ``BENCH_offline.json``.
+per pair. ``run_early_exit`` is the PDX analogue: exit-on vs exit-off
+wall-clock under ``pdx8`` on the clustered high-dim dataset, asserting
+identical pair sets and reporting ``dims_scanned_frac``. ``--json PATH``
+writes all tables as a JSON artifact (``BENCH_overall.json``) — CI runs
+the ``--overlap-only`` form as a smoke step and uploads it so the
+serving-path perf trajectory is recorded per commit alongside
+``BENCH_offline.json``.
 """
 from __future__ import annotations
 
@@ -93,13 +96,57 @@ def run_overlap(scale: str = "ci", *, regime: str = "manifold",
     return rows
 
 
+def run_early_exit(scale: str = "ci_hd", *, regime: str = "clustered",
+                   theta_idx: int = 2,
+                   methods=("nlj", "es_mi"),
+                   quant: str = "pdx8") -> list[dict]:
+    """PDX early-exit breakdown: exit-on vs exit-off (full slab scans)
+    wall-clock on identical configs, on the clustered high-dim dataset
+    where lanes actually retire early.
+
+    Each method cell runs both paths and *asserts* the emitted pair sets
+    match bit-for-bit (``pairs_match`` — the tail bound is certified, so
+    exit is a pure wall-clock change); ``dims_scanned_frac`` is the
+    fraction of candidate dimensions the slab kernels read with exit on
+    (< 1.0 is the tier earning its keep; off reports exactly 1.0).
+    """
+    from repro.core.types import TraversalConfig
+    dim = SCALES[scale]["dim"]
+    theta = theta_grid(regime, scale)[theta_idx - 1]
+    rows = []
+    for method in methods:
+        cells = {}
+        for ee in (True, False):
+            res, dt, rec = run_method(regime, method, theta, scale=scale,
+                                      quant=quant,
+                                      tcfg=TraversalConfig(early_exit=ee))
+            cells[ee] = (res, dt, rec)
+        res_on, dt_on, rec_on = cells[True]
+        res_off, dt_off, _ = cells[False]
+        match = res_on.pair_set() == res_off.pair_set()
+        assert match, (method, quant,
+                       len(res_on.pair_set() ^ res_off.pair_set()))
+        rows.append(dict(
+            dataset=regime, dim=dim, theta_idx=theta_idx, theta=theta,
+            method=method, quant=quant,
+            exit_on_s=dt_on, exit_off_s=dt_off,
+            speedup=dt_off / max(dt_on, 1e-9),
+            pairs=len(res_on.pairs), pairs_match=match,
+            recall=rec_on,
+            dims_scanned_frac=res_on.stats.dims_scanned_frac,
+            dims_scanned_frac_off=res_off.stats.dims_scanned_frac,
+            bytes_per_pair=(dist_bytes(res_on, dim, quant)
+                            / max(len(res_on.pairs), 1))))
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="ci")
     ap.add_argument("--regimes", nargs="*", default=list(REGIMES))
     ap.add_argument("--overlap-only", action="store_true",
-                    help="run only the wave-pipeline breakdown (the CI "
-                         "smoke configuration)")
+                    help="run only the wave-pipeline and early-exit "
+                         "breakdowns (the CI smoke configuration)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + metadata as a JSON artifact "
                          "(e.g. BENCH_overall.json for the CI upload)")
@@ -107,11 +154,14 @@ def main(argv=None) -> None:
     rows = ([] if args.overlap_only
             else run(args.scale, regimes=tuple(args.regimes)))
     overlap_rows = run_overlap(args.scale, regime=args.regimes[0])
+    early_exit_rows = run_early_exit(
+        "full_hd" if args.scale == "full" else "ci_hd")
     emit(rows)
     emit(overlap_rows)
+    emit(early_exit_rows)
     if args.json:
         payload = dict(bench="overall", scale=args.scale, rows=rows,
-                       overlap=overlap_rows)
+                       overlap=overlap_rows, early_exit=early_exit_rows)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -130,6 +130,15 @@ def dist_bytes(res: JoinResult, dim: int, quant: str) -> int:
     if quant == "sketch8":
         return (res.stats.n_dist * (dim // 8 + SKETCH_META_BYTES)
                 + res.stats.n_esc8 * dim + res.stats.n_rerank * dim * 4)
+    if quant in ("pdx8", "sketchpdx8"):
+        # PDX lanes stop reading at retirement: scale the slab traffic
+        # (int8 filter rows and f32 re-rank rows alike) by the fraction
+        # of dimensions actually scanned
+        frac = res.stats.dims_scanned_frac
+        filt = (res.stats.n_dist * (dim // 8 + SKETCH_META_BYTES)
+                + res.stats.n_esc8 * dim * frac
+                if quant == "sketchpdx8" else res.stats.n_dist * dim * frac)
+        return int(filt + res.stats.n_rerank * dim * 4 * frac)
     per_dist = dim * (1 if quant == "sq8" else 4)
     return res.stats.n_dist * per_dist + res.stats.n_rerank * dim * 4
 

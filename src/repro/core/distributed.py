@@ -33,7 +33,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import compat, traversal
-from repro.core.types import NO_NODE, GraphIndex, TraversalConfig
+from repro.core.types import (NO_NODE, GraphIndex, TraversalConfig,
+                              early_exit_enabled)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -193,6 +194,72 @@ def sketch_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
         iso=stores[0].iso)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedPdxStore:
+    """Per-shard PdxStores, stacked on a leading shard dim.
+
+    Each shard permutes dimensions by its *own* variance order and
+    quantizes on its own per-slab grid (local statistics ⇒ earlier
+    decisive slabs and tighter scales per shard); ``slab``/``dim`` are
+    shared statics since every shard compresses the same-width table.
+    """
+    perm: Array            # (S, d) int32 per-shard dim permutations
+    vp: Array              # (S, M, SL·slab) f32
+    ftail: Array           # (S, M, SL) f32
+    q: Array               # (S, M, SL·slab) int8
+    scales: Array          # (S, SL) f32
+    qslab: Array           # (S, M, SL) f32
+    qtail: Array           # (S, M, SL) f32
+    norms: Array           # (S, M) f32
+    err: Array             # (S, M) f32
+    slab: int = dataclasses.field(metadata=dict(static=True))
+    dim: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nbytes(self) -> int:
+        from repro.quant.store import arrays_nbytes
+        return arrays_nbytes(self.perm, self.vp, self.ftail, self.q,
+                             self.scales, self.qslab, self.qtail,
+                             self.norms, self.err)
+
+
+def pdx_sharded(smi: ShardedMergedIndex, *, n_data: int | None = None,
+                slab: int | None = None) -> ShardedPdxStore:
+    """Build one PdxStore per shard of a sharded merged index.
+
+    Like ``quantize_sharded``, the last shard's far-away sentinel pad
+    rows (when ``n_data`` doesn't divide evenly) are masked out of both
+    the variance permutation and the per-slab scale statistics; they are
+    still encoded (they clip, with exact ``err``), so the certified
+    bounds stay sound and the exact re-rank rejects them as usual.
+    """
+    from repro.quant import pdx as pdx_mod
+
+    sl = slab or pdx_mod.DEFAULT_SLAB
+    S, M, _ = smi.vecs.shape
+    pad = S * smi.shard_size - n_data if n_data is not None else 0
+    stores = []
+    for s in range(S):
+        mask = None
+        if pad and s == S - 1:
+            mask = np.ones(M, bool)
+            mask[smi.shard_size - pad:smi.shard_size] = False
+        stores.append(pdx_mod.build_pdx(smi.vecs[s], slab=sl,
+                                        scale_rows=mask))
+    return ShardedPdxStore(
+        perm=jnp.stack([s.perm for s in stores]),
+        vp=jnp.stack([s.vp for s in stores]),
+        ftail=jnp.stack([s.ftail for s in stores]),
+        q=jnp.stack([s.q for s in stores]),
+        scales=jnp.stack([s.scales for s in stores]),
+        qslab=jnp.stack([s.qslab for s in stores]),
+        qtail=jnp.stack([s.qtail for s in stores]),
+        norms=jnp.stack([s.norms for s in stores]),
+        err=jnp.stack([s.err for s in stores]),
+        slab=stores[0].slab, dim=stores[0].dim)
+
+
 def build_sharded_tier(name: str, smi: ShardedMergedIndex, *,
                        n_data: int | None = None):
     """Build the per-shard stores behind one cascade tier — the sharded
@@ -201,6 +268,8 @@ def build_sharded_tier(name: str, smi: ShardedMergedIndex, *,
         return quantize_sharded(smi, n_data=n_data)
     if name == "sketch1":
         return sketch_sharded(smi, n_data=n_data)
+    if name == "pdx":
+        return pdx_sharded(smi, n_data=n_data)
     raise ValueError(f"unknown sharded tier {name!r}")
 
 
@@ -223,11 +292,15 @@ class ShardedCascade:
 
 
 def _local_cascade(names, qq, qscales, qnorms, qerr, group_size,
-                   sc, scum, smu, srot, siso, shs):
+                   sc, scum, smu, srot, siso, shs,
+                   pperm, pvp, pftail, pq, pscales, pqslab, pqtail,
+                   pnorms, perr, pdx_slab, pdx_dim):
     """Reconstruct one shard's local ``FilterCascade`` from the sliced
     shard_map arguments (leading shard dim already indexed away by the
     caller's ``[0]``)."""
-    from repro.quant.cascade import Int8Tier, SketchTier, FilterCascade
+    from repro.quant.cascade import (FilterCascade, Int8Tier, PdxTier,
+                                     SketchTier)
+    from repro.quant.pdx import PdxStore
     from repro.quant.sketch import SketchStore
     from repro.quant.store import QuantStore
 
@@ -241,6 +314,13 @@ def _local_cascade(names, qq, qscales, qnorms, qerr, group_size,
             # codes/cum/mu are per-shard; rot/iso/hs shared (replicated)
             tiers.append(SketchTier(SketchStore(
                 codes=sc, cum=scum, hs=shs, mu=smu, rot=srot, iso=siso)))
+        elif name == "pdx":
+            # everything per-shard (local variance order + slab grid);
+            # slab/dim are shared statics
+            tiers.append(PdxTier(PdxStore(
+                perm=pperm, vp=pvp, ftail=pftail, q=pq, scales=pscales,
+                qslab=pqslab, qtail=pqtail, norms=pnorms, err=perr,
+                slab=pdx_slab, dim=pdx_dim)))
         else:
             # a new tier needs its stacked-store mirror here (and in
             # build_sharded_tier / the shard_map arg flattening) —
@@ -251,11 +331,14 @@ def _local_cascade(names, qq, qscales, qnorms, qerr, group_size,
 
 def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                    sc, scum, smu, srot, siso, shs,
+                   pperm, pvp, pftail, pq, pscales, pqslab, pqtail,
+                   pnorms, perr,
                    xw, qids, lane_valid, *,
                    theta: float, cfg: TraversalConfig, shard_size: int,
                    hybrid: bool, axis: str, group_size: int,
                    tier_names: tuple, n_shards: int, pad: int,
-                   rerank_cap: int):
+                   rerank_cap: int, pdx_slab: int, pdx_dim: int,
+                   early_exit: bool):
     """Per-shard MI join body (runs under shard_map; all-local compute).
 
     With ``tier_names`` the shard reconstructs its *local*
@@ -280,7 +363,10 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     rank = jax.lax.axis_index(axis).astype(jnp.int32)
     cascade = _local_cascade(tier_names, qq[0], qscales[0], qnorms[0],
                              qerr[0], group_size, sc[0], scum[0], smu[0],
-                             srot, siso, shs)
+                             srot, siso, shs,
+                             pperm[0], pvp[0], pftail[0], pq[0],
+                             pscales[0], pqslab[0], pqtail[0], pnorms[0],
+                             perr[0], pdx_slab, pdx_dim)
     qc = cascade.encode(xw) if cascade is not None else None
     B = xw.shape[0]
     W = traversal.bitmap_words(vecs.shape[0])
@@ -318,6 +404,8 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     keep = jnp.arange(C)[None, :] < r.n_pool[:, None]
     n_rerank = jnp.zeros((B,), jnp.int32)
     n_band_over = jnp.zeros((B,), jnp.int32)
+    n_dims_scanned = jnp.zeros((), jnp.int32)
+    n_dims_total = jnp.zeros((), jnp.int32)
     if cascade is not None:
         # in-shard filter-then-rerank, mirroring waves._finalize_wave:
         # the confirming tier splits the pool (pool_band); certified-sure
@@ -330,8 +418,23 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
         amb = keep & amb
         n_rerank = jnp.sum(amb, axis=1).astype(jnp.int32)
         cap = min(rerank_cap, C) if rerank_cap > 0 else C
-        exact, within, _ = ops.compact_gather_sq_dists(
-            vecs, xw, r.pool_idx, amb, cap, impl=cfg.dist_impl)
+        pdx = cascade.tier("pdx")
+        if pdx is not None:
+            # band re-rank through the PDX gather kernel: the early-exit
+            # variant of the f32 slab sweep, against the shard-local
+            # PdxStore mirror (same on/off pair set — see waves)
+            st = pdx.store
+            qcp = qc[cascade.names.index("pdx")]
+            (exact, within, _, n_dims_scanned,
+             n_dims_total) = ops.pdx_compact_gather_sq_dists(
+                st.vp, st.ftail, st.ftail[:, 0], qcp.vp, qcp.ftail,
+                qcp.ftail[:, 0], r.pool_idx, amb, cap, th2, dim=st.dim,
+                early_exit=early_exit, impl=cfg.dist_impl)
+            # exact is +inf where the kernel retired the lane — retired
+            # certifies > θ², so the keep rule below is on/off-invariant
+        else:
+            exact, within, _ = ops.compact_gather_sq_dists(
+                vecs, xw, r.pool_idx, amb, cap, impl=cfg.dist_impl)
         keep = sure | (within & (exact < th2))
         n_band_over = jnp.sum(amb & ~within, axis=1).astype(jnp.int32)
     # globalize result ids
@@ -339,7 +442,7 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                      r.pool_idx + rank * shard_size, NO_NODE)
     return (gids[None], r.pool_dist[None], keep[None], r.overflow[None],
             r.n_dist[None], n_rerank[None], r.n_esc[None],
-            n_band_over[None])
+            n_band_over[None], n_dims_scanned[None], n_dims_total[None])
 
 
 def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
@@ -377,25 +480,33 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
     names = cascade.names if cascade is not None else ()
     qstore = cascade.store("int8") if cascade is not None else None
     sstore = cascade.store("sketch1") if cascade is not None else None
+    pstore = cascade.store("pdx") if cascade is not None else None
     quant = qstore is not None
     sketch = sstore is not None
-    assert not (sketch and not quant), "sketch tier requires the int8 tier"
+    pdx = pstore is not None
+    assert not (sketch and not (quant or pdx)), \
+        "sketch tier requires a confirming tier (int8 or pdx)"
     pad = smi.n_shards * smi.shard_size - n_data if n_data is not None else 0
     body = functools.partial(
         _local_mi_join, theta=theta, cfg=cfg, shard_size=smi.shard_size,
         hybrid=hybrid, axis=flat,
         group_size=qstore.group_size if quant else 0, tier_names=names,
         n_shards=smi.n_shards, pad=pad,
-        rerank_cap=cfg.rerank_cap if rerank_cap is None else rerank_cap)
+        rerank_cap=cfg.rerank_cap if rerank_cap is None else rerank_cap,
+        pdx_slab=pstore.slab if pdx else 1,
+        pdx_dim=pstore.dim if pdx else 0,
+        early_exit=early_exit_enabled(cfg) if pdx else False)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
         in_specs=(spec_idx, spec_idx, spec_idx, spec_idx,
                   spec_idx, spec_idx, spec_idx, spec_idx,
                   spec_idx, spec_idx, spec_idx, P(), P(), P(),
+                  spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
+                  spec_idx, spec_idx, spec_idx, spec_idx,
                   P(), P(), P()),
         out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
-                   spec_idx, spec_idx, spec_idx),
+                   spec_idx, spec_idx, spec_idx, spec_idx, spec_idx),
         check_vma=False)
 
     S = smi.n_shards
@@ -419,12 +530,30 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                   jnp.zeros((1, 1), jnp.float32),
                   jnp.zeros((), jnp.float32),
                   jnp.zeros((1,), jnp.int32))
+    if pdx:
+        qargs += (pstore.perm, pstore.vp, pstore.ftail, pstore.q,
+                  pstore.scales, pstore.qslab, pstore.qtail,
+                  pstore.norms, pstore.err)
+    else:
+        qargs += (jnp.zeros((S, 1), jnp.int32),
+                  jnp.zeros((S, 1, 1), jnp.float32),
+                  jnp.zeros((S, 1, 1), jnp.float32),
+                  jnp.zeros((S, 1, 1), jnp.int8),
+                  jnp.zeros((S, 1), jnp.float32),
+                  jnp.zeros((S, 1, 1), jnp.float32),
+                  jnp.zeros((S, 1, 1), jnp.float32),
+                  jnp.zeros((S, 1), jnp.float32),
+                  jnp.zeros((S, 1), jnp.float32))
 
     @jax.jit
     def step(vecs, nbrs, mnd, start, qq, qs, qn, qe,
-             sc, scum, smu, srot, siso, shs, xw, qids, lane_valid):
+             sc, scum, smu, srot, siso, shs,
+             pperm, pvp, pftl, pq8, psc, pqsl, pqtl, pn, pe,
+             xw, qids, lane_valid):
         return mapped(vecs, nbrs, mnd, start, qq, qs, qn, qe,
-                      sc, scum, smu, srot, siso, shs, xw, qids, lane_valid)
+                      sc, scum, smu, srot, siso, shs,
+                      pperm, pvp, pftl, pq8, psc, pqsl, pqtl, pn, pe,
+                      xw, qids, lane_valid)
 
     return step, qargs
 
@@ -464,7 +593,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
     cur_cap = cap0 if cascade is not None else C
     pairs_out = []
     stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0,
-                 n_rerank_gather=0,
+                 n_rerank_gather=0, n_dims_scanned=0, n_dims_total=0,
                  band_per_shard=np.zeros(smi.n_shards, np.int64))
 
     def dispatch(padded, lane_valid, cap: int):
@@ -483,7 +612,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         nonlocal cur_cap
         padded, lane_valid, outs = wave
         (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
-         n_band_over) = outs
+         n_band_over, n_dims_s, n_dims_t) = outs
         over = np.asarray(n_band_over)[:, lane_valid]
         if over.sum() > 0:
             # a shard's band outgrew the compaction capacity: re-rank
@@ -492,7 +621,8 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
             needed = int(np.asarray(n_rerank)[:, lane_valid].max())
             cur_cap = ops.grow_cap(cur_cap, needed, C)
             (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
-             n_band_over) = dispatch(padded, lane_valid, cur_cap)
+             n_band_over, n_dims_s, n_dims_t) = dispatch(
+                padded, lane_valid, cur_cap)
         gids = np.asarray(gids)          # (S, B, C)
         # (S, B, C) kept pool slots, restricted to real lanes
         mask = np.asarray(keep) & lane_valid[None, :, None]
@@ -502,6 +632,8 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
         stats["n_rerank"] += int(np.asarray(n_rerank)[:, lane_valid].sum())
         stats["n_esc8"] += int(np.asarray(n_esc)[:, lane_valid].sum())
+        stats["n_dims_scanned"] += int(np.asarray(n_dims_s).sum())
+        stats["n_dims_total"] += int(np.asarray(n_dims_t).sum())
         stats["band_per_shard"] += np.asarray(n_rerank)[:, lane_valid].sum(
             axis=1).astype(np.int64)
 

@@ -36,7 +36,7 @@ from repro.kernels import ops
 
 def cascade_join_pairs(X, Y, theta: float, cascade=None, *,
                        block: int = 512, pair_block: int = 1 << 15,
-                       impl: str | None = None
+                       impl: str | None = None, early_exit: bool = True
                        ) -> tuple[np.ndarray, dict]:
     """Exact NLJ through a ``FilterCascade``'s certified-bounds chain.
 
@@ -58,6 +58,15 @@ def cascade_join_pairs(X, Y, theta: float, cascade=None, *,
     better-conditioned difference form — on such boundary pairs the
     cascade path agrees with float64.)
 
+    An early-exitable tier 0 (``PdxTier``) runs its pairwise sweep
+    against the threshold itself (``pairwise_bounds_ee``): with
+    ``early_exit`` its kernel retires lanes mid-vector on the certified
+    tail bound. Retirement implies the lane's certified lower bound
+    exceeds θ², so the reject/sure/band partition — and therefore the
+    emitted pairs and every count — is identical on/off; only
+    ``counts["dims_scanned"]`` (dimensions actually scanned, vs
+    ``counts["dims_total"]``) changes.
+
     Returns ``(pairs, counts)`` — the exact pair array plus per-tier
     survivor counts: ``counts["escalated"]`` has one entry per tier
     beyond the first (pairs that tier had to evaluate) and
@@ -67,7 +76,8 @@ def cascade_join_pairs(X, Y, theta: float, cascade=None, *,
     Y = jnp.asarray(Y, jnp.float32)
     tiers = tuple(cascade.tiers) if cascade is not None else ()
     th2 = np.float32(theta) ** 2
-    counts = {"escalated": [0] * max(len(tiers) - 1, 0), "n_rerank": 0}
+    counts = {"escalated": [0] * max(len(tiers) - 1, 0), "n_rerank": 0,
+              "dims_scanned": 0, "dims_total": 0}
 
     if not tiers:
         counts["escalated"] = ()
@@ -87,7 +97,16 @@ def cascade_join_pairs(X, Y, theta: float, cascade=None, *,
         q1 = min(q0 + block, X.shape[0])
         xb = X[q0:q1]
         qc0 = tiers[0].encode(xb)
-        lb, ub = tiers[0].pairwise_bounds(qc0, impl=impl)
+        if getattr(tiers[0], "early_exitable", False):
+            lb, ub, nscan = tiers[0].pairwise_bounds_ee(
+                qc0, theta=jnp.float32(theta), early_exit=early_exit,
+                impl=impl)
+            st0 = tiers[0].store
+            dims = np.minimum(np.asarray(nscan) * st0.slab, st0.dim)
+            counts["dims_scanned"] += int(dims.sum())
+            counts["dims_total"] += int(dims.size) * st0.dim
+        else:
+            lb, ub = tiers[0].pairwise_bounds(qc0, impl=impl)
         lb = np.asarray(lb)
         if ub is not None and len(tiers) == 1:
             # single tier with upper bounds: emit certified-sure pairs

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
@@ -78,6 +79,15 @@ class TraversalConfig:
                        power-of-two capacity (sticky per runner) — the
                        emitted pair set never depends on the cap. ≤ 0
                        disables compaction (full ``pool_cap`` width).
+    early_exit       — PDX modes (``pdx8``/``sketchpdx8``): retire
+                       candidate lanes mid-vector once the slab-partial
+                       sum plus the certified remaining-dims bound
+                       exceeds the threshold (see ``quant/pdx.py``).
+                       Retirement is certified, so the emitted pair set
+                       is provably identical on/off; off exists for
+                       bisection and as the wall-clock baseline. The
+                       REPRO_EARLY_EXIT env var overrides at run time.
+                       Ignored by non-PDX modes.
     """
     beam_width: int = 256
     expand_per_iter: int = 4
@@ -89,7 +99,20 @@ class TraversalConfig:
     seeds_max: int = 16
     max_iters: int = 4096
     rerank_cap: int = 128
+    early_exit: bool = True
     dist_impl: str | None = None   # kernels.ops impl override
+
+
+def early_exit_enabled(tcfg: TraversalConfig) -> bool:
+    """``tcfg.early_exit``, unless the ``REPRO_EARLY_EXIT`` env var
+    overrides it (CI bisection: ``REPRO_EARLY_EXIT=off`` forces the
+    full-scan PDX kernels everywhere without touching configs). An empty
+    value counts as unset, so CI matrices can template the variable per
+    leg. Mirrors ``engine.waves.overlap_enabled``."""
+    env = os.environ.get("REPRO_EARLY_EXIT")
+    if env is not None and env.strip():
+        return env.strip().lower() not in ("0", "off", "false", "no")
+    return tcfg.early_exit
 
 
 METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
@@ -100,11 +123,14 @@ METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")
 # exact f32 kernel (emitted pairs are identical — see quant/store.py);
 # "sketch8" adds the 1-bit SketchStore tier above sq8 (progressive
 # refinement: Hamming-sketch bounds prune first, int8 confirms survivors,
-# f32 re-ranks the band — see quant/sketch.py).
-QUANT_MODES = ("off", "sq8", "sketch8")
+# f32 re-ranks the band — see quant/sketch.py); "pdx8" swaps the int8
+# tier for the dimension-partitioned PdxTier whose kernels early-exit
+# mid-vector on certified tail bounds (see quant/pdx.py); "sketchpdx8"
+# stacks the 1-bit sketch above it.
+QUANT_MODES = ("off", "sq8", "sketch8", "pdx8", "sketchpdx8")
 
 # Modes that route traversal through certified-lower-bound filtering.
-QUANT_FILTER_MODES = ("sq8", "sketch8")
+QUANT_FILTER_MODES = ("sq8", "sketch8", "pdx8", "sketchpdx8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,14 +186,30 @@ class JoinStats:
     band_occ_per_shard: tuple = () # sharded path: ambiguous-band entries
     #                                re-ranked per shard (aligned with
     #                                shard ids; sums to n_rerank)
+    n_dims_scanned: int = 0        # PDX modes: dimensions actually scanned
+    #                                by early-exit kernels, summed over
+    #                                candidate lanes (retired lanes count
+    #                                only the slabs they saw)
+    n_dims_total: int = 0          # PDX modes: lanes × full dim — the
+    #                                denominator of dims_scanned_frac
 
     @property
     def total_seconds(self) -> float:
         return (self.greedy_seconds + self.expand_seconds
                 + self.other_seconds + self.wait_seconds)
 
+    @property
+    def dims_scanned_frac(self) -> float:
+        """Mean fraction of dimensions scanned per candidate lane by the
+        PDX early-exit kernels (1.0 when early exit is off, no PDX tier
+        ran, or no lanes were scanned)."""
+        if self.n_dims_total <= 0:
+            return 1.0
+        return self.n_dims_scanned / self.n_dims_total
+
     def as_dict(self) -> dict[str, Any]:
-        return dict(dataclasses.asdict(self), total_seconds=self.total_seconds)
+        return dict(dataclasses.asdict(self), total_seconds=self.total_seconds,
+                    dims_scanned_frac=self.dims_scanned_frac)
 
 
 @dataclasses.dataclass

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import (QUANT_FILTER_MODES, GraphIndex, JoinConfig,
-                              JoinResult, JoinStats)
+                              JoinResult, JoinStats, early_exit_enabled)
 from repro.engine import waves as W
 from repro.kernels import ops
 
@@ -151,7 +151,7 @@ class JoinEngine:
         self._tier_stores = _LRU(4 * max_cached_indexes)
         self.build_counts: dict[str, int] = {
             "index_y": 0, "index_x": 0, "merged": 0, "sharded": 0,
-            "quant": 0, "sketch": 0}
+            "quant": 0, "sketch": 0, "pdx": 0}
         self.build_seconds = 0.0
         self.serve_stats: dict[str, int] = {
             "joins": 0, "batches": 0, "queries": 0, "pairs": 0}
@@ -381,10 +381,13 @@ class JoinEngine:
             t0 = time.perf_counter()
             casc = self.cascade_for(("y",), self.Y, cfg, stats)
             pairs, counts = cascade_join_pairs(
-                X, self.Y, cfg.theta, casc, impl=cfg.traversal.dist_impl)
+                X, self.Y, cfg.theta, casc, impl=cfg.traversal.dist_impl,
+                early_exit=early_exit_enabled(cfg.traversal))
             stats.n_rerank = counts["n_rerank"]
             if counts["escalated"]:
                 stats.n_esc8 = counts["escalated"][0]
+            stats.n_dims_scanned += counts["dims_scanned"]
+            stats.n_dims_total += counts["dims_total"]
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = int(X.shape[0]) * int(self.Y.shape[0])
             return self._done(JoinResult(pairs=pairs, stats=stats), X)
@@ -449,6 +452,8 @@ class JoinEngine:
         stats.n_rerank += int(dstats.get("n_rerank", 0))
         stats.n_esc8 += int(dstats.get("n_esc8", 0))
         stats.n_rerank_gather += int(dstats.get("n_rerank_gather", 0))
+        stats.n_dims_scanned += int(dstats.get("n_dims_scanned", 0))
+        stats.n_dims_total += int(dstats.get("n_dims_total", 0))
         stats.band_occ_per_shard = tuple(
             int(b) for b in dstats.get("band_per_shard", ()))
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
@@ -499,10 +504,13 @@ class JoinEngine:
             casc = self.cascade_for(("y",), self.Y, cfg, stats)
             pairs, counts = cascade_join_pairs(
                 X_batch, self.Y, cfg.theta, casc,
-                impl=cfg.traversal.dist_impl)
+                impl=cfg.traversal.dist_impl,
+                early_exit=early_exit_enabled(cfg.traversal))
             stats.n_rerank = counts["n_rerank"]
             if counts["escalated"]:
                 stats.n_esc8 = counts["escalated"][0]
+            stats.n_dims_scanned += counts["dims_scanned"]
+            stats.n_dims_total += counts["dims_total"]
             pairs[:, 0] += offset
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = nb * int(self.Y.shape[0])

@@ -59,7 +59,7 @@ import numpy as np
 from repro.core import ordering, traversal
 from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
-                              TraversalConfig)
+                              TraversalConfig, early_exit_enabled)
 from repro.kernels import ops
 
 Array = jax.Array
@@ -136,10 +136,11 @@ def collect_pairs(qids: np.ndarray, keep: np.ndarray,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("cap", "dist_impl", "seed_mode",
-                                             "seeds_max"))
+                                             "seeds_max", "early_exit"))
 def _finalize_wave(cascade, qc, vecs, xw, pool_idx, pool_dist, n_pool,
                    lane_valid, best_idx, th2, *, cap: int,
-                   dist_impl: str | None, seed_mode: str, seeds_max: int):
+                   dist_impl: str | None, seed_mode: str, seeds_max: int,
+                   early_exit: bool = False):
     """Device epilogue of one wave: split the pooled lower-bound
     survivors into certified-sure vs ambiguous, re-rank only the
     band-compacted ambiguous entries with the exact scalar-prefetch
@@ -150,7 +151,16 @@ def _finalize_wave(cascade, qc, vecs, xw, pool_idx, pool_dist, n_pool,
     (sure/amb masks down, ids back up, exact dists down) with device
     arrays the caller fetches in one fused ``device_get``.
 
-    Returns ``(keep, dist, n_amb, seed_ids, seed_valid)``:
+    Cascades with a PDX tier route the band through the dimension-
+    partitioned gather kernel instead of the full-``d`` f32 gather: the
+    re-rank accumulates slab by slab over the store's PDX mirror and —
+    with ``early_exit`` — retires lanes whose partial sum plus certified
+    tail bound already exceeds θ². A retired lane reads +inf, but its
+    full sum is certified ≥ θ², so ``keep`` (and, via the ``exact < th2``
+    dist rule below, ``dist``) are identical on/off.
+
+    Returns ``(keep, dist, n_amb, seed_ids, seed_valid, n_dims_scanned,
+    n_dims_total)``:
       * ``keep``   (B, C) — emitted slots (post-rerank survivors);
       * ``dist``   (B, C) — exact where re-ranked, the certified lower
         bound on certified-sure slots, +inf elsewhere;
@@ -162,20 +172,39 @@ def _finalize_wave(cascade, qc, vecs, xw, pool_idx, pool_dist, n_pool,
         ``es_hws``, the single best node for ``es_sws``, empty
         otherwise. The (dist, id) key makes the order total, so the
         device sort and the host cache (``update_sws_cache``) agree
-        bit-for-bit.
+        bit-for-bit;
+      * ``n_dims_scanned`` / ``n_dims_total`` () int32 — PDX re-rank
+        dimension-scan counters (zero without a PDX tier).
     """
     B, C = pool_idx.shape
     keep = (jnp.arange(C)[None, :] < n_pool[:, None]) & lane_valid[:, None]
     dist = pool_dist
     n_amb = jnp.zeros((B,), jnp.int32)
+    n_dims_scanned = jnp.zeros((), jnp.int32)
+    n_dims_total = jnp.zeros((), jnp.int32)
     if cascade is not None:
         sure, amb = cascade.pool_band(qc, pool_dist, pool_idx, th2)
         sure = keep & sure
         amb = keep & amb
-        exact, within, n_amb = ops.compact_gather_sq_dists(
-            vecs, xw, pool_idx, amb, min(cap, C), impl=dist_impl)
-        keep = sure | (within & (exact < th2))
-        dist = jnp.where(within & jnp.isfinite(exact), exact, pool_dist)
+        pdx = cascade.tier("pdx")
+        if pdx is not None:
+            st = pdx.store
+            qcp = qc[cascade.names.index("pdx")]
+            (exact, within, n_amb, n_dims_scanned,
+             n_dims_total) = ops.pdx_compact_gather_sq_dists(
+                st.vp, st.ftail, st.ftail[:, 0], qcp.vp, qcp.ftail,
+                qcp.ftail[:, 0], pool_idx, amb, min(cap, C), th2,
+                dim=st.dim, early_exit=early_exit, impl=dist_impl)
+            keep = sure | (within & (exact < th2))
+            # exact < th2 (not isfinite): an early-exited slot reads +inf
+            # here but a finite certified-out value with exit off — both
+            # fall back to pool_dist, keeping seed feedback identical.
+            dist = jnp.where(within & (exact < th2), exact, pool_dist)
+        else:
+            exact, within, n_amb = ops.compact_gather_sq_dists(
+                vecs, xw, pool_idx, amb, min(cap, C), impl=dist_impl)
+            keep = sure | (within & (exact < th2))
+            dist = jnp.where(within & jnp.isfinite(exact), exact, pool_dist)
     dist = jnp.where(keep, dist, _INF)
     if seed_mode == "es_hws":
         S = min(seeds_max, C)
@@ -188,7 +217,8 @@ def _finalize_wave(cascade, qc, vecs, xw, pool_idx, pool_dist, n_pool,
     else:
         seed_ids = jnp.zeros((B, 0), jnp.int32)
         seed_valid = jnp.zeros((B, 0), bool)
-    return keep, dist, n_amb, seed_ids, seed_valid
+    return (keep, dist, n_amb, seed_ids, seed_valid, n_dims_scanned,
+            n_dims_total)
 
 
 @dataclasses.dataclass
@@ -217,11 +247,14 @@ class WaveHandles:
     n_amb: Array
     seed_ids: Array
     seed_valid: Array
+    n_dims_scanned: Array          # () int32 — PDX re-rank scan counters
+    n_dims_total: Array
     # epilogue parameters
     capctl: RerankCap
     dist_impl: str | None
     seed_mode: str
     seeds_max: int
+    early_exit: bool = False
     # host-side state filled by the feedback fetch
     n_amb_host: np.ndarray | None = None
     tombstones: list = dataclasses.field(default_factory=list)
@@ -229,11 +262,12 @@ class WaveHandles:
 
 def _refinalize(h: WaveHandles, stats: JoinStats) -> None:
     """Re-run the device epilogue at the (grown) capacity."""
-    (h.keep, h.dist, h.n_amb, h.seed_ids, h.seed_valid) = _finalize_wave(
+    (h.keep, h.dist, h.n_amb, h.seed_ids, h.seed_valid, h.n_dims_scanned,
+     h.n_dims_total) = _finalize_wave(
         h.cascade, h.qc, h.vecs, h.xw, h.pool_idx, h.raw_pool_dist,
         h.n_pool, jnp.asarray(h.lane_valid), h.best_idx, h.th2,
         cap=h.capctl.cap, dist_impl=h.dist_impl, seed_mode=h.seed_mode,
-        seeds_max=h.seeds_max)
+        seeds_max=h.seeds_max, early_exit=h.early_exit)
     if h.cascade is not None:
         stats.n_rerank_gather += int(h.xw.shape[0]) * h.capctl.cap
 
@@ -284,15 +318,17 @@ def assemble_wave(h: WaveHandles, stats: JoinStats, *,
     _resolve_band(h, stats)
     t0 = time.perf_counter()
     (pool_idx, pool_dist, keep, n_pool, best_idx, n_dist, n_esc,
-     overflow, *iters) = jax.device_get(
+     overflow, nds, ndt, *iters) = jax.device_get(
         (h.pool_idx, h.dist, h.keep, h.n_pool, h.best_idx, h.n_dist,
-         h.n_esc, h.overflow) + h.n_iters)
+         h.n_esc, h.overflow, h.n_dims_scanned, h.n_dims_total) + h.n_iters)
     lv = h.lane_valid
     pairs = collect_pairs(h.qids + qid_offset, keep, pool_idx)
     stats.n_dist += int(n_dist[lv].sum())
     stats.n_esc8 += int(n_esc[lv].sum())
     stats.n_overflow += int(overflow[lv].sum())
     stats.n_rerank += int(h.n_amb_host[lv].sum())
+    stats.n_dims_scanned += int(nds)
+    stats.n_dims_total += int(ndt)
     stats.n_iters += sum(int(i) for i in iters)
     stats.other_seconds += time.perf_counter() - t0
     return WaveOutput(pairs=pairs, pool_idx=np.asarray(pool_idx),
@@ -413,11 +449,12 @@ def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         stats.expand_seconds += time.perf_counter() - t0
 
     seed_mode = cfg.method if collect_seeds else "none"
-    keep, dist, n_amb, seed_ids, seed_valid2 = _finalize_wave(
+    ee = early_exit_enabled(tcfg)
+    keep, dist, n_amb, seed_ids, seed_valid2, nds, ndt = _finalize_wave(
         cascade, qc, index_y.vecs, xw, r.pool_idx, r.pool_dist, r.n_pool,
         jnp.asarray(lane_valid), r.best_idx, th2, cap=capctl.cap,
         dist_impl=tcfg.dist_impl, seed_mode=seed_mode,
-        seeds_max=tcfg.seeds_max)
+        seeds_max=tcfg.seeds_max, early_exit=ee)
     if cascade is not None:
         stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
     return WaveHandles(
@@ -427,8 +464,9 @@ def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         best_idx=r.best_idx, n_dist=r.n_dist, n_esc=r.n_esc,
         overflow=r.overflow, n_iters=(g.n_iters, r.n_iters),
         keep=keep, dist=dist, n_amb=n_amb, seed_ids=seed_ids,
-        seed_valid=seed_valid2, capctl=capctl, dist_impl=tcfg.dist_impl,
-        seed_mode=seed_mode, seeds_max=tcfg.seeds_max)
+        seed_valid=seed_valid2, n_dims_scanned=nds, n_dims_total=ndt,
+        capctl=capctl, dist_impl=tcfg.dist_impl,
+        seed_mode=seed_mode, seeds_max=tcfg.seeds_max, early_exit=ee)
 
 
 def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
@@ -616,10 +654,11 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
         jax.block_until_ready(r.pool_idx)
         stats.expand_seconds += time.perf_counter() - t0
 
-    keep, dist2, n_amb, seed_ids, seed_valid = _finalize_wave(
+    ee = early_exit_enabled(tcfg)
+    keep, dist2, n_amb, seed_ids, seed_valid, nds, ndt = _finalize_wave(
         cascade, qc, merged.vecs, xw, r.pool_idx, r.pool_dist, r.n_pool,
         lv_j, r.best_idx, th2, cap=capctl.cap, dist_impl=tcfg.dist_impl,
-        seed_mode="none", seeds_max=tcfg.seeds_max)
+        seed_mode="none", seeds_max=tcfg.seeds_max, early_exit=ee)
     if cascade is not None:
         stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
     return WaveHandles(
@@ -629,8 +668,9 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
         best_idx=r.best_idx, n_dist=r.n_dist, n_esc=r.n_esc,
         overflow=r.overflow, n_iters=(r.n_iters,),
         keep=keep, dist=dist2, n_amb=n_amb, seed_ids=seed_ids,
-        seed_valid=seed_valid, capctl=capctl, dist_impl=tcfg.dist_impl,
-        seed_mode="none", seeds_max=tcfg.seeds_max)
+        seed_valid=seed_valid, n_dims_scanned=nds, n_dims_total=ndt,
+        capctl=capctl, dist_impl=tcfg.dist_impl,
+        seed_mode="none", seeds_max=tcfg.seeds_max, early_exit=ee)
 
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,

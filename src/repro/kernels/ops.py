@@ -36,6 +36,7 @@ from repro.kernels import bits as _bits
 from repro.kernels import distance as _distance
 from repro.kernels import int8 as _int8
 from repro.kernels import nlj as _nlj
+from repro.kernels import pdx as _pdx
 from repro.kernels import ref as _ref
 
 Array = jax.Array
@@ -363,6 +364,127 @@ def rowwise_sq_dists_int8(qx: Array, qcands: Array, scales: Array, *,
         qxp, qcp, sp, bm=bm, bkk=bkk, group_size=group_size,
         interpret=(impl == "pallas_interpret"))
     return out[:B, :K]
+
+
+# ---------------------------------------------------------------------------
+# PDX (dimension-partitioned) early-exit kernels
+# ---------------------------------------------------------------------------
+
+
+def _pdx_guards(dim: int) -> tuple[float, float]:
+    """(relative, absolute) tail-bound deflation for dim ``dim`` —
+    lazy import keeps kernels free of quant-package dependencies."""
+    from repro.quant.pdx import TAIL_GUARD, tail_guard
+    return tail_guard(dim), TAIL_GUARD
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("slab", "dim", "early_exit", "impl"))
+def pairwise_sq_dists_pdx(qx: Array, qy: Array, scales: Array,
+                          xslab: Array, yslab: Array, xtail: Array,
+                          ytail: Array, xn: Array, yn: Array, xe: Array,
+                          ye: Array, theta, *, slab: int, dim: int,
+                          early_exit: bool = False,
+                          impl: str | None = None) -> tuple[Array, Array]:
+    """PDX early-exit quantized pairwise distances (the NLJ tier shape).
+
+    (B, S·slab) × (N, S·slab) int8 PDX codes → ``(dhat, nscan)``:
+    (B, N) f32 quantized-domain squared L2 (+inf where a lane retired on
+    its certified tail bound) and (B, N) int32 slabs scanned per lane.
+    ``theta`` is the traced L2 threshold; with ``early_exit=False`` the
+    kernel is a plain slab-ordered accumulation (``nscan`` = S) whose
+    survivor sums are bit-identical to the early-exit run's.
+    """
+    impl = impl or default_impl()
+    B = qx.shape[0]
+    N = qy.shape[0]
+    if B == 0 or N == 0:
+        return (jnp.zeros((B, N), jnp.float32), jnp.zeros((B, N), jnp.int32))
+    if impl == "ref":
+        return _ref.pairwise_sq_dists_pdx(
+            qx, qy, scales, xslab, yslab, xtail, ytail, xn, yn, xe, ye,
+            theta, slab=slab, dim=dim, early_exit=early_exit)
+    guard, guard_abs = _pdx_guards(dim)
+    from repro.quant.cascade import MATMUL_GUARD
+    S = scales.shape[0]
+    Bp, bm = _grid_dim(B, 256, 32)
+    Np, bn = _grid_dim(N, 512, 128)
+    dhat, nscan = _pdx.pairwise_sq_dists_pdx_pallas(
+        _pad_rows(qx, Bp), _pad_rows(qy, Np), scales,
+        _pad_rows(xslab, Bp), _pad_rows(yslab, Np),
+        _pad_rows(xtail, Bp), _pad_rows(ytail, Np),
+        _pad_rows(xn.reshape(B, 1), Bp)[:, 0],
+        _pad_rows(yn.reshape(N, 1), Np)[:, 0],
+        _pad_rows(xe.reshape(B, 1), Bp)[:, 0],
+        _pad_rows(ye.reshape(N, 1), Np)[:, 0],
+        theta, guard=guard, guard_abs=guard_abs, mguard=MATMUL_GUARD,
+        early_exit=early_exit, bm=bm, bn=bn,
+        interpret=(impl == "pallas_interpret"))
+    return dhat[:B, :N], nscan[:B, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "early_exit", "impl"))
+def pdx_gather_sq_dists(vp: Array, vtail: Array, vnorm: Array, xp: Array,
+                        xtail: Array, xn: Array, idx: Array, th2, *,
+                        dim: int, early_exit: bool = False,
+                        impl: str | None = None) -> tuple[Array, Array]:
+    """Fused PDX gather + early-exit f32 distance over candidate ids.
+
+    (N, S·slab) PDX rows × (B, S·slab) PDX queries × (B, K) ids →
+    ``(dist, nscan)``. NO_NODE (−1) slots come back (+inf, 0). ``th2``
+    is the traced θ² retirement threshold; retired lanes are +inf, and
+    survivors carry the slab-ordered f32 sum (bit-identical on/off).
+    """
+    impl = impl or default_impl()
+    B, K = idx.shape
+    if B == 0 or K == 0:
+        return (jnp.zeros((B, K), jnp.float32), jnp.zeros((B, K), jnp.int32))
+    valid = idx >= 0
+    safe = jnp.where(valid, idx, 0)
+    S = vtail.shape[1]
+    slab = vp.shape[1] // S
+    if impl == "ref":
+        d, ns = _ref.pdx_gather_sq_dists(
+            xp, xtail, xn, vp[safe], vtail[safe], vnorm[safe], th2,
+            slab=slab, dim=dim, early_exit=early_exit)
+    else:
+        guard, guard_abs = _pdx_guards(dim)
+        d, ns = _pdx.pdx_gather_sq_dists_pallas(
+            vp, vtail, vnorm, xp, xtail, xn, safe, th2, guard=guard,
+            guard_abs=guard_abs, early_exit=early_exit,
+            interpret=(impl == "pallas_interpret"))
+    return (jnp.where(valid, d, jnp.float32(jnp.inf)),
+            jnp.where(valid, ns, 0))
+
+
+def pdx_compact_gather_sq_dists(vp: Array, vtail: Array, vnorm: Array,
+                                xp: Array, xtail: Array, xn: Array,
+                                ids: Array, mask: Array, cap: int, th2, *,
+                                dim: int, early_exit: bool = False,
+                                impl: str | None = None):
+    """PDX twin of ``compact_gather_sq_dists``: early-exit re-rank of the
+    masked band slots through a ``cap``-wide compacted gather.
+
+    Returns ``(exact, within, n_masked, n_scanned, n_total)`` — the
+    first three as in the f32 version (``exact`` is +inf on retired
+    *and* uncompacted slots), plus scalar dimension-scan counters for
+    ``JoinStats.dims_scanned_frac`` (over compacted valid lanes only).
+    """
+    C = ids.shape[1]
+    slots, cand, n_masked = band_compact(mask, ids, cap)
+    dist_c, nscan_c = pdx_gather_sq_dists(
+        vp, vtail, vnorm, xp, xtail, xn, cand, th2, dim=dim,
+        early_exit=early_exit, impl=impl)
+    exact = band_scatter(slots, dist_c, C)
+    pos = jnp.cumsum(mask, axis=1) - 1
+    within = mask & (pos < cap)
+    S = vtail.shape[1]
+    slab = vp.shape[1] // S
+    valid = cand >= 0
+    dims = jnp.minimum(nscan_c * slab, dim)
+    n_scanned = jnp.sum(jnp.where(valid, dims, 0))
+    n_total = jnp.sum(valid.astype(jnp.int32)) * dim
+    return exact, within, n_masked, n_scanned, n_total
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,274 @@
+"""Pallas TPU kernels for PDX (dimension-partitioned) early-exit
+squared-L2 distances.
+
+Both kernels step the k-grid one *dimension slab* at a time over
+vectors stored in the PDX layout (``repro.quant.pdx``: dims permuted by
+descending variance, padded to ``S·slab``). The distance accumulates
+slab by slab in the f32 output block, and — when ``early_exit`` is on —
+a lane is *retired* at the start of slab ``k`` if its partial sum plus
+the certified remaining-dims lower bound already exceeds the lane's
+threshold:
+
+    live_k = (scanned == k) & (acc + tail_k ≤ th)
+
+``scanned`` is a second output block acting as a per-lane latch: a lane
+that fails the predicate once keeps ``scanned < k`` forever, so later
+slabs skip it for free and the final ``scanned`` value *is* the number
+of slabs scanned (``JoinStats.dims_scanned_frac``). The epilogue masks
+retired lanes to ``+inf``; survivors hold the slab-ordered f32 sum,
+bit-identical to the ``early_exit=False`` accumulation (same
+contributions, same order — f32 round-to-nearest of nonnegative adds is
+deterministic), which is what makes the on/off pair sets provably equal.
+
+The tail bound is ``max((√tx(k) − √ty(k))² − guard·(xn+yn) − guard_abs,
+0)`` — reverse triangle inequality on the per-row suffix energies,
+deflated by the f32 rounding allowance (``pdx.tail_guard``), so
+retirement certifies the full f32 sum would exceed the threshold.
+
+  * ``pairwise`` — int8 codes on the per-slab grid; the slab
+    contribution uses the matmul identity with per-slab dequantized
+    energies as norms, ``max(·, 0)``-clamped so partial sums are
+    monotone (the clamp's inflation is covered by the caller's
+    ``MATMUL_GUARD``). The per-lane threshold
+    ``(θ + xe + ye)² + MATMUL_GUARD·(xn + yn)`` bakes the quantization
+    slack in, so retirement implies the *certified lower bound* on the
+    true distance exceeds θ².
+  * ``gather``   — f32 rows via scalar-prefetch (the band re-rank
+    shape, replacing the full-``d`` gather of ``gather_distance.py``);
+    per-lane ``@pl.when(live)`` skips the whole DMA'd-row reduction for
+    retired lanes.
+
+Tiling note: ``slab`` is the lane dimension of every vector block; the
+default (64) is half a lane tile — fine in interpret mode and on Mosaic
+with lane padding, but on real TPUs a 128-multiple slab maximizes tile
+utilization (pass ``slab=128`` to ``build_pdx``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_TPU_NS = True
+except ImportError:  # pragma: no cover
+    _HAVE_TPU_NS = False
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pairwise: int8 PDX codes -> (B, N) f32 quantized sq L2 + slabs scanned
+# ---------------------------------------------------------------------------
+
+def _pairwise_pdx_kernel(x_ref, y_ref, s_ref, xsl_ref, ysl_ref, xtl_ref,
+                         ytl_ref, xn_ref, yn_ref, xe_ref, ye_ref, th_ref,
+                         o_ref, ns_ref, *, nk: int, guard: float,
+                         guard_abs: float, mguard: float, early_exit: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        ns_ref[...] = jnp.zeros_like(ns_ref)
+
+    def _contrib():
+        dot = jax.lax.dot_general(
+            x_ref[...], y_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)      # int8×int8 → int32 (MXU)
+        s = s_ref[0, 0]
+        c = (xsl_ref[...] + ysl_ref[...]
+             - 2.0 * (s * s) * dot.astype(jnp.float32))
+        return jnp.maximum(c, 0.0)                 # monotone partial sums
+
+    if not early_exit:
+        o_ref[...] += _contrib()
+
+        @pl.when(k == nk - 1)
+        def _done():
+            ns_ref[...] = jnp.full_like(ns_ref, nk)
+        return
+
+    energy = xn_ref[...] + yn_ref[...]                       # (bm, bn)
+    th = ((th_ref[0, 0] + xe_ref[...] + ye_ref[...]) ** 2
+          + jnp.float32(mguard) * energy)
+    rt = (jnp.sqrt(xtl_ref[...]) - jnp.sqrt(ytl_ref[...])) ** 2
+    tl = jnp.maximum(rt - jnp.float32(guard) * energy
+                     - jnp.float32(guard_abs), 0.0)
+    acc = o_ref[...]
+    scanned = ns_ref[...]
+    live = (scanned == k) & (acc + tl <= th)
+
+    @pl.when(jnp.any(live))
+    def _scan():
+        o_ref[...] = jnp.where(live, acc + _contrib(), acc)
+        ns_ref[...] = jnp.where(live, k + 1, scanned)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = jnp.where(ns_ref[...] == nk, o_ref[...], jnp.inf)
+
+
+def pairwise_sq_dists_pdx_pallas(qx: Array, qy: Array, scales: Array,
+                                 xslab: Array, yslab: Array, xtail: Array,
+                                 ytail: Array, xn: Array, yn: Array,
+                                 xe: Array, ye: Array, theta, *,
+                                 guard: float, guard_abs: float,
+                                 mguard: float, early_exit: bool,
+                                 bm: int = 256, bn: int = 512,
+                                 interpret: bool = False):
+    """Tiled PDX early-exit quantized pairwise squared L2.
+
+    Args:
+      qx/qy: (B, S·slab) / (N, S·slab) int8 codes, same per-slab grid.
+      scales: (S,) f32; xslab/yslab, xtail/ytail: (B, S) / (N, S) f32
+        per-slab dequantized energies and suffix energies.
+      xn/yn, xe/ye: (B,) / (N,) f32 norms and exact quant errors.
+      theta: traced f32 L2 threshold (unsquared).
+    Returns:
+      (dhat, nscan): (B, N) f32 (+inf where retired), (B, N) int32.
+    Shapes must already be block-divisible (ops.py pads).
+    """
+    B, dp = qx.shape
+    N, _ = qy.shape
+    S = scales.shape[0]
+    slab = dp // S
+    bm, bn = min(bm, B), min(bn, N)
+    assert B % bm == 0 and N % bn == 0 and dp == S * slab, (
+        qx.shape, qy.shape, (bm, bn, S))
+    grid = (B // bm, N // bn, S)
+    kernel = functools.partial(
+        _pairwise_pdx_kernel, nk=S, guard=guard, guard_abs=guard_abs,
+        mguard=mguard, early_exit=early_exit)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, slab), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, slab), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, k)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, N), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qx, qy, scales.reshape(1, S), xslab, yslab.T, xtail, ytail.T,
+      xn.reshape(B, 1), yn.reshape(1, N), xe.reshape(B, 1),
+      ye.reshape(1, N), jnp.asarray(theta, jnp.float32).reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# gather: f32 PDX rows via scalar prefetch -> (B, K) f32 + slabs scanned
+# ---------------------------------------------------------------------------
+
+def _gather_pdx_kernel(idx_ref, x_ref, xtl_ref, xn_ref, v_ref, vtl_ref,
+                       vn_ref, th_ref, o_ref, ns_ref, *, nk: int,
+                       guard: float, guard_abs: float, early_exit: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        ns_ref[...] = jnp.zeros_like(ns_ref)
+
+    def _contrib():
+        diff = x_ref[...] - v_ref[...]
+        return jnp.sum(diff * diff, axis=-1, keepdims=True)
+
+    if not early_exit:
+        o_ref[...] += _contrib()
+
+        @pl.when(k == nk - 1)
+        def _done():
+            ns_ref[...] = jnp.full_like(ns_ref, nk)
+        return
+
+    energy = xn_ref[0, 0] + vn_ref[0, 0]
+    rt = (jnp.sqrt(xtl_ref[0, 0]) - jnp.sqrt(vtl_ref[0, 0])) ** 2
+    tl = jnp.maximum(rt - jnp.float32(guard) * energy
+                     - jnp.float32(guard_abs), 0.0)
+    acc = o_ref[0, 0]
+    scanned = ns_ref[0, 0]
+    live = (scanned == k) & (acc + tl <= th_ref[0, 0])
+
+    @pl.when(live)                   # retired lane: skip the reduction
+    def _scan():
+        o_ref[...] = acc + _contrib()
+        ns_ref[...] = jnp.full_like(ns_ref, k + 1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = jnp.where(ns_ref[...] == nk, o_ref[...], jnp.inf)
+
+
+def pdx_gather_sq_dists_pallas(vp: Array, vtail: Array, vnorm: Array,
+                               xp: Array, xtail: Array, xn: Array,
+                               idx: Array, th2, *, guard: float,
+                               guard_abs: float, early_exit: bool,
+                               interpret: bool = False):
+    """Fused PDX gather + early-exit distance (scalar prefetch).
+
+    Args:
+      vp: (N, S·slab) f32 PDX rows; vtail: (N, S); vnorm: (N,).
+      xp: (B, S·slab) f32 PDX queries; xtail: (B, S); xn: (B,).
+      idx: (B, K) int32 ids, pre-clamped to [0, N) by the wrapper.
+      th2: traced f32 θ² retirement threshold.
+    Returns:
+      (dist, nscan): (B, K) f32 (+inf where retired), (B, K) int32.
+    """
+    B, dp = xp.shape
+    _, K = idx.shape
+    N, S = vtail.shape
+    slab = dp // S
+    grid = (B, K, S)
+    kernel = functools.partial(
+        _gather_pdx_kernel, nk=S, guard=guard, guard_abs=guard_abs,
+        early_exit=early_exit)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, slab), lambda i, j, k, idx_ref: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (i, 0)),
+            pl.BlockSpec((1, slab),
+                         lambda i, j, k, idx_ref: (idx_ref[i, j], k)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, k, idx_ref: (idx_ref[i, j], k)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, k, idx_ref: (idx_ref[i, j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k, idx_ref: (i, j)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+        ],
+        interpret=interpret,
+    )(idx, xp, xtail, xn.reshape(B, 1), vp, vtail, vnorm.reshape(N, 1),
+      jnp.asarray(th2, jnp.float32).reshape(1, 1))

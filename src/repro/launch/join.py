@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.vectorjoin import ENGINE_PRESETS, make_engine, preset
 from repro.core import exact_join_pairs
-from repro.core.types import METHODS
+from repro.core.types import METHODS, QUANT_MODES
 from repro.data.vectors import make_dataset, thresholds
 
 
@@ -36,14 +36,24 @@ def main(argv=None) -> int:
     ap.add_argument("--theta-q", type=int, default=1,
                     help="1-based index into the 7 Table-2-style thresholds")
     ap.add_argument("--wave", type=int, default=256)
-    ap.add_argument("--quant", choices=("off", "sq8", "sketch8"),
+    ap.add_argument("--quant", choices=QUANT_MODES,
                     default=None,
                     help="compressed storage: the FilterCascade tier "
                          "chain joins filter through — sq8 traverses "
                          "int8 codes and re-ranks survivors with exact "
                          "f32; sketch8 adds a 1-bit Hamming-sketch prune "
-                         "tier above int8 "
+                         "tier above int8; pdx8 swaps int8 for the "
+                         "dimension-partitioned PdxTier whose kernels "
+                         "early-exit mid-vector on certified tail "
+                         "bounds; sketchpdx8 stacks the sketch above it "
                          "(default: the engine spec's quant mode)")
+    ap.add_argument("--early-exit", choices=("on", "off"), default="on",
+                    help="PDX modes: retire candidate lanes mid-vector "
+                         "once partial distance + certified tail bound "
+                         "exceeds θ². Certified ⇒ the emitted pair set "
+                         "is identical on/off; off is the full-scan "
+                         "wall-clock baseline (the REPRO_EARLY_EXIT env "
+                         "var overrides both)")
     ap.add_argument("--quant-build", choices=("off", "sq8", "sketch8"),
                     default=None,
                     help="drive the offline index builds through the "
@@ -85,8 +95,11 @@ def main(argv=None) -> int:
                    if args.quant_build is not None
                    else ENGINE_PRESETS[args.engine_spec].quant_build)
     cfg = preset(args.method, theta=theta)
-    cfg = dataclasses.replace(cfg, wave_size=args.wave, quant=quant,
-                              overlap=not args.no_overlap)
+    cfg = dataclasses.replace(
+        cfg, wave_size=args.wave, quant=quant,
+        overlap=not args.no_overlap,
+        traversal=dataclasses.replace(
+            cfg.traversal, early_exit=(args.early_exit != "off")))
 
     n_shards = 0 if args.distributed else args.shards
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
@@ -117,6 +130,8 @@ def main(argv=None) -> int:
             pruned = res.stats.n_dist - res.stats.n_esc8
             extra += (f", esc8={res.stats.n_esc8}, sketch_pruned={pruned}"
                       f" ({pruned / max(res.stats.n_dist, 1):.0%})")
+        if quant in ("pdx8", "sketchpdx8"):
+            extra += f", dims_frac={res.stats.dims_scanned_frac:.3f}"
         print(f"[join] {len(res.pairs)} pairs in {dt:.2f}s "
               f"(n_dist={res.stats.n_dist}, ood={res.stats.n_ood}, "
               f"builds={eng.n_index_builds}{extra})")

@@ -13,13 +13,20 @@ owner of the certified-bounds pipeline every consumer escalates through
     ``kernels/bits.py`` computes Hamming distances and
     ``sketch.sketch_lower_bound_*`` converts them into certified bounds
     that prune candidates before any int8 work. Wrapped by ``SketchTier``.
+  * ``PdxStore`` (dimension-major, ``pdx.py``) — variance-permuted,
+    slab-partitioned storage (f32 mirror + per-slab-scaled int8) with
+    per-row suffix-energy tables; ``kernels/pdx.py`` accumulates
+    distances slab by slab and retires lanes mid-vector on the certified
+    remaining-dims bound. Wrapped by ``PdxTier``.
 
 The filter-then-rerank join pipeline filters on these bounds and re-ranks
 survivors exactly. See docs/ARCHITECTURE.md §"The FilterCascade".
 """
 from repro.quant.cascade import (TIERS_BY_MODE, FilterCascade, Int8Tier,
-                                 SketchTier, build_cascade,
+                                 PdxTier, SketchTier, build_cascade,
                                  build_tier_store, make_cascade)
+from repro.quant.pdx import (DEFAULT_SLAB, PdxQueries, PdxStore, build_pdx,
+                             deflate_tail, pdx_queries, tail_guard)
 from repro.quant.sketch import (DEFAULT_N_CHECKPOINTS, SketchStore,
                                 build_sketch, sketch_lower_bound_pairwise,
                                 sketch_lower_bound_rowwise, sketch_queries)
@@ -30,22 +37,30 @@ from repro.quant.store import (DEFAULT_GROUP_SIZE, QuantStore, build_store,
 __all__ = [
     "DEFAULT_GROUP_SIZE",
     "DEFAULT_N_CHECKPOINTS",
+    "DEFAULT_SLAB",
     "FilterCascade",
     "Int8Tier",
+    "PdxQueries",
+    "PdxStore",
+    "PdxTier",
     "QuantStore",
     "SketchStore",
     "SketchTier",
     "TIERS_BY_MODE",
     "build_cascade",
+    "build_pdx",
     "build_sketch",
     "build_store",
     "build_tier_store",
+    "deflate_tail",
     "dequantize",
     "dim_scales",
     "make_cascade",
+    "pdx_queries",
     "quantize_on_grid",
     "quantize_queries",
     "sketch_lower_bound_pairwise",
     "sketch_lower_bound_rowwise",
     "sketch_queries",
+    "tail_guard",
 ]

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.quant.pdx import PdxQueries, PdxStore, pdx_queries
 from repro.quant.sketch import (SketchStore, sketch_lower_bound_gather,
                                 sketch_lower_bound_rowwise, sketch_queries)
 from repro.quant.store import QuantStore, dim_scales, quantize_queries
@@ -242,6 +243,103 @@ class SketchTier:
         return sure, ~sure
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PdxTier:
+    """The dimension-partitioned confirming tier (PdxStore): certified
+    lower *and* upper bounds like ``Int8Tier``, plus mid-vector early
+    exit — its kernels accumulate distances slab by slab and retire a
+    lane once the partial sum plus the certified remaining-dims bound
+    exceeds the lane's threshold (``quant/pdx.py``).
+
+    Navigation (``gather_bounds``) and escalation (``pair_refine``)
+    never early-exit: retirement only makes sense against a fixed
+    threshold, and the traversal orders candidates by the full bound.
+    The exit paths are ``pairwise_bounds_ee`` (NLJ) and the wave
+    pipeline's band re-rank through ``ops.pdx_compact_gather_sq_dists``.
+    """
+    store: PdxStore
+
+    name = "pdx"
+    build_counter = "pdx"       # JoinEngine.build_counts key
+    has_upper = True
+    early_exitable = True       # consumers may call pairwise_bounds_ee
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes
+
+    def encode(self, x) -> PdxQueries:
+        return pdx_queries(x, self.store)
+
+    def rows_as_queries(self, i0: int, i1: int) -> PdxQueries:
+        st = self.store
+        return PdxQueries(vp=st.vp[i0:i1], ftail=st.ftail[i0:i1],
+                          q=st.q[i0:i1], qslab=st.qslab[i0:i1],
+                          qtail=st.qtail[i0:i1], norms=st.norms[i0:i1],
+                          err=st.err[i0:i1])
+
+    def gather_bounds(self, qc: PdxQueries, cand: Array, *,
+                      impl: str | None):
+        """(B, K) candidate ids → certified (lb, ub, None) — full-scan
+        difference form on the per-slab grid (exact, no matmul guard);
+        the rowwise int8 kernel treats a slab as a dimension group."""
+        st = self.store
+        qcands = st.q[cand]                                  # (B, K, dp)
+        dhat = ops.rowwise_sq_dists_int8(
+            qc.q, qcands, st.scales, group_size=st.slab, impl=impl)
+        slack = qc.err[:, None] + st.err[cand]
+        return (ops.quant_lower_bound(dhat, slack),
+                ops.quant_upper_bound(dhat, slack), None)
+
+    def _pairwise(self, qc: PdxQueries, theta, early_exit: bool,
+                  impl: str | None):
+        st = self.store
+        dhat, nscan = ops.pairwise_sq_dists_pdx(
+            qc.q, st.q, st.scales, qc.qslab, st.qslab, qc.qtail, st.qtail,
+            qc.norms, st.norms, qc.err, st.err, theta, slab=st.slab,
+            dim=st.dim, early_exit=early_exit, impl=impl)
+        slack = qc.err[:, None] + st.err[None, :]
+        guard = matmul_guard(qc.norms, st.norms)
+        # +inf d̂ (retired lanes) stays +inf through both bounds — a
+        # retired lane's certified lb already exceeds the threshold the
+        # kernel retired it against, so the band test is unchanged.
+        lb = ops.quant_lower_bound(jnp.maximum(dhat - guard, 0.0), slack)
+        ub = ops.quant_upper_bound(dhat + guard, slack)
+        return lb, ub, nscan
+
+    def pairwise_bounds(self, qc: PdxQueries, *, impl: str | None):
+        """(B, N) certified (lb, ub), full scan — the generic cascade
+        contract (monotone chain; no threshold available here)."""
+        lb, ub, _ = self._pairwise(qc, 0.0, False, impl)
+        return lb, ub
+
+    def pairwise_bounds_ee(self, qc: PdxQueries, *, theta, early_exit: bool,
+                           impl: str | None):
+        """(B, N) certified (lb, ub, nscan) with mid-vector early exit
+        against the L2 threshold ``theta``. Retirement is certified
+        (retired ⇒ lb > θ²), so the NLJ's band split — and therefore
+        its emitted pairs and ``n_rerank`` — are identical on/off."""
+        return self._pairwise(qc, theta, early_exit, impl)
+
+    def pair_refine(self, qc: PdxQueries, qi, yi):
+        """Difference-form certified (lb, ub) for explicit id pairs —
+        exact on the shared grid (padded dims code 0 on both sides)."""
+        st = self.store
+        sd = dim_scales(st.scales, st.q.shape[1], st.slab)
+        dq = (qc.q[qi].astype(jnp.int32) - st.q[yi].astype(jnp.int32)
+              ).astype(jnp.float32) * sd[None, :]
+        dhat = jnp.sum(dq * dq, axis=1)
+        slack = qc.err[qi] + st.err[yi]
+        return (ops.quant_lower_bound(dhat, slack),
+                ops.quant_upper_bound(dhat, slack))
+
+    def pool_band(self, qc: PdxQueries, pool_lb: Array, pool_idx: Array,
+                  th2):
+        s = qc.err[:, None] + self.store.err[jnp.clip(pool_idx, 0)]
+        return ops.quant_band_from_lb(pool_lb, s, th2)
+
+
 # ---------------------------------------------------------------------------
 # the cascade
 # ---------------------------------------------------------------------------
@@ -299,9 +397,12 @@ TIERS_BY_MODE: dict[str, tuple] = {
     "off": (),
     "sq8": ("int8",),
     "sketch8": ("sketch1", "int8"),
+    "pdx8": ("pdx",),
+    "sketchpdx8": ("sketch1", "pdx"),
 }
 
-_TIER_CLASSES = {Int8Tier.name: Int8Tier, SketchTier.name: SketchTier}
+_TIER_CLASSES = {Int8Tier.name: Int8Tier, SketchTier.name: SketchTier,
+                 PdxTier.name: PdxTier}
 
 
 def tier_class(name: str):
@@ -316,6 +417,9 @@ def build_tier_store(name: str, vecs, *, scale_rows=None, **kw):
     if name == SketchTier.name:
         from repro.quant.sketch import build_sketch
         return build_sketch(vecs, scale_rows=scale_rows, **kw)
+    if name == PdxTier.name:
+        from repro.quant.pdx import build_pdx
+        return build_pdx(vecs, scale_rows=scale_rows, **kw)
     raise ValueError(f"unknown tier {name!r}; one of {sorted(_TIER_CLASSES)}")
 
 

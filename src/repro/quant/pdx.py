@@ -1,0 +1,213 @@
+"""PdxStore — dimension-partitioned (PDX) storage with certified tail
+bounds for mid-vector early exit.
+
+Every tier before this one computes full-``d`` distances and only then
+compares against a bound. The PDX layout (PAPERS.md: "PDX: A Data Layout
+for Vector Similarity Search") flips the loop: vectors are stored so the
+distance kernels accumulate squared distances *slab by slab* over the
+dimension axis, and a candidate lane can be retired the moment its
+partial sum plus a certified lower bound on the remaining dimensions'
+contribution already exceeds θ². Two ingredients make the exit *exact*
+rather than approximate:
+
+  * **Variance-descending dimension permutation** — dimensions are
+    permuted once at encode time so high-energy slabs come first.
+    Partial sums then grow as fast as possible, which is what makes
+    early slabs decisive. The permutation is applied identically to
+    stored rows and queries, so distances are unchanged.
+  * **Per-slab tail-energy tables** — for each row, ``ftail[:, k]`` is
+    the exact squared norm of the dim-suffix starting at slab ``k``
+    (the order-statistics slack tables of PR 3, generalized to
+    dim-suffixes). By the reverse triangle inequality the remaining-dims
+    contribution of a pair is at least
+    ``(√tail_x(k) − √tail_y(k))²``, so
+
+        partial_k(x, y) + (√tail_x(k) − √tail_y(k))² ≤ ‖x − y‖²
+
+    is a certified lower bound at every slab boundary. A lane retired on
+    this bound provably cannot be a true pair — early-exit on/off emit
+    the identical pair set (``tests/test_pdx_properties.py`` asserts
+    admissibility; ``tests/test_quant_modes.py`` asserts the end-to-end
+    golden equality).
+
+The store carries both representations the cascade needs:
+
+  * an f32 PDX mirror (``vp``/``ftail``) for the re-rank band's
+    rowwise-gather kernel (replacing the full-``d`` gather GEMM), and
+  * an int8 PDX variant (``q``/``qslab``/``qtail``, one scale per slab)
+    for the NLJ pairwise kernel, with the same exact per-row error
+    bookkeeping as ``QuantStore`` so ``PdxTier`` plugs into the
+    certified-bounds algebra unchanged.
+
+The f32 tail bound is exact math but f32 arithmetic: ``tail_guard``
+deflates it by an accumulated-rounding allowance (mirroring
+``sketch._GUARD``/``cascade.MATMUL_GUARD``), keeping retirement
+decisions conservative under round-to-nearest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.store import arrays_nbytes, quantize_on_grid, _EPS
+
+Array = jax.Array
+
+# One slab = half a lane tile: small enough that the golden dim=40
+# regime still exercises the padding path, large enough that a slab is
+# one dense kernel k-step.
+DEFAULT_SLAB = 64
+
+# Absolute + per-dim relative f32 rounding allowance for the certified
+# tail bound: covers tail-table construction (one reversed cumsum),
+# the bound evaluation (sqrt + square), and the remaining-slab partial
+# accumulation. Same two-term form as sketch._GUARD / _GUARD_PER_DIM.
+TAIL_GUARD = 1e-4
+TAIL_GUARD_PER_DIM = 4 * 1.2e-7
+
+
+def tail_guard(d: int) -> float:
+    """Per-unit-energy deflation coefficient for tail bounds at dim
+    ``d`` (multiplied by the pair's summed norms; ``TAIL_GUARD`` is the
+    additional absolute deflation). Deflating a *lower* bound can only
+    make retirement rarer — it never threatens admissibility."""
+    return TAIL_GUARD_PER_DIM * max(d, 1)
+
+
+def deflate_tail(rt, energy, d: int):
+    """Apply the rounding allowance to a raw tail bound ``rt``:
+    ``max(rt − tail_guard(d)·energy − TAIL_GUARD, 0)`` where ``energy``
+    is the pair's summed squared norms. The single definition shared by
+    ``kernels.ref`` and mirrored (as compile-time constants) inside the
+    Pallas kernels."""
+    return jnp.maximum(rt - tail_guard(d) * energy - TAIL_GUARD, 0.0)
+
+
+def n_slabs(d: int, slab: int = DEFAULT_SLAB) -> int:
+    return max(-(-d // slab), 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PdxStore:
+    """Dimension-partitioned companion of a vector table."""
+    perm: Array             # (d,) int32 variance-descending dim permutation
+    vp: Array               # (N, S·slab) f32 permuted, zero-padded rows
+    ftail: Array            # (N, S) f32 suffix energies of vp by slab
+    q: Array                # (N, S·slab) int8 codes on the per-slab grid
+    scales: Array           # (S,) f32 per-slab dequant scales
+    qslab: Array            # (N, S) f32 per-slab dequantized energies
+    qtail: Array            # (N, S) f32 dequantized suffix energies
+    norms: Array            # (N,) f32 squared norms of dequantized rows
+    err: Array              # (N,) f32 exact L2 quantization error per row
+    slab: int = dataclasses.field(metadata=dict(static=True))
+    dim: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_vectors(self) -> int:
+        return self.vp.shape[0]
+
+    @property
+    def n_slabs(self) -> int:
+        return self.ftail.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Honest footprint: the PDX layout keeps its own f32 mirror."""
+        return arrays_nbytes(self.perm, self.vp, self.ftail, self.q,
+                             self.scales, self.qslab, self.qtail,
+                             self.norms, self.err)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PdxQueries:
+    """Queries encoded on a PdxStore's permutation + slab grid."""
+    vp: Array               # (B, S·slab) f32 permuted, padded queries
+    ftail: Array            # (B, S) f32 suffix energies
+    q: Array                # (B, S·slab) int8 codes
+    qslab: Array            # (B, S) f32 per-slab dequantized energies
+    qtail: Array            # (B, S) f32 dequantized suffix energies
+    norms: Array            # (B,) f32 dequantized squared norms
+    err: Array              # (B,) f32 exact per-query L2 error
+
+
+def pdx_permutation(vecs, scale_rows=None) -> np.ndarray:
+    """Variance-descending dimension order (stable ties → deterministic
+    across builds). ``scale_rows`` masks which rows contribute — the
+    sharded path keeps sentinel pad rows from steering the order."""
+    v = np.asarray(vecs, np.float32)
+    if scale_rows is not None:
+        scale_rows = np.asarray(scale_rows, bool)
+        if scale_rows.any():
+            v = v[np.flatnonzero(scale_rows)]
+    var = v.var(axis=0) if v.shape[0] else np.zeros(v.shape[1], np.float32)
+    return np.argsort(-var, kind="stable").astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("slab",))
+def _encode(x: Array, perm: Array, scales: Array, *, slab: int):
+    """Permute → pad → slab energies / suffix tables → int8 on the
+    per-slab grid. The single definition of the PDX code scheme: store
+    build, query encode, and the sharded in-shard path all route here."""
+    x = jnp.asarray(x, jnp.float32)
+    d = x.shape[1]
+    S = scales.shape[0]
+    xp = x[:, perm]
+    pad = S * slab - d
+    if pad:
+        xp = jnp.pad(xp, ((0, 0), (0, pad)))
+    eslab = jnp.sum(xp.reshape(xp.shape[0], S, slab) ** 2, axis=2)
+    # ftail[:, k] = energy of slabs k.. (so ftail[:, 0] = ‖x‖²);
+    # reversed cumsum ⇒ monotone nonincreasing along k by construction.
+    ftail = jnp.cumsum(eslab[:, ::-1], axis=1)[:, ::-1]
+    q, norms, err = quantize_on_grid(xp, jnp.repeat(scales, slab))
+    deq = q.astype(jnp.float32) * jnp.repeat(scales, slab)
+    qslab = jnp.sum(deq.reshape(deq.shape[0], S, slab) ** 2, axis=2)
+    qtail = jnp.cumsum(qslab[:, ::-1], axis=1)[:, ::-1]
+    return xp, ftail, q, qslab, qtail, norms, err
+
+
+def build_pdx(vecs, *, slab: int = DEFAULT_SLAB,
+              scale_rows=None) -> PdxStore:
+    """Build the PDX artifact for a vector table (offline phase).
+
+    ``scale_rows`` masks scale/permutation statistics exactly like
+    ``build_store``: unmasked rows are still encoded (they clip; ``err``
+    records the exact residual) but cannot inflate the grid or steer the
+    dimension order."""
+    v = np.asarray(vecs, np.float32)
+    N, d = v.shape
+    S = n_slabs(d, slab)
+    perm = pdx_permutation(v, scale_rows)
+    src = v
+    if scale_rows is not None:
+        sr = np.asarray(scale_rows, bool)
+        if sr.any():
+            src = v[np.flatnonzero(sr)]
+    sp = src[:, perm]
+    pad = S * slab - d
+    if pad:
+        sp = np.pad(sp, ((0, 0), (0, pad)))
+    grouped = sp.reshape(sp.shape[0] if sp.shape[0] else 0, S, slab)
+    scales = np.maximum(
+        np.max(np.abs(grouped), axis=(0, 2), initial=0.0) / 127.0,
+        _EPS).astype(np.float32)
+    vp, ftail, q, qslab, qtail, norms, err = _encode(
+        jnp.asarray(v), jnp.asarray(perm), jnp.asarray(scales), slab=slab)
+    return PdxStore(perm=jnp.asarray(perm), vp=vp, ftail=ftail, q=q,
+                    scales=jnp.asarray(scales), qslab=qslab, qtail=qtail,
+                    norms=norms, err=err, slab=slab, dim=d)
+
+
+def pdx_queries(x, store: PdxStore) -> PdxQueries:
+    """Encode queries on the store's permutation + slab grid."""
+    vp, ftail, q, qslab, qtail, norms, err = _encode(
+        jnp.asarray(x, jnp.float32), store.perm, store.scales,
+        slab=store.slab)
+    return PdxQueries(vp=vp, ftail=ftail, q=q, qslab=qslab, qtail=qtail,
+                      norms=norms, err=err)

@@ -87,7 +87,8 @@ try:
 except ImportError:                                   # pragma: no cover
     _HAVE_HYP = False
 
-_SUBSETS = [("int8",), ("sketch1",), ("sketch1", "int8")]
+_SUBSETS = [("int8",), ("sketch1",), ("sketch1", "int8"), ("pdx",),
+            ("sketch1", "pdx")]
 
 
 def _tol(d, scale):

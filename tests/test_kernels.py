@@ -169,3 +169,106 @@ def test_int8_bounds_bracket_f32_distance(B, N, d, gs):
     tol = 1e-3 * max(d, 1)
     assert (lb <= true + tol).all()
     assert (ub >= true - tol).all()
+
+
+# ---------------------------------------------------------------------------
+# PDX (dimension-partitioned) kernels: interpret-mode Pallas vs the
+# pure-jnp slab-scan oracle, swept over the slab-grid shapes that stress
+# the padding path — d not a slab multiple, a single slab, d below one
+# slab, and tiny slabs — with early exit both on and off
+# ---------------------------------------------------------------------------
+
+SHAPES_PDX = [
+    # (B, N, d, slab) — slab-multiple / d∤slab / single-slab / d<slab /
+    # tiny slab / ragged B,N below the block sizes
+    (8, 128, 128, 64), (10, 130, 70, 64), (8, 96, 64, 64), (5, 77, 40, 64),
+    (3, 50, 129, 16), (1, 1, 7, 64),
+]
+
+
+def _pdx(rng, B, N, d, slab):
+    from repro.quant import build_pdx, pdx_queries
+    Y = rng.normal(size=(N, d)).astype(np.float32)
+    X = rng.normal(size=(B, d)).astype(np.float32)
+    st = build_pdx(Y, slab=slab)
+    return X, Y, st, pdx_queries(jnp.asarray(X), st)
+
+
+@pytest.mark.parametrize("B,N,d,slab", SHAPES_PDX)
+@pytest.mark.parametrize("early_exit", [False, True])
+def test_pairwise_pdx_pallas_matches_ref(B, N, d, slab, early_exit):
+    rng = np.random.default_rng(B * N + d + slab)
+    X, Y, st, qc = _pdx(rng, B, N, d, slab)
+    theta = 0.9 * np.sqrt(d)
+    args = (qc.q, st.q, st.scales, qc.qslab, st.qslab, qc.qtail, st.qtail,
+            qc.norms, st.norms, qc.err, st.err, jnp.float32(theta))
+    want, wns = ops.pairwise_sq_dists_pdx(
+        *args, slab=st.slab, dim=st.dim, early_exit=early_exit, impl="ref")
+    got, gns = ops.pairwise_sq_dists_pdx(
+        *args, slab=st.slab, dim=st.dim, early_exit=early_exit,
+        impl="pallas_interpret")
+    want, got = np.asarray(want), np.asarray(got)
+    np.testing.assert_array_equal(np.asarray(wns), np.asarray(gns))
+    np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+    fin = np.isfinite(want)
+    assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-3 * max(d, 1))
+    if early_exit:
+        # every retirement is certified: the true distance clears θ
+        true = np.asarray(ref.pairwise_sq_dists(jnp.asarray(X),
+                                                jnp.asarray(Y)))
+        assert (true[~fin] >= theta ** 2).all()
+    else:
+        assert fin.all() and (np.asarray(gns) == st.n_slabs).all()
+
+
+@pytest.mark.parametrize("B,N,d,slab", SHAPES_PDX)
+@pytest.mark.parametrize("early_exit", [False, True])
+def test_gather_pdx_pallas_matches_ref(B, N, d, slab, early_exit):
+    rng = np.random.default_rng(B * 31 + N + d)
+    X, Y, st, qc = _pdx(rng, B, N, d, slab)
+    th2 = 0.8 ** 2 * d
+    idx = rng.integers(0, N, (B, 9)).astype(np.int32)
+    idx[rng.random((B, 9)) < 0.3] = -1      # NO_NODE slots
+    args = (st.vp, st.ftail, st.ftail[:, 0], qc.vp, qc.ftail,
+            qc.ftail[:, 0], jnp.asarray(idx), jnp.float32(th2))
+    want, wns = ops.pdx_gather_sq_dists(
+        *args, dim=st.dim, early_exit=early_exit, impl="ref")
+    got, gns = ops.pdx_gather_sq_dists(
+        *args, dim=st.dim, early_exit=early_exit, impl="pallas_interpret")
+    want, got = np.asarray(want), np.asarray(got)
+    np.testing.assert_array_equal(np.asarray(wns), np.asarray(gns))
+    np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+    fin = np.isfinite(want)
+    assert_allclose(got[fin], want[fin], rtol=1e-5, atol=1e-4 * max(d, 1))
+    # invalid slots retire immediately in both impls
+    assert np.isinf(want[idx < 0]).all()
+    assert (np.asarray(wns)[idx < 0] == 0).all()
+    if early_exit:
+        true = ((X[:, None].astype(np.float64)
+                 - Y[np.maximum(idx, 0)].astype(np.float64)) ** 2
+                ).sum(axis=2)
+        retired = ~fin & (idx >= 0)
+        assert (true[retired] >= th2).all()
+
+
+def test_pdx_empty_and_degenerate_shapes():
+    """Zero-row operands and an all-NO_NODE gather route through both
+    impls without tripping the slab-grid padding asserts."""
+    from repro.quant import build_pdx, pdx_queries
+    rng = np.random.default_rng(7)
+    Y = rng.normal(size=(20, 48)).astype(np.float32)
+    st = build_pdx(Y, slab=64)
+    q0 = pdx_queries(jnp.zeros((0, 48), jnp.float32), st)
+    d0, n0 = ops.pairwise_sq_dists_pdx(
+        q0.q, st.q, st.scales, q0.qslab, st.qslab, q0.qtail, st.qtail,
+        q0.norms, st.norms, q0.err, st.err, jnp.float32(1.0),
+        slab=st.slab, dim=st.dim, impl="pallas_interpret")
+    assert d0.shape == (0, 20) and n0.shape == (0, 20)
+    qc = pdx_queries(jnp.asarray(rng.normal(size=(3, 48)), jnp.float32), st)
+    idx = jnp.full((3, 5), -1, jnp.int32)
+    dist, ns = ops.pdx_gather_sq_dists(
+        st.vp, st.ftail, st.ftail[:, 0], qc.vp, qc.ftail, qc.ftail[:, 0],
+        idx, jnp.float32(4.0), dim=st.dim, early_exit=True,
+        impl="pallas_interpret")
+    assert np.isinf(np.asarray(dist)).all()
+    assert (np.asarray(ns) == 0).all()

@@ -1,0 +1,333 @@
+"""PDX pruning-admissibility property suite.
+
+The PdxTier's early exit is only sound if three facts hold at every slab
+boundary ``k``:
+
+  * **Monotone prefixes** — per-slab contributions are nonnegative, so
+    the partial sum can only grow; a lane retired at slab ``k`` would
+    also be retired at every later slab.
+  * **Admissible tail bound** — partial sum + certified remaining-dims
+    bound never exceeds the true squared distance: a retirement can
+    never discard a true pair (the failure mode no re-rank can repair).
+  * **Kernel = reference** — the Pallas kernels (interpret mode) agree
+    with the pure-jnp references *exactly* on the retirement set and
+    slab counts, and bitwise on survivor sums (slab-ordered f32 adds),
+    including lanes forced to exit at an interior slab.
+
+Hypothesis hunts violations across random dims, scale regimes, sub-slab
+shapes and permutations; the deterministic tests below pin the awkward
+shapes (d < slab, d ∤ slab, empty, NO_NODE sentinels) and the on/off
+bitwise-survivor equality the end-to-end suites rely on.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops
+from repro.quant import build_pdx, deflate_tail, pdx_queries
+from repro.quant.pdx import n_slabs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYP = False
+
+
+def _mk(rng, N, B, d, scale=1.0, offset=0.0, slab=64):
+    Y = (rng.normal(size=(N, d)) * scale + offset).astype(np.float32)
+    X = (rng.normal(size=(B, d)) * scale + offset).astype(np.float32)
+    store = build_pdx(Y, slab=slab)
+    qc = pdx_queries(jnp.asarray(X), store)
+    return X, Y, store, qc
+
+
+def _pairwise(store, qc, theta, early_exit, impl):
+    return ops.pairwise_sq_dists_pdx(
+        qc.q, store.q, store.scales, qc.qslab, store.qslab, qc.qtail,
+        store.qtail, qc.norms, store.norms, qc.err, store.err,
+        jnp.float32(theta), slab=store.slab, dim=store.dim,
+        early_exit=early_exit, impl=impl)
+
+
+def _gather(store, qc, idx, th2, early_exit, impl):
+    return ops.pdx_gather_sq_dists(
+        store.vp, store.ftail, store.ftail[:, 0], qc.vp, qc.ftail,
+        qc.ftail[:, 0], jnp.asarray(idx, jnp.int32), jnp.float32(th2),
+        dim=store.dim, early_exit=early_exit, impl=impl)
+
+
+# -- layout invariants -------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,slab", [(7, 64), (64, 64), (70, 64), (150, 64),
+                                    (40, 16)])
+def test_ftail_tables_monotone_and_exact(d, slab):
+    """Suffix-energy tables: nonincreasing along slabs, exact row energy
+    at slab 0, and invariant under the dimension permutation."""
+    rng = np.random.default_rng(d * 31 + slab)
+    Y = rng.normal(size=(48, d)).astype(np.float32) * 3.0
+    store = build_pdx(Y, slab=slab)
+    S = n_slabs(d, slab)
+    assert store.ftail.shape == (48, S)
+    ft = np.asarray(store.ftail)
+    assert (np.diff(ft, axis=1) <= 1e-6 * (1 + ft[:, :1])).all()
+    # permuting dims preserves the squared norm
+    assert_allclose(ft[:, 0], (Y.astype(np.float64) ** 2).sum(axis=1),
+                    rtol=1e-5)
+    qt = np.asarray(store.qtail)
+    assert (np.diff(qt, axis=1) <= 1e-6 * (1 + qt[:, :1])).all()
+    assert_allclose(qt[:, 0], np.asarray(store.norms), rtol=1e-5, atol=1e-5)
+    # the permutation is a permutation
+    assert sorted(np.asarray(store.perm).tolist()) == list(range(d))
+
+
+def test_slab_prefix_partial_sums_monotone():
+    """Per-slab contributions of the f32 mirror are nonnegative (sums of
+    squares), so slab-prefix partial sums are monotone — the property
+    that makes retirement permanent."""
+    rng = np.random.default_rng(0)
+    X, Y, store, qc = _mk(rng, 40, 6, 150)
+    S = store.n_slabs
+    vp = np.asarray(store.vp).reshape(40, S, store.slab)
+    xp = np.asarray(qc.vp).reshape(6, S, store.slab)
+    contrib = ((xp[:, None] - vp[None]) ** 2).sum(axis=3)   # (B, N, S)
+    assert (contrib >= 0.0).all()
+    prefix = contrib.cumsum(axis=2)
+    assert (np.diff(prefix, axis=2) >= 0.0).all()
+    # full prefix = the true squared distance (permutation invariant)
+    true = ((X[:, None].astype(np.float64)
+             - Y[None].astype(np.float64)) ** 2).sum(axis=2)
+    assert_allclose(prefix[:, :, -1], true, rtol=1e-4, atol=1e-4)
+
+
+# -- admissibility (hypothesis) ---------------------------------------------
+
+
+if _HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.integers(2, 150), scale=st.sampled_from([0.05, 1.0, 30.0]),
+           offset=st.sampled_from([0.0, 20.0]),
+           slab=st.sampled_from([16, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_tail_bound_admissible_at_every_slab(d, scale, offset, slab,
+                                                 seed):
+        """The certified tail bound never overshoots, at any slab
+        boundary, for any pair. Two forms:
+
+        * vs the *kernel's own* f32 slab-ordered total (strict, no
+          tolerance) — ``partial_k + bound ≤ total``: exactly the
+          inequality that makes a retirement decision consistent with
+          the full-scan distance the off-mode kernel (and the band
+          test) computes, i.e. on/off-identical emitted pairs;
+        * vs the f64 true distance, with only an eps-scale accumulation
+          allowance — a real violation here would be a pair the kernel
+          wrongly retires.
+        """
+        rng = np.random.default_rng(seed)
+        X, Y, store, qc = _mk(rng, 24, 5, d, scale, offset, slab)
+        S = store.n_slabs
+        vp = np.asarray(store.vp).reshape(24, S, store.slab)
+        xp = np.asarray(qc.vp).reshape(5, S, store.slab)
+        contrib = ((xp[:, None] - vp[None]).astype(np.float32) ** 2
+                   ).sum(axis=3, dtype=np.float32)
+        ft_y = np.asarray(store.ftail)
+        ft_x = np.asarray(qc.ftail)
+        true = ((X[:, None].astype(np.float64)
+                 - Y[None].astype(np.float64)) ** 2).sum(axis=2)
+        energy = ft_x[:, None, 0] + ft_y[None, :, 0]
+        eps_tol = 1e-6 * (1.0 + energy)
+        partials = [np.zeros((5, 24), np.float32)]
+        for k in range(S):
+            partials.append(partials[-1] + contrib[:, :, k])
+        total = partials[-1]
+        for k in range(S):
+            # tail of slabs k.. (before adding slab k's contribution)
+            rt = (np.sqrt(ft_x[:, None, k]) - np.sqrt(ft_y[None, :, k])) ** 2
+            bound = np.asarray(deflate_tail(
+                jnp.asarray(rt, jnp.float32), jnp.asarray(energy), d))
+            assert (partials[k] + bound <= total).all(), (d, scale, k)
+            assert (partials[k] + bound <= true + eps_tol).all(), \
+                (d, scale, k)
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.integers(2, 150), scale=st.sampled_from([0.05, 1.0, 30.0]),
+           theta_q=st.floats(0.1, 3.0),
+           early=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_pairwise_kernel_matches_ref(d, scale, theta_q, early, seed):
+        """Pallas (interpret) vs pure-jnp reference: identical retirement
+        sets and slab counts, matching survivor sums; retired lanes are
+        never true pairs (admissibility, end to end)."""
+        rng = np.random.default_rng(seed)
+        X, Y, store, qc = _mk(rng, 40, 8, d, scale)
+        theta = theta_q * scale * np.sqrt(d)
+        want, wns = _pairwise(store, qc, theta, early, "ref")
+        got, gns = _pairwise(store, qc, theta, early, "pallas_interpret")
+        want, got = np.asarray(want), np.asarray(got)
+        np.testing.assert_array_equal(np.asarray(wns), np.asarray(gns))
+        np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+        fin = np.isfinite(want)
+        assert_allclose(got[fin], want[fin], rtol=1e-5,
+                        atol=1e-4 * max(d, 1) * scale ** 2)
+        # no true pair retired: retirement certifies distance ≥ θ²
+        true = ((X[:, None].astype(np.float64)
+                 - Y[None].astype(np.float64)) ** 2).sum(axis=2)
+        assert (true[~fin] >= theta ** 2).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.integers(2, 150), scale=st.sampled_from([0.2, 5.0]),
+           theta_q=st.floats(0.1, 3.0),
+           early=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_gather_kernel_matches_ref(d, scale, theta_q, early, seed):
+        """The rowwise-gather (traversal band) kernel: same oracle
+        agreement, with NO_NODE sentinel slots mixed in."""
+        rng = np.random.default_rng(seed)
+        X, Y, store, qc = _mk(rng, 40, 6, d, scale)
+        th2 = (theta_q * scale * np.sqrt(d)) ** 2
+        idx = rng.integers(0, 40, (6, 9)).astype(np.int32)
+        idx[rng.random((6, 9)) < 0.3] = -1
+        want, wns = _gather(store, qc, idx, th2, early, "ref")
+        got, gns = _gather(store, qc, idx, th2, early, "pallas_interpret")
+        want, got = np.asarray(want), np.asarray(got)
+        np.testing.assert_array_equal(np.asarray(wns), np.asarray(gns))
+        np.testing.assert_array_equal(np.isinf(want), np.isinf(got))
+        fin = np.isfinite(want)
+        assert_allclose(got[fin], want[fin], rtol=1e-5,
+                        atol=1e-4 * max(d, 1) * scale ** 2)
+        # sentinels: (+inf, 0); retired real lanes: not true pairs
+        assert np.isinf(want[idx < 0]).all()
+        assert (np.asarray(wns)[idx < 0] == 0).all()
+        true = ((X[:, None].astype(np.float64)
+                 - Y[np.maximum(idx, 0)].astype(np.float64)) ** 2
+                ).sum(axis=2)
+        retired = ~fin & (idx >= 0)
+        assert (true[retired] >= th2).all()
+
+else:                                                  # pragma: no cover
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_tail_bound_admissible_at_every_slab():
+        pass
+
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_pairwise_kernel_matches_ref():
+        pass
+
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_gather_kernel_matches_ref():
+        pass
+
+
+# -- deterministic anchors ---------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_forced_exit_at_interior_slab(impl):
+    """Pin all three exit regimes in both kernels:
+
+      * a lane whose suffix energies alone certify rejection retires
+        *before* any slab (nscan == 0 — the tail bound at k=0);
+      * a lane with norm-matched spikes (tail bound blind) but a huge
+        first-slab contribution retires after exactly one slab;
+      * a self-pair survives the full scan at distance ~0.
+    """
+    d, slab = 150, 64
+    rng = np.random.default_rng(7)
+    base = (rng.normal(size=(16, d)) * 0.01).astype(np.float32)
+    Y = base.copy()
+    Y[0] += 100.0          # huge norm → tail bound retires it at k=0
+    Y[1, :40] += 100.0     # spike in the 40 highest-variance dims
+    store = build_pdx(Y, slab=slab)
+    S = store.n_slabs
+    X = base[1:3].copy()
+    X[0, :40] -= 100.0     # mirrored spike: suffix energies ≈ Y[1]'s, so
+    #                        the k=0 tail bound is ~0 — only *scanning*
+    #                        slab 0 (where all the distance lives) exits
+    qc = pdx_queries(jnp.asarray(X), store)
+    theta = 0.5
+
+    dhat, nscan = _pairwise(store, qc, theta, True, impl)
+    dhat, nscan = np.asarray(dhat), np.asarray(nscan)
+    assert np.isinf(dhat[:, :2]).all()
+    assert (nscan[:, 0] == 0).all()            # tail exit, nothing scanned
+    assert nscan[0, 1] == 1                    # interior exit after slab 0
+    assert nscan[1, 1] == 0                    # plain query: tail exit
+    # self-pair survives the full scan at distance ~0
+    assert nscan[1, 2] == S and dhat[1, 2] < theta ** 2
+
+    idx = np.array([[0, 1, 1], [0, 1, 2]], np.int32)
+    gd, gns = _gather(store, qc, idx, theta ** 2, True, impl)
+    gd, gns = np.asarray(gd), np.asarray(gns)
+    assert np.isinf(gd[:, :2]).all()
+    assert (gns[:, 0] == 0).all()
+    assert gns[0, 1] == 1 and gns[1, 1] == 0
+    assert gns[1, 2] == S and gd[1, 2] < theta ** 2
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("d,slab", [(3, 64), (64, 64), (70, 64), (129, 64),
+                                    (40, 16)])
+def test_slab_grid_shapes(impl, d, slab):
+    """Sub-slab, exact-slab, d ∤ slab, and multi-slab dims all route
+    through both kernels (the encode-side zero padding must be inert)."""
+    rng = np.random.default_rng(d + slab)
+    X, Y, store, qc = _mk(rng, 33, 5, d, slab=slab)
+    theta = 0.8 * np.sqrt(d)
+    dhat, nscan = _pairwise(store, qc, theta, True, impl)
+    true = ((X[:, None].astype(np.float64)
+             - Y[None].astype(np.float64)) ** 2).sum(axis=2)
+    fin = np.isfinite(np.asarray(dhat))
+    # survivors approximate the true distance through the int8 grid
+    err = (np.asarray(qc.err)[:, None] + np.asarray(store.err)[None, :])
+    slack = err * (2.0 * np.sqrt(np.maximum(true, 0.0)) + err)
+    assert (np.abs(np.asarray(dhat) - true) <= slack + 1e-3 * max(d, 1)
+            )[fin].all()
+    assert (true[~fin] >= theta ** 2).all()
+    idx = rng.integers(0, 33, (5, 7)).astype(np.int32)
+    gd, _ = _gather(store, qc, idx, theta ** 2, True, impl)
+    gfin = np.isfinite(np.asarray(gd))
+    assert_allclose(np.asarray(gd)[gfin],
+                    true[np.arange(5)[:, None], idx][gfin],
+                    rtol=1e-4, atol=1e-3 * max(d, 1))
+
+
+def test_empty_shapes():
+    rng = np.random.default_rng(1)
+    _, _, store, qc = _mk(rng, 8, 4, 20)
+    empty_q = pdx_queries(jnp.zeros((0, 20), jnp.float32), store)
+    dhat, nscan = _pairwise(store, empty_q, 1.0, True, "ref")
+    assert dhat.shape == (0, 8) and nscan.shape == (0, 8)
+    gd, gns = _gather(store, qc, np.zeros((4, 0), np.int32), 1.0, True,
+                      "ref")
+    assert gd.shape == (4, 0) and gns.shape == (4, 0)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_on_off_survivors_bitwise_identical(impl):
+    """Early-exit on vs off: identical retirement is not required of
+    *off* (it scans everything), but every lane the on-kernel keeps must
+    carry the bitwise-identical slab-ordered f32 sum — the fact that
+    makes the downstream band split on/off-invariant."""
+    rng = np.random.default_rng(3)
+    X, Y, store, qc = _mk(rng, 64, 8, 96)
+    theta = 0.9 * np.sqrt(96)
+    on, ns_on = _pairwise(store, qc, theta, True, impl)
+    off, ns_off = _pairwise(store, qc, theta, False, impl)
+    on, off = np.asarray(on), np.asarray(off)
+    fin = np.isfinite(on)
+    assert fin.sum() > 0 and (~fin).sum() > 0, "want both populations"
+    np.testing.assert_array_equal(on[fin], off[fin])
+    assert (np.asarray(ns_off) == store.n_slabs).all()
+    # off-mode still reports full-scan distances for the retired lanes,
+    # and those distances are ≥ the retirement certificate allows
+    assert np.isfinite(off).all()
+
+    gidx = rng.integers(0, 64, (8, 12)).astype(np.int32)
+    g_on, _ = _gather(store, qc, gidx, theta ** 2, True, impl)
+    g_off, _ = _gather(store, qc, gidx, theta ** 2, False, impl)
+    g_on, g_off = np.asarray(g_on), np.asarray(g_off)
+    gfin = np.isfinite(g_on)
+    np.testing.assert_array_equal(g_on[gfin], g_off[gfin])

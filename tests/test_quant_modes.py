@@ -2,11 +2,14 @@
 
 Two contracts, asserted uniformly over ``QUANT_MODES``:
 
-  * **Golden equivalence** — on a fixed-seed dataset, ``sketch8``,
-    ``sq8`` and ``off`` emit the *identical* pair set at equal search
-    budget across the NLJ, search (exhaustive ``index``), MI, and
-    2-shard paths. The budget is chosen so the f32 run reaches the exact
-    truth; the quantized runs must then match it bit-for-bit.
+  * **Golden equivalence** — on a fixed-seed dataset, every compressed
+    mode (``sq8``, ``sketch8``, ``pdx8``, ``sketchpdx8``) and ``off``
+    emit the *identical* pair set at equal search budget across the NLJ,
+    search (exhaustive ``index``), MI, and 2-shard paths. The budget is
+    chosen so the f32 run reaches the exact truth; the quantized runs
+    must then match it bit-for-bit. PDX modes additionally prove
+    ``early_exit`` on == off (pair set and re-rank survivor count), with
+    a regression floor that exit genuinely skips dimensions.
   * **Streaming regression** — multiple ``submit()`` batches under each
     mode produce the same pair set as a one-shot ``join()``, and
     ``reset_stream()`` clears every piece of carry state (resubmitting
@@ -16,6 +19,7 @@ CI runs this module as a quant-mode matrix: setting ``REPRO_QUANT_MODE``
 to one of the modes narrows the parametrization to that mode (each CI
 matrix leg publishes its own junit XML).
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -131,6 +135,69 @@ def test_golden_identical_pair_set_2shard():
                            os.path.abspath(__file__))))
     assert r.returncode == 0, r.stdout + r.stderr
     assert "QUANT_MODES_SHARDED_OK" in r.stdout
+
+
+# -- PDX early-exit equivalence ---------------------------------------------
+#
+# The PDX tier's whole claim: retiring lanes mid-vector on certified tail
+# bounds changes wall-clock, never results. ``early_exit=False`` runs the
+# same kernels as full slab scans with bit-identical survivor sums, so
+# the emitted pair set AND the re-rank survivor count must match exactly.
+
+PDX_MODES = tuple(m for m in MODES_UNDER_TEST if m in ("pdx8", "sketchpdx8"))
+
+
+def _cfg_ee(method, theta, quant, early_exit, wave=64):
+    return dataclasses.replace(
+        _cfg(method, theta, quant, wave=wave),
+        traversal=dataclasses.replace(TC, early_exit=early_exit))
+
+
+@pytest.mark.parametrize("quant", PDX_MODES)
+@pytest.mark.parametrize("method", ["nlj", "index", "es_mi"])
+def test_early_exit_on_off_identical(golden_ds, golden_engine, golden_theta,
+                                     method, quant):
+    on = golden_engine.join(golden_ds.X,
+                            _cfg_ee(method, golden_theta, quant, True))
+    off = golden_engine.join(golden_ds.X,
+                             _cfg_ee(method, golden_theta, quant, False))
+    assert on.pair_set() == off.pair_set(), \
+        (method, quant, len(on.pair_set() ^ off.pair_set()))
+    assert on.stats.n_rerank == off.stats.n_rerank, (method, quant)
+
+
+@pytest.mark.parametrize("quant", PDX_MODES)
+def test_early_exit_streaming_submit_identical(golden_ds, golden_theta,
+                                               quant):
+    """The submit() leg: batch boundaries and the work-sharing carry do
+    not break on/off equivalence."""
+    sets = {}
+    for ee in (True, False):
+        eng = JoinEngine(golden_ds.Y, build_kw=BK)
+        cfg = _cfg_ee("es_sws", golden_theta, quant, ee, wave=32)
+        got = set()
+        for b0 in range(0, golden_ds.X.shape[0], 40):
+            got |= eng.submit(golden_ds.X[b0:b0 + 40], cfg).pair_set()
+        sets[ee] = got
+    assert sets[True] == sets[False], (quant,
+                                       len(sets[True] ^ sets[False]))
+
+
+@pytest.mark.skipif("pdx8" not in MODES_UNDER_TEST,
+                    reason="pdx8 not in this matrix leg")
+def test_early_exit_actually_skips_dims():
+    """Regression floor for the point of the tier: on clustered data most
+    NLJ lanes retire before the last slab (dims_scanned_frac < 1), while
+    the full-scan run reports exactly 1 — and both emit the same pairs."""
+    ds = make_dataset("clustered", n_data=1200, n_query=64, dim=96, seed=7)
+    theta = float(thresholds(ds, 3)[0])
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    on = eng.join(ds.X, _cfg_ee("nlj", theta, "pdx8", True))
+    off = eng.join(ds.X, _cfg_ee("nlj", theta, "pdx8", False))
+    assert on.pair_set() == off.pair_set()
+    assert on.stats.n_dims_total == ds.X.shape[0] * ds.Y.shape[0] * 96
+    assert on.stats.dims_scanned_frac < 1.0, on.stats.dims_scanned_frac
+    assert off.stats.dims_scanned_frac == 1.0
 
 
 # -- streaming regressions --------------------------------------------------
