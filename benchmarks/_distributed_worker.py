@@ -28,7 +28,7 @@ def main(n_data: int, n_shards: int) -> None:
         wave_size=128)
     dt = time.perf_counter() - t0
     rec = recall(JoinResult(pairs=pairs, stats=JoinStats()), tr)
-    print(f"{n_shards},{dt:.6g},{rec:.6g},{len(pairs)},{stats['n_dist']}")
+    print(f"{n_shards},{dt:.6g},{rec:.6g},{len(pairs)},{stats.n_dist}")
 
 
 if __name__ == "__main__":

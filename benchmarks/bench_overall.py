@@ -13,11 +13,14 @@ the sequential reference path, asserting the pair sets are identical and
 reporting wall-clock plus the band-compacted re-rank's f32 gather bytes
 per pair. ``run_early_exit`` is the PDX analogue: exit-on vs exit-off
 wall-clock under ``pdx8`` on the clustered high-dim dataset, asserting
-identical pair sets and reporting ``dims_scanned_frac``. ``--json PATH``
-writes all tables as a JSON artifact (``BENCH_overall.json``) — CI runs
-the ``--overlap-only`` form as a smoke step and uploads it so the
-serving-path perf trajectory is recorded per commit alongside
-``BENCH_offline.json``.
+identical pair sets and reporting ``dims_scanned_frac``.
+``run_trace_overhead`` is the TraceKit guard: the same cell min-of-N
+timed with the span tracer off vs on, asserting identical pair sets and
+that tracing costs < 5% wall-clock (plus a small additive slack for
+sub-second CI cells). ``--json PATH`` writes all tables as a JSON
+artifact (``BENCH_overall.json``) — CI runs the ``--overlap-only`` form
+as a smoke step and uploads it so the serving-path perf trajectory is
+recorded per commit alongside ``BENCH_offline.json``.
 """
 from __future__ import annotations
 
@@ -96,6 +99,56 @@ def run_overlap(scale: str = "ci", *, regime: str = "manifold",
     return rows
 
 
+def run_trace_overhead(scale: str = "ci", *, regime: str = "manifold",
+                       theta_idx: int = 2, method: str = "es_mi",
+                       quant: str = "sq8", repeats: int = 3,
+                       slack_s: float = 0.15) -> list[dict]:
+    """TraceKit overhead guard: one pipelined MI-join cell timed with the
+    span tracer disabled vs enabled, min-of-``repeats`` per arm.
+
+    Asserts (a) the emitted pair sets are bit-identical — tracing is
+    observation, never scheduling — and (b) the traced arm's best
+    wall-clock stays within 5% of the untraced best plus ``slack_s``
+    seconds of additive slack (CI cells are sub-second, where a fixed 5%
+    would be dominated by scheduler noise; the relative bound is what
+    matters at paper scale).
+    """
+    from repro.obs import trace as obs_trace
+    theta = theta_grid(regime, scale)[theta_idx - 1]
+
+    def arm(traced: bool):
+        times, res, n_events = [], None, 0
+        for _ in range(repeats):
+            tr = obs_trace.enable() if traced else None
+            try:
+                res, dt, _ = run_method(regime, method, theta, scale=scale,
+                                        quant=quant)
+            finally:
+                if traced:
+                    obs_trace.disable()
+            if tr is not None:
+                n_events = tr.n_events
+            times.append(dt)
+        return res, min(times), n_events
+
+    res_off, t_off, _ = arm(False)
+    res_on, t_on, n_events = arm(True)
+    match = res_on.pair_set() == res_off.pair_set()
+    assert match, (method, quant,
+                   len(res_on.pair_set() ^ res_off.pair_set()))
+    budget = 1.05 * t_off + slack_s
+    assert t_on <= budget, (
+        f"tracing overhead over budget: traced {t_on:.3f}s vs "
+        f"untraced {t_off:.3f}s (budget {budget:.3f}s)")
+    return [dict(
+        dataset=regime, theta_idx=theta_idx, theta=theta,
+        method=method, quant=quant,
+        trace_off_s=t_off, trace_on_s=t_on,
+        overhead_frac=(t_on - t_off) / max(t_off, 1e-9),
+        trace_events=n_events,
+        pairs=len(res_on.pairs), pairs_match=match)]
+
+
 def run_early_exit(scale: str = "ci_hd", *, regime: str = "clustered",
                    theta_idx: int = 2,
                    methods=("nlj", "es_mi"),
@@ -156,12 +209,15 @@ def main(argv=None) -> None:
     overlap_rows = run_overlap(args.scale, regime=args.regimes[0])
     early_exit_rows = run_early_exit(
         "full_hd" if args.scale == "full" else "ci_hd")
+    trace_rows = run_trace_overhead(args.scale, regime=args.regimes[0])
     emit(rows)
     emit(overlap_rows)
     emit(early_exit_rows)
+    emit(trace_rows)
     if args.json:
         payload = dict(bench="overall", scale=args.scale, rows=rows,
-                       overlap=overlap_rows, early_exit=early_exit_rows)
+                       overlap=overlap_rows, early_exit=early_exit_rows,
+                       trace_overhead=trace_rows)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,9 +34,10 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import compat, traversal
-from repro.core.types import (NO_NODE, GraphIndex, TraversalConfig,
-                              early_exit_enabled)
+from repro.core.types import (NO_NODE, GraphIndex, JoinStats,
+                              TraversalConfig, early_exit_enabled)
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -575,9 +577,18 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
     whose band overflows the capacity on any shard is retried through a
     step built at the next power-of-two capacity (sticky for the rest of
     the call), so the merged pair set never depends on the capacity.
+
+    Returns ``(pairs, stats)`` where ``stats`` is a field-complete
+    ``JoinStats``: one per-shard ``JoinStats`` is accumulated over the
+    run (``band_occ_per_shard`` holding that shard's band total) and the
+    shard group is reduced with the associative ``JoinStats.merge`` —
+    the same combine callers use to fold the result into their own
+    stats. Host-phase time is self-attributed (``wait_seconds`` for the
+    blocking per-wave transfer, ``other_seconds`` for pair assembly).
     """
     X = jnp.asarray(X)
     nq = X.shape[0]
+    d = int(X.shape[1])
     C = cfg.pool_cap
     cap0 = (min(ops.next_pow2(cfg.rerank_cap), C)
             if cfg.rerank_cap > 0 else C)
@@ -592,50 +603,75 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
 
     cur_cap = cap0 if cascade is not None else C
     pairs_out = []
-    stats = dict(n_dist=0, n_overflow=0, n_rerank=0, n_esc8=0,
-                 n_rerank_gather=0, n_dims_scanned=0, n_dims_total=0,
-                 band_per_shard=np.zeros(smi.n_shards, np.int64))
+    shard_stats = [JoinStats() for _ in range(smi.n_shards)]
+    band = np.zeros(smi.n_shards, np.int64)
+    tr = obs_trace.tracer()
 
     def dispatch(padded, lane_valid, cap: int):
         step, qargs = get_step(cap)
+        dev = tr.begin("wave/device", lane="traversal", cap=cap,
+                       shards=smi.n_shards)
         with compat.set_mesh(mesh):
             outs = step(
                 smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
                 jnp.asarray(lane_valid))
         if cascade is not None:
-            stats["n_rerank_gather"] += (smi.n_shards
-                                         * int(lane_valid.shape[0]) * cap)
+            B = int(lane_valid.shape[0])
+            for st in shard_stats:
+                st.n_rerank_gather += B * cap
+                st.bytes_band += B * cap * d * 4
+        return outs, dev
+
+    def fetch(outs, dev):
+        """The blocking per-wave transfer (all shard pools at once)."""
+        t0 = time.perf_counter()
+        outs = jax.device_get(outs)
+        if dev:
+            dev.end()
+        shard_stats[0].wait_seconds += time.perf_counter() - t0
+        shard_stats[0].bytes_assembly += sum(a.nbytes for a in outs)
         return outs
 
     def assemble(wave) -> None:
         nonlocal cur_cap
-        padded, lane_valid, outs = wave
-        (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
-         n_band_over, n_dims_s, n_dims_t) = outs
-        over = np.asarray(n_band_over)[:, lane_valid]
-        if over.sum() > 0:
-            # a shard's band outgrew the compaction capacity: re-rank
-            # this wave at a capacity covering the worst shard band and
-            # keep the larger step for the rest of the call
-            needed = int(np.asarray(n_rerank)[:, lane_valid].max())
-            cur_cap = ops.grow_cap(cur_cap, needed, C)
+        padded, lane_valid, outs, dev = wave
+        with tr.span("wave/assemble", lane="assembly") as sp:
             (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
-             n_band_over, n_dims_s, n_dims_t) = dispatch(
-                padded, lane_valid, cur_cap)
-        gids = np.asarray(gids)          # (S, B, C)
-        # (S, B, C) kept pool slots, restricted to real lanes
-        mask = np.asarray(keep) & lane_valid[None, :, None]
-        sh, ln, sl = np.nonzero(mask)
-        pairs_out.append(np.stack([padded[ln], gids[sh, ln, sl]], axis=1))
-        stats["n_dist"] += int(np.asarray(n_dist)[:, lane_valid].sum())
-        stats["n_overflow"] += int(np.asarray(overflow)[:, lane_valid].sum())
-        stats["n_rerank"] += int(np.asarray(n_rerank)[:, lane_valid].sum())
-        stats["n_esc8"] += int(np.asarray(n_esc)[:, lane_valid].sum())
-        stats["n_dims_scanned"] += int(np.asarray(n_dims_s).sum())
-        stats["n_dims_total"] += int(np.asarray(n_dims_t).sum())
-        stats["band_per_shard"] += np.asarray(n_rerank)[:, lane_valid].sum(
-            axis=1).astype(np.int64)
+             n_band_over, n_dims_s, n_dims_t) = fetch(outs, dev)
+            if n_band_over[:, lane_valid].sum() > 0:
+                # a shard's band outgrew the compaction capacity: re-rank
+                # this wave at a capacity covering the worst shard band
+                # and keep the larger step for the rest of the call
+                needed = int(n_rerank[:, lane_valid].max())
+                if tr:
+                    tr.instant("wave/overflow_retry", lane="traversal",
+                               needed=needed, cap=cur_cap)
+                cur_cap = ops.grow_cap(cur_cap, needed, C)
+                (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
+                 n_band_over, n_dims_s, n_dims_t) = fetch(
+                    *dispatch(padded, lane_valid, cur_cap))
+            t1 = time.perf_counter()
+            # (S, B, C) kept pool slots, restricted to real lanes
+            mask = keep & lane_valid[None, :, None]
+            sh, ln, sl = np.nonzero(mask)
+            pairs_out.append(np.stack([padded[ln], gids[sh, ln, sl]],
+                                      axis=1))
+            per = {  # (S,) per-shard wave totals
+                "n_dist": n_dist[:, lane_valid].sum(axis=1),
+                "n_overflow": overflow[:, lane_valid].sum(axis=1),
+                "n_rerank": n_rerank[:, lane_valid].sum(axis=1),
+                "n_esc8": n_esc[:, lane_valid].sum(axis=1),
+                "n_dims_scanned": np.asarray(n_dims_s).reshape(-1),
+                "n_dims_total": np.asarray(n_dims_t).reshape(-1),
+            }
+            for s, st in enumerate(shard_stats):
+                for k, v in per.items():
+                    setattr(st, k, getattr(st, k) + int(v[s]))
+            band[:] += n_rerank[:, lane_valid].sum(axis=1).astype(np.int64)
+            if sp:
+                sp.set(pairs=int(ln.size))
+            shard_stats[0].other_seconds += time.perf_counter() - t1
 
     pending = None
     for q0 in range(0, nq, wave_size):
@@ -644,17 +680,20 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         padded[:ids.size] = ids
         lane_valid = np.zeros(wave_size, bool)
         lane_valid[:ids.size] = True
-        outs = dispatch(padded, lane_valid, cur_cap)
+        outs, dev = dispatch(padded, lane_valid, cur_cap)
         if overlap:
             if pending is not None:
                 assemble(pending)
-            pending = (padded, lane_valid, outs)
+            pending = (padded, lane_valid, outs, dev)
         else:
-            assemble((padded, lane_valid, outs))
+            assemble((padded, lane_valid, outs, dev))
     if pending is not None:
         assemble(pending)
     pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
              else np.empty((0, 2), np.int64)).astype(np.int64)
+    for s, st in enumerate(shard_stats):
+        st.band_occ_per_shard = (int(band[s]),)
+    stats = functools.reduce(JoinStats.merge, shard_stats)
     return pairs, stats
 
 

@@ -192,6 +192,26 @@ class JoinStats:
     #                                only the slabs they saw)
     n_dims_total: int = 0          # PDX modes: lanes × full dim — the
     #                                denominator of dims_scanned_frac
+    # Work-sharing cache effectiveness (the paper's core claim; see
+    # waves.seeds_from_cache / update_sws_cache / engine._remember):
+    cache_hits: int = 0            # lanes seeded from a parent's entry
+    cache_misses: int = 0          # lanes whose parent had no usable
+    #                                entry (fell back to s_Y)
+    cache_evictions: int = 0       # entries dropped (carry-window
+    #                                eviction or overwrite)
+    cache_tombstones: int = 0      # pipelined eviction-vs-pending races
+    #                                resolved by dropping the entry after
+    #                                its late write (engine drain)
+    # Bytes moved per transfer class of the wave pipeline (device↔host
+    # accounting; ARCHITECTURE §6):
+    bytes_feedback: int = 0        # seed-feedback + band-occupancy
+    #                                fetches (the small blocking
+    #                                inter-wave transfer)
+    bytes_band: int = 0            # f32 rows dispatched to the
+    #                                band-compacted re-rank gather
+    #                                (n_rerank_gather × d × 4)
+    bytes_assembly: int = 0        # the bulky per-wave pool transfer
+    #                                (idx/dist/keep/stats block)
 
     @property
     def total_seconds(self) -> float:
@@ -210,6 +230,74 @@ class JoinStats:
     def as_dict(self) -> dict[str, Any]:
         return dict(dataclasses.asdict(self), total_seconds=self.total_seconds,
                     dims_scanned_frac=self.dims_scanned_frac)
+
+    # -- merge / metrics-registry bridge (obs/) -----------------------------
+
+    # Non-additive fields. Everything else merges by summation, so new
+    # counters are merge-covered by default; a field with different
+    # semantics must be registered here (test_obs asserts every field is
+    # classified).
+    _MERGE_MAX = ("peak_cache_entries",)   # high-water marks
+    _MERGE_CAT = ("band_occ_per_shard",)   # per-shard listings: merging
+    #                                        disjoint shard groups
+    #                                        concatenates them
+
+    def merge(self, other: "JoinStats") -> "JoinStats":
+        """Associative, field-complete combine of two disjoint pieces of
+        work (shards, waves, streamed batches): counters and seconds
+        sum, high-water marks take the max, per-shard tuples
+        concatenate. Replaces the ad-hoc per-field summing the sharded
+        path used to do — ``core/distributed.py`` builds one ``JoinStats``
+        per shard and reduces with ``merge``."""
+        kw: dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if f.name in self._MERGE_MAX:
+                kw[f.name] = max(a, b)
+            elif f.name in self._MERGE_CAT:
+                kw[f.name] = tuple(a) + tuple(b)
+            else:
+                kw[f.name] = a + b
+        return JoinStats(**kw)
+
+    def publish(self, metrics, prefix: str = "join") -> None:
+        """Accumulate this join's stats into an ``obs.Metrics`` registry
+        (the engine-lifetime backend): additive fields increment
+        counters, high-water marks drive ``set_max`` gauges, and the
+        per-shard band listing lands as per-shard gauges plus a
+        max/mean imbalance gauge."""
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            name = f"{prefix}.{f.name}"
+            if f.name in self._MERGE_MAX:
+                metrics.gauge(name).set_max(v)
+            elif f.name in self._MERGE_CAT:
+                for i, b in enumerate(v):
+                    metrics.gauge(f"{name}.shard{i}").set(int(b))
+                if v:
+                    mean = sum(v) / len(v)
+                    metrics.gauge(f"{prefix}.shard_band_imbalance").set(
+                        max(v) / mean if mean > 0 else 1.0)
+            elif v:
+                metrics.counter(name).inc(v)
+
+    @classmethod
+    def from_metrics(cls, metrics, prefix: str = "join") -> "JoinStats":
+        """Materialize the registry's cumulative ``{prefix}.*`` values
+        back into a ``JoinStats`` — the engine-lifetime aggregate is the
+        same public dataclass every single join reports."""
+        kw: dict[str, Any] = {}
+        for f in dataclasses.fields(cls):
+            name = f"{prefix}.{f.name}"
+            if f.name in cls._MERGE_CAT:
+                vals = []
+                while metrics.get(f"{name}.shard{len(vals)}") is not None:
+                    vals.append(int(metrics.value(f"{name}.shard{len(vals)}")))
+                kw[f.name] = tuple(vals)
+            else:
+                v = metrics.value(name, 0)
+                kw[f.name] = float(v) if f.type == "float" else int(v)
+        return cls(**kw)
 
 
 @dataclasses.dataclass

@@ -42,6 +42,8 @@ from repro.core.types import (QUANT_FILTER_MODES, GraphIndex, JoinConfig,
                               JoinResult, JoinStats, early_exit_enabled)
 from repro.engine import waves as W
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -125,12 +127,18 @@ class JoinEngine:
         as seed donors for future batches.
     max_cached_indexes : LRU capacity for per-X artifacts (query index,
         merged index, sharded index — each keyed by X's fingerprint).
+    metrics : an ``obs.Metrics`` registry to accumulate into (the
+        process-global default registry unless a private one is passed
+        for isolation). Every finished join publishes its ``JoinStats``
+        here, artifact-cache hits/misses are counted per kind, and
+        ``metrics_snapshot()`` / ``cumulative_stats()`` read it back.
     """
 
     def __init__(self, Y, *, build_kw: dict | None = None,
                  default: JoinConfig | None = None, n_shards: int = 1,
                  mesh=None, shard_axes=("data",), carry_window: int = 4096,
-                 max_cached_indexes: int = 4):
+                 max_cached_indexes: int = 4,
+                 metrics: obs_metrics.Metrics | None = None):
         self.Y = jnp.asarray(Y)
         self.build_kw = dict(build_kw or {})
         self.default = default or JoinConfig()
@@ -138,6 +146,8 @@ class JoinEngine:
         self._mesh = mesh
         self._shard_axes = shard_axes
         self.carry_window = int(carry_window)
+        self.metrics = metrics if metrics is not None else \
+            obs_metrics.metrics()
 
         self._index_y: GraphIndex | None = None
         self._index_x = _LRU(max_cached_indexes)
@@ -174,6 +184,10 @@ class JoinEngine:
     def n_index_builds(self) -> int:
         return sum(self.build_counts.values())
 
+    def _cache_event(self, kind: str, hit: bool) -> None:
+        self.metrics.counter(
+            f"engine.cache.{kind}.{'hit' if hit else 'miss'}").inc()
+
     def _build_kw_for(self, key: tuple, vecs) -> dict:
         """``build_kw`` with a ``quant`` mode resolved to a prebuilt
         cascade from the engine's tier-store cache, so a cascade-driven
@@ -189,6 +203,7 @@ class JoinEngine:
 
     def index_y(self) -> GraphIndex:
         """The data-side index G_Y (built once, reused forever)."""
+        self._cache_event("index_y", self._index_y is not None)
         if self._index_y is None:
             from repro.core import graph
             t0 = time.perf_counter()
@@ -202,6 +217,7 @@ class JoinEngine:
         """Query-side index G_X (MST ordering for the HWS/SWS methods)."""
         fp = _fingerprint(X)
         hit = self._index_x.touch(fp)
+        self._cache_event("index_x", hit is not None)
         if hit is None:
             from repro.core import graph
             X = jnp.asarray(X)
@@ -217,6 +233,7 @@ class JoinEngine:
         """Merged index G_{X∪Y} (greedy phase offloaded, paper §4.4)."""
         fp = _fingerprint(X)
         hit = self._merged.touch(fp)
+        self._cache_event("merged", hit is not None)
         if hit is None:
             from repro.core import graph
             t0 = time.perf_counter()
@@ -235,6 +252,7 @@ class JoinEngine:
         from repro.core import distributed
         fp = _fingerprint(X)
         hit = self._sharded.touch(fp)
+        self._cache_event("sharded", hit is not None)
         if hit is None:
             t0 = time.perf_counter()
             hit = distributed.build_sharded_merged_index(
@@ -257,6 +275,7 @@ class JoinEngine:
 
         ck = (tier_name,) + key
         hit = self._tier_stores.touch(ck)
+        self._cache_event("tier_store", hit is not None)
         if hit is None:
             t0 = time.perf_counter()
             if key[0] == "sharded":
@@ -446,16 +465,13 @@ class JoinEngine:
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
             wave_size=cfg.wave_size, hybrid=hybrid, cascade=casc,
             n_data=int(self.Y.shape[0]), overlap=W.overlap_enabled(cfg))
-        stats.expand_seconds += time.perf_counter() - t0
-        stats.n_dist += int(dstats["n_dist"])
-        stats.n_overflow += int(dstats["n_overflow"])
-        stats.n_rerank += int(dstats.get("n_rerank", 0))
-        stats.n_esc8 += int(dstats.get("n_esc8", 0))
-        stats.n_rerank_gather += int(dstats.get("n_rerank_gather", 0))
-        stats.n_dims_scanned += int(dstats.get("n_dims_scanned", 0))
-        stats.n_dims_total += int(dstats.get("n_dims_total", 0))
-        stats.band_occ_per_shard = tuple(
-            int(b) for b in dstats.get("band_per_shard", ()))
+        # dstats is a field-complete JoinStats (one per shard, reduced via
+        # merge); it times its own wait/assembly phases, so only the wall
+        # clock it did NOT attribute lands in expand_seconds
+        stats.expand_seconds += max(
+            0.0, time.perf_counter() - t0
+            - dstats.wait_seconds - dstats.other_seconds)
+        stats = stats.merge(dstats)
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
         pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
         return JoinResult(pairs=pairs, stats=stats)
@@ -535,6 +551,10 @@ class JoinEngine:
         self.serve_stats["batches"] += 1
         self.serve_stats["queries"] += nb
         self.serve_stats["pairs"] += len(result.pairs)
+        result.stats.publish(self.metrics)
+        self.metrics.counter("engine.batches").inc()
+        self.metrics.counter("engine.queries").inc(nb)
+        self.metrics.counter("engine.pairs").inc(len(result.pairs))
         return result
 
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
@@ -568,19 +588,22 @@ class JoinEngine:
             all_pairs.append(out.pairs)
             if caching:
                 t1 = time.perf_counter()
-                self._stream_entry_n = W.update_sws_cache(
-                    self._stream_cache, out, h.qids, cfg, stats,
-                    self._stream_entry_n)
-                for q in h.qids[h.lane_valid]:
-                    overlay.pop(int(q), None)
-                # donors evicted from the carry before their cache entry
-                # landed (carry_window < wave_size): drop the entry now
-                # that update_sws_cache wrote it, as the sequential
-                # update-then-evict order would have
-                for q in h.tombstones:
-                    gone = self._stream_cache.pop(int(q), None)
-                    if gone is not None:
-                        self._stream_entry_n -= len(gone)
+                with obs_trace.tracer().span("wave/cache_update",
+                                             lane="assembly"):
+                    self._stream_entry_n = W.update_sws_cache(
+                        self._stream_cache, out, h.qids, cfg, stats,
+                        self._stream_entry_n)
+                    for q in h.qids[h.lane_valid]:
+                        overlay.pop(int(q), None)
+                    # donors evicted from the carry before their cache
+                    # entry landed (carry_window < wave_size): drop the
+                    # entry now that update_sws_cache wrote it, as the
+                    # sequential update-then-evict order would have
+                    for q in h.tombstones:
+                        gone = self._stream_cache.pop(int(q), None)
+                        if gone is not None:
+                            self._stream_entry_n -= len(gone)
+                            stats.cache_tombstones += 1
                 stats.other_seconds += time.perf_counter() - t1
 
         for c0 in range(0, nb, cfg.wave_size):
@@ -599,7 +622,7 @@ class JoinEngine:
                                           lane_valid, caching)
             seeds, seeds_valid = W.seeds_from_cache(
                 qids_g, lane_valid, parent, seed_cache, sy,
-                cfg.wave_size, S)
+                cfg.wave_size, S, stats=stats)
             stats.other_seconds += time.perf_counter() - t0
 
             h = W.launch_search_wave(iy, xw, qids_g, lane_valid, cfg,
@@ -623,9 +646,11 @@ class JoinEngine:
                 if qc8 is not None:
                     missed = self._remember(None, qids_g[lv],
                                             codes=np.asarray(qc8.q)[lv],
-                                            norms=np.asarray(qc8.norms)[lv])
+                                            norms=np.asarray(qc8.norms)[lv],
+                                            stats=stats)
                 else:
-                    missed = self._remember(X_np[qids_l[lv]], qids_g[lv])
+                    missed = self._remember(X_np[qids_l[lv]], qids_g[lv],
+                                            stats=stats)
                 for q in missed:
                     overlay.pop(int(q), None)
                 h.tombstones.extend(missed)
@@ -675,7 +700,8 @@ class JoinEngine:
 
     def _remember(self, vecs: np.ndarray | None, qids: np.ndarray, *,
                   codes: np.ndarray | None = None,
-                  norms: np.ndarray | None = None) -> list[int]:
+                  norms: np.ndarray | None = None,
+                  stats: JoinStats | None = None) -> list[int]:
         """Append donors to the carry window, evicting beyond capacity.
 
         Returns the evicted qids whose work-sharing cache entry did not
@@ -694,6 +720,8 @@ class JoinEngine:
                 gone = self._stream_cache.pop(int(q), None)
                 if gone is not None:
                     self._stream_entry_n -= len(gone)
+                    if stats is not None:
+                        stats.cache_evictions += 1
                 else:
                     missed.append(int(q))
 
@@ -728,4 +756,20 @@ class JoinEngine:
         self.serve_stats["joins"] += 1
         self.serve_stats["queries"] += int(X.shape[0])
         self.serve_stats["pairs"] += len(result.pairs)
+        result.stats.publish(self.metrics)
+        self.metrics.counter("engine.joins").inc()
+        self.metrics.counter("engine.queries").inc(int(X.shape[0]))
+        self.metrics.counter("engine.pairs").inc(len(result.pairs))
         return result
+
+    def metrics_snapshot(self) -> dict:
+        """Plain-dict dump of the engine's metrics registry: cumulative
+        ``join.*`` stats, ``engine.cache.*`` hit/miss counters, serve
+        counters, and the ambient wave histograms (when the engine runs
+        on the process-global registry)."""
+        return self.metrics.snapshot()
+
+    def cumulative_stats(self) -> JoinStats:
+        """Engine-lifetime ``JoinStats`` aggregate, materialized back
+        from the metrics registry (every join published into it)."""
+        return JoinStats.from_metrics(self.metrics)

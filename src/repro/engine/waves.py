@@ -61,6 +61,8 @@ from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
                               TraversalConfig, early_exit_enabled)
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 _INF = jnp.float32(jnp.inf)
@@ -255,6 +257,9 @@ class WaveHandles:
     seed_mode: str
     seeds_max: int
     early_exit: bool = False
+    # device-phase trace span ("traversal" lane), opened at dispatch and
+    # closed at the first host contact with the results (_resolve_band)
+    span: object = None
     # host-side state filled by the feedback fetch
     n_amb_host: np.ndarray | None = None
     tombstones: list = dataclasses.field(default_factory=list)
@@ -262,14 +267,18 @@ class WaveHandles:
 
 def _refinalize(h: WaveHandles, stats: JoinStats) -> None:
     """Re-run the device epilogue at the (grown) capacity."""
-    (h.keep, h.dist, h.n_amb, h.seed_ids, h.seed_valid, h.n_dims_scanned,
-     h.n_dims_total) = _finalize_wave(
-        h.cascade, h.qc, h.vecs, h.xw, h.pool_idx, h.raw_pool_dist,
-        h.n_pool, jnp.asarray(h.lane_valid), h.best_idx, h.th2,
-        cap=h.capctl.cap, dist_impl=h.dist_impl, seed_mode=h.seed_mode,
-        seeds_max=h.seeds_max, early_exit=h.early_exit)
+    with obs_trace.tracer().span("wave/refinalize", lane="assembly",
+                                 cap=h.capctl.cap):
+        (h.keep, h.dist, h.n_amb, h.seed_ids, h.seed_valid, h.n_dims_scanned,
+         h.n_dims_total) = _finalize_wave(
+            h.cascade, h.qc, h.vecs, h.xw, h.pool_idx, h.raw_pool_dist,
+            h.n_pool, jnp.asarray(h.lane_valid), h.best_idx, h.th2,
+            cap=h.capctl.cap, dist_impl=h.dist_impl, seed_mode=h.seed_mode,
+            seeds_max=h.seeds_max, early_exit=h.early_exit)
     if h.cascade is not None:
         stats.n_rerank_gather += int(h.xw.shape[0]) * h.capctl.cap
+        stats.bytes_band += (int(h.xw.shape[0]) * h.capctl.cap
+                             * int(h.xw.shape[1]) * 4)
 
 
 def _resolve_band(h: WaveHandles, stats: JoinStats) -> None:
@@ -278,15 +287,28 @@ def _resolve_band(h: WaveHandles, stats: JoinStats) -> None:
     emitted set never depends on the capacity choice."""
     if h.n_amb_host is not None:
         return
+    tr = obs_trace.tracer()
     t0 = time.perf_counter()
-    n_amb = np.asarray(jax.device_get(h.n_amb))
-    max_amb = int(n_amb.max()) if n_amb.size else 0
-    if h.cascade is not None and max_amb > h.capctl.cap:
-        h.capctl.grow(max_amb)
-        _refinalize(h, stats)
+    with tr.span("wave/band", lane="assembly") as sp:
         n_amb = np.asarray(jax.device_get(h.n_amb))
+        max_amb = int(n_amb.max()) if n_amb.size else 0
+        if h.cascade is not None and max_amb > h.capctl.cap:
+            if tr:
+                tr.instant("wave/overflow_retry", lane="traversal",
+                           needed=max_amb, cap=h.capctl.cap)
+            h.capctl.grow(max_amb)
+            _refinalize(h, stats)
+            n_amb = np.asarray(jax.device_get(h.n_amb))
+        if sp:
+            sp.set(band_occ=max_amb, cap=h.capctl.cap)
+    if h.span:
+        h.span.end(band_occ=max_amb, cap=h.capctl.cap)
     h.n_amb_host = n_amb
     stats.wait_seconds += time.perf_counter() - t0
+    stats.bytes_feedback += n_amb.nbytes
+    obs_metrics.metrics().histogram(
+        "wave.band_occ", help="per-wave max ambiguous-band occupancy"
+    ).observe(max_amb)
 
 
 def fetch_feedback(h: WaveHandles, stats: JoinStats) -> dict[int, np.ndarray]:
@@ -300,8 +322,10 @@ def fetch_feedback(h: WaveHandles, stats: JoinStats) -> dict[int, np.ndarray]:
     if h.seed_mode == "none":
         return {}
     t0 = time.perf_counter()
-    seed_ids, seed_valid = jax.device_get((h.seed_ids, h.seed_valid))
+    with obs_trace.tracer().span("wave/feedback", lane="assembly"):
+        seed_ids, seed_valid = jax.device_get((h.seed_ids, h.seed_valid))
     stats.wait_seconds += time.perf_counter() - t0
+    stats.bytes_feedback += seed_ids.nbytes + seed_valid.nbytes
     entries = {}
     for i, q in enumerate(h.qids):
         if h.lane_valid[i]:
@@ -317,20 +341,32 @@ def assemble_wave(h: WaveHandles, stats: JoinStats, *,
     run this executes while the device traverses the next wave."""
     _resolve_band(h, stats)
     t0 = time.perf_counter()
-    (pool_idx, pool_dist, keep, n_pool, best_idx, n_dist, n_esc,
-     overflow, nds, ndt, *iters) = jax.device_get(
-        (h.pool_idx, h.dist, h.keep, h.n_pool, h.best_idx, h.n_dist,
-         h.n_esc, h.overflow, h.n_dims_scanned, h.n_dims_total) + h.n_iters)
-    lv = h.lane_valid
-    pairs = collect_pairs(h.qids + qid_offset, keep, pool_idx)
-    stats.n_dist += int(n_dist[lv].sum())
-    stats.n_esc8 += int(n_esc[lv].sum())
-    stats.n_overflow += int(overflow[lv].sum())
-    stats.n_rerank += int(h.n_amb_host[lv].sum())
-    stats.n_dims_scanned += int(nds)
-    stats.n_dims_total += int(ndt)
-    stats.n_iters += sum(int(i) for i in iters)
+    with obs_trace.tracer().span("wave/assemble", lane="assembly") as sp:
+        (pool_idx, pool_dist, keep, n_pool, best_idx, n_dist, n_esc,
+         overflow, nds, ndt, *iters) = jax.device_get(
+            (h.pool_idx, h.dist, h.keep, h.n_pool, h.best_idx, h.n_dist,
+             h.n_esc, h.overflow, h.n_dims_scanned, h.n_dims_total)
+            + h.n_iters)
+        lv = h.lane_valid
+        pairs = collect_pairs(h.qids + qid_offset, keep, pool_idx)
+        stats.n_dist += int(n_dist[lv].sum())
+        stats.n_esc8 += int(n_esc[lv].sum())
+        stats.n_overflow += int(overflow[lv].sum())
+        stats.n_rerank += int(h.n_amb_host[lv].sum())
+        stats.n_dims_scanned += int(nds)
+        stats.n_dims_total += int(ndt)
+        stats.n_iters += sum(int(i) for i in iters)
+        stats.bytes_assembly += (
+            pool_idx.nbytes + pool_dist.nbytes + keep.nbytes + n_pool.nbytes
+            + best_idx.nbytes + n_dist.nbytes + n_esc.nbytes
+            + overflow.nbytes)
+        if sp:
+            sp.set(pairs=int(pairs.shape[0]),
+                   lanes=int(np.count_nonzero(lv)))
     stats.other_seconds += time.perf_counter() - t0
+    obs_metrics.metrics().histogram(
+        "wave.pairs", help="result pairs emitted per wave"
+    ).observe(pairs.shape[0])
     return WaveOutput(pairs=pairs, pool_idx=np.asarray(pool_idx),
                       pool_dist=np.asarray(pool_dist),
                       pool_keep=np.asarray(keep),
@@ -421,12 +457,15 @@ def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
     tcfg = effective_tcfg(cfg)
     if capctl is None:
         capctl = RerankCap(tcfg)
+    tr = obs_trace.tracer()
+    lsp = tr.span("wave/launch", lane="assembly")
     seeds_j = jnp.asarray(seeds)
     sv_j = jnp.asarray(seeds_valid) & jnp.asarray(lane_valid)[:, None]
     if cascade is not None and qc is None:
         qc = cascade.encode(xw)
     th2 = jnp.float32(cfg.theta) ** 2
 
+    dev = tr.begin("wave/device", lane="traversal", cap=capctl.cap)
     t0 = time.perf_counter()
     g = traversal.greedy_search(
         index_y, xw, seeds_j, sv_j, cfg.theta, cfg=tcfg,
@@ -457,6 +496,9 @@ def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         seeds_max=tcfg.seeds_max, early_exit=ee)
     if cascade is not None:
         stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
+        stats.bytes_band += (int(xw.shape[0]) * capctl.cap
+                             * int(xw.shape[1]) * 4)
+    lsp.end(lanes=int(np.count_nonzero(lane_valid)), cap=capctl.cap)
     return WaveHandles(
         qids=qids, lane_valid=np.asarray(lane_valid), xw=xw,
         vecs=index_y.vecs, cascade=cascade, qc=qc, th2=th2,
@@ -466,7 +508,8 @@ def launch_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
         keep=keep, dist=dist, n_amb=n_amb, seed_ids=seed_ids,
         seed_valid=seed_valid2, n_dims_scanned=nds, n_dims_total=ndt,
         capctl=capctl, dist_impl=tcfg.dist_impl,
-        seed_mode=seed_mode, seeds_max=tcfg.seeds_max, early_exit=ee)
+        seed_mode=seed_mode, seeds_max=tcfg.seeds_max, early_exit=ee,
+        span=dev)
 
 
 def run_search_wave(index_y: GraphIndex, xw: Array, qids: np.ndarray,
@@ -495,6 +538,10 @@ def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
         for i, q in enumerate(qids):
             if not out.lane_valid[i]:
                 continue
+            old = cache.get(int(q))
+            if old is not None:          # overwrite evicts the old entry
+                stats.cache_evictions += 1
+                cache_n -= int(old.size)
             ids = out.pool_idx[i][out.pool_keep[i]]
             o = np.lexsort((ids, out.pool_dist[i][out.pool_keep[i]]))
             cache[int(q)] = ids[o]
@@ -503,6 +550,9 @@ def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
         for i, q in enumerate(qids):
             if not out.lane_valid[i]:
                 continue
+            if int(q) in cache:
+                stats.cache_evictions += 1
+                cache_n -= 1
             b = int(out.best_idx[i])
             cache[int(q)] = (np.asarray([b], np.int32) if b != NO_NODE
                              else np.empty(0, np.int32))
@@ -514,13 +564,19 @@ def update_sws_cache(cache: dict[int, np.ndarray], out: WaveOutput,
 def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
                      parent: np.ndarray | dict[int, int],
                      cache, sy: int,
-                     wave_size: int, seeds_max: int
+                     wave_size: int, seeds_max: int,
+                     stats: JoinStats | None = None
                      ) -> tuple[np.ndarray, np.ndarray]:
     """Seed lanes from parent caches (Alg. 1 lines 5–9); s_Y fallback.
 
     ``cache`` is any mapping qid → id array — the pipelined runners pass
     a ``ChainMap(seed_overlay, cache)`` so a wave can seed from the
-    feedback of the still-being-assembled previous wave."""
+    feedback of the still-being-assembled previous wave.
+
+    With ``stats`` every lane that has a parent counts as a cache hit
+    (a usable non-empty entry) or miss (the lane fell back to s_Y) —
+    the work-sharing effectiveness rate of the paper's core claim.
+    """
     seeds = np.full((wave_size, seeds_max), sy, np.int32)
     seeds_valid = np.zeros((wave_size, seeds_max), bool)
     seeds_valid[:, 0] = True
@@ -529,11 +585,17 @@ def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
     for i, q in enumerate(qids):
         p = get(int(q)) if lane_valid[i] else -1
         p = -1 if p is None else int(p)
+        if p < 0:
+            continue
         c = cache.get(p)
-        if p >= 0 and c is not None and c.size > 0:
+        if c is not None and c.size > 0:
             k = min(seeds_max, c.size)
             seeds[i, :k] = c[:k]
             seeds_valid[i, :k] = True
+            if stats is not None:
+                stats.cache_hits += 1
+        elif stats is not None:
+            stats.cache_misses += 1
     return seeds, seeds_valid
 
 
@@ -578,9 +640,11 @@ def run_search_join(X: Array, index_y: GraphIndex,
         out = assemble_wave(h, stats)
         all_pairs.append(out.pairs)
         t1 = time.perf_counter()
-        cache_n = update_sws_cache(cache, out, h.qids, cfg, stats, cache_n)
-        for q in h.qids[h.lane_valid]:
-            overlay.pop(int(q), None)
+        with obs_trace.tracer().span("wave/cache_update", lane="assembly"):
+            cache_n = update_sws_cache(cache, out, h.qids, cfg, stats,
+                                       cache_n)
+            for q in h.qids[h.lane_valid]:
+                overlay.pop(int(q), None)
         stats.other_seconds += time.perf_counter() - t1
 
     for wave in waves:
@@ -588,7 +652,8 @@ def run_search_join(X: Array, index_y: GraphIndex,
         xw = X[jnp.asarray(qids)]
         t0 = time.perf_counter()
         seeds, seeds_valid = seeds_from_cache(
-            qids, lane_valid, parent, seed_cache, sy, cfg.wave_size, S)
+            qids, lane_valid, parent, seed_cache, sy, cfg.wave_size, S,
+            stats=stats)
         stats.other_seconds += time.perf_counter() - t0
         # the seed feedback only exists to bridge the one-wave gap the
         # pipeline opens; the sequential path updates the cache in full
@@ -633,7 +698,10 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
     th2 = jnp.float32(cfg.theta) ** 2
     if capctl is None:
         capctl = RerankCap(tcfg)
+    tr = obs_trace.tracer()
+    lsp = tr.span("wave/launch", lane="assembly")
 
+    dev = tr.begin("wave/device", lane="traversal", cap=capctl.cap)
     t0 = time.perf_counter()
     rows, dist, ub, valid, visited, n_new, n_esc0, best, besti = _mi_probe(
         merged, xw, node_ids, lv_j,
@@ -661,6 +729,10 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
         seed_mode="none", seeds_max=tcfg.seeds_max, early_exit=ee)
     if cascade is not None:
         stats.n_rerank_gather += int(xw.shape[0]) * capctl.cap
+        stats.bytes_band += (int(xw.shape[0]) * capctl.cap
+                             * int(xw.shape[1]) * 4)
+    lsp.end(lanes=int(np.count_nonzero(lane_valid)), cap=capctl.cap,
+            hybrid=hybrid)
     return WaveHandles(
         qids=qids, lane_valid=np.asarray(lane_valid), xw=xw,
         vecs=merged.vecs, cascade=cascade, qc=qc, th2=th2,
@@ -670,7 +742,8 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
         keep=keep, dist=dist2, n_amb=n_amb, seed_ids=seed_ids,
         seed_valid=seed_valid, n_dims_scanned=nds, n_dims_total=ndt,
         capctl=capctl, dist_impl=tcfg.dist_impl,
-        seed_mode="none", seeds_max=tcfg.seeds_max, early_exit=ee)
+        seed_mode="none", seeds_max=tcfg.seeds_max, early_exit=ee,
+        span=dev)
 
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,

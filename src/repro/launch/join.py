@@ -22,6 +22,7 @@ from repro.configs.vectorjoin import ENGINE_PRESETS, make_engine, preset
 from repro.core import exact_join_pairs
 from repro.core.types import METHODS, QUANT_MODES
 from repro.data.vectors import make_dataset, thresholds
+from repro.obs import trace as obs_trace
 
 
 def main(argv=None) -> int:
@@ -82,6 +83,18 @@ def main(argv=None) -> int:
                     help="alias for --shards 0 (all local devices)")
     ap.add_argument("--no-truth", action="store_true",
                     help="skip the exact NLJ ground truth (big inputs)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record per-wave spans and export a Chrome/"
+                         "Perfetto trace (load at ui.perfetto.dev; the "
+                         "traversal and assembly lanes show the pipeline "
+                         "overlap). The REPRO_TRACE env var also enables "
+                         "tracing: 1/on traces to trace.json, any other "
+                         "value is the output path")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the engine's metrics registry in "
+                         "Prometheus exposition format after the run "
+                         "(cache hit/miss/eviction/tombstone counters, "
+                         "per-shard band gauges, wave histograms)")
     args = ap.parse_args(argv)
 
     ds = make_dataset(args.regime, n_data=args.n_data, n_query=args.n_query,
@@ -106,6 +119,12 @@ def main(argv=None) -> int:
                       n_shards=n_shards, quant_build=quant_build)
     if args.stream and eng.n_shards > 1:
         ap.error("--stream runs single-device; drop --shards/--distributed")
+
+    trace_path = args.trace or (
+        (obs_trace.env_trace_path() or "trace.json")
+        if obs_trace.env_trace_enabled() else None)
+    if trace_path:
+        tracer = obs_trace.enable()
     print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
           f"dim={args.dim} θ={theta:.4f} method={args.method} "
           f"shards={eng.n_shards} quant={quant} quant_build={quant_build} "
@@ -144,6 +163,14 @@ def main(argv=None) -> int:
             print(f"[sweep] θ{i + 1}={th:.4f}: {len(r.pairs)} pairs in "
                   f"{time.perf_counter() - t0:.2f}s "
                   f"(builds={eng.n_index_builds})")
+
+    if trace_path:
+        obs_trace.disable()
+        tracer.export(trace_path)
+        print(f"[join] wrote {tracer.n_events} trace events to "
+              f"{trace_path} (load at ui.perfetto.dev)")
+    if args.metrics_dump:
+        print(eng.metrics.prometheus_text(), end="")
 
     if not args.no_truth:
         truth = exact_join_pairs(ds.X, ds.Y, theta)

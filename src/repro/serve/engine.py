@@ -22,8 +22,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
 
 PyTree = Any
+
+
+class _MetricsDict(dict):
+    """Serving stats dict that writes through to a metrics registry
+    (``serve.<key>`` gauges), so ``eng.stats["generated"] += 1`` keeps
+    working for existing callers while the registry stays the single
+    accumulation backend (``metrics_snapshot`` / Prometheus dumps)."""
+
+    def __init__(self, metrics: obs_metrics.Metrics, prefix: str, **init):
+        super().__init__(**init)
+        self._metrics = metrics
+        self._prefix = prefix
+        for k, v in init.items():
+            metrics.gauge(f"{prefix}.{k}").set(v)
+
+    def __setitem__(self, k, v):
+        super().__setitem__(k, v)
+        self._metrics.gauge(f"{self._prefix}.{k}").set(v)
 
 
 @dataclasses.dataclass
@@ -48,7 +67,8 @@ class _Slot:
 
 class ServeEngine:
     def __init__(self, mc: M.ModelConfig, params: PyTree, *, n_slots: int,
-                 s_max: int, temperature: float = 0.0, seed: int = 0):
+                 s_max: int, temperature: float = 0.0, seed: int = 0,
+                 metrics: obs_metrics.Metrics | None = None):
         if mc.encoder_only:
             raise ValueError("encoder-only architectures have no decode step")
         self.mc = mc
@@ -63,8 +83,11 @@ class ServeEngine:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: list[Request] = []
         self.done: dict[int, list[int]] = {}
-        self.stats = dict(decode_steps=0, prefills=0, generated=0,
-                          occupancy_sum=0.0)
+        self.metrics = metrics if metrics is not None else \
+            obs_metrics.metrics()
+        self.stats = _MetricsDict(self.metrics, "serve", decode_steps=0,
+                                  prefills=0, generated=0,
+                                  occupancy_sum=0.0)
 
         @functools.partial(jax.jit, static_argnames=())
         def _decode(params, tokens, positions, caches, cache_index):
@@ -79,6 +102,12 @@ class ServeEngine:
         self._prefill = _prefill
 
     # ------------------------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """Plain-dict dump of the engine's metrics registry (the
+        ``serve.*`` gauges behind ``self.stats``, plus whatever else
+        shares the registry)."""
+        return self.metrics.snapshot()
+
     def submit(self, reqs: list[Request]) -> None:
         self.queue.extend(reqs)
 

@@ -1,0 +1,475 @@
+"""TraceKit suite — the observability contracts (obs/trace, obs/metrics).
+
+Four contracts:
+
+  * **Observation never perturbs** — trace-on and trace-off runs of the
+    same engine emit *identical* pair sets and identical work counters,
+    across quant modes × overlap on/off; the disabled tracer is the
+    falsy ``NOOP_TRACER`` singleton (no events, no allocation).
+  * **Span trees are well-formed** — the exclusive device lane
+    ("traversal") is a serial timeline (clamped async spans never
+    overlap); host-lane spans ("assembly") are disjoint-or-nested like
+    the call stack that produced them; pipelined runs show the two lanes
+    actually overlapping in wall-clock.
+  * **Export is loadable** — ``Tracer.export`` writes Chrome Trace Event
+    JSON (Perfetto-loadable): lane/process metadata, ``X`` complete
+    events with non-negative µs timestamps, thread-scoped instants.
+  * **The registry is the single backend** — ``JoinStats.merge`` is an
+    associative, field-complete combine (hypothesis); ``publish`` /
+    ``from_metrics`` roundtrip through a ``Metrics`` registry;
+    ``JoinEngine.cumulative_stats`` equals the merge of per-batch stats;
+    cache hit/miss/eviction counters move under the streaming
+    work-sharing paths.
+
+CI runs this module in the quant-mode matrix (``REPRO_QUANT_MODE``
+narrows the golden parametrization) and in the ``REPRO_TRACE=1`` leg,
+where the launcher smoke additionally exports a ``trace.json`` artifact.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import JoinConfig, TraversalConfig
+from repro.core.types import JoinStats
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+_ENV_MODE = os.environ.get("REPRO_QUANT_MODE")
+GOLDEN_MODES = (_ENV_MODE,) if _ENV_MODE else ("off", "sq8", "pdx8")
+
+BK = dict(k=24, degree=12)
+
+
+def _tc(**kw):
+    base = dict(beam_width=64, expand_per_iter=4, pool_cap=1024,
+                hybrid_beam=64, seeds_max=8, max_iters=2048)
+    base.update(kw)
+    return TraversalConfig(**base)
+
+
+def _cfg(method, theta, quant="off", *, overlap=True, wave=32, tc=None):
+    return JoinConfig(method=method, theta=theta, traversal=tc or _tc(),
+                      wave_size=wave, quant=quant, overlap=overlap)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("manifold", n_data=1500, n_query=96, dim=40,
+                        seed=42)
+
+
+@pytest.fixture(scope="module")
+def theta(ds):
+    return float(thresholds(ds, 3)[1])
+
+
+@pytest.fixture(autouse=True)
+def _tracer_hygiene():
+    """No test may leak an enabled tracer into the rest of the suite."""
+    yield
+    obs_trace.disable()
+
+
+# -- observation never perturbs ----------------------------------------------
+
+
+@pytest.mark.parametrize("quant", GOLDEN_MODES)
+@pytest.mark.parametrize("overlap", [True, False])
+def test_traced_matches_untraced(ds, theta, quant, overlap):
+    """Golden equivalence: tracing is observation, never scheduling —
+    same engine, same config, identical pair sets and work counters with
+    the tracer off vs on."""
+    eng = JoinEngine(ds.Y, build_kw=BK, metrics=obs_metrics.Metrics())
+    cfg = _cfg("es_mi", theta, quant, overlap=overlap)
+    r_plain = eng.join(ds.X, cfg)
+    with obs_trace.tracing() as tr:
+        r_traced = eng.join(ds.X, cfg)
+    assert r_traced.pair_set() == r_plain.pair_set(), (quant, overlap)
+    assert r_traced.stats.n_dist == r_plain.stats.n_dist
+    assert r_traced.stats.n_rerank == r_plain.stats.n_rerank
+    assert tr.n_events > 0
+
+
+def test_traced_matches_untraced_search_path(ds, theta):
+    """Same contract on the work-sharing search path (hit/miss counters
+    and the cache-update span live there)."""
+    eng = JoinEngine(ds.Y, build_kw=BK, metrics=obs_metrics.Metrics())
+    cfg = _cfg("es_hws", theta)
+    r_plain = eng.join(ds.X, cfg)
+    with obs_trace.tracing() as tr:
+        r_traced = eng.join(ds.X, cfg)
+    assert r_traced.pair_set() == r_plain.pair_set()
+    assert r_traced.stats.cache_hits == r_plain.stats.cache_hits
+    assert r_traced.stats.cache_misses == r_plain.stats.cache_misses
+    assert tr.n_events > 0
+
+
+def test_noop_tracer_is_falsy_singleton():
+    tr = obs_trace.tracer()
+    assert tr is obs_trace.NOOP_TRACER
+    assert not tr and not tr.enabled
+    sp = tr.span("x", lane="l", a=1)
+    assert sp is tr.begin("y")          # one shared no-op span
+    assert not sp
+    with sp as s:
+        assert s.set(b=2) is s          # chainable, records nothing
+    assert sp.end() is None
+    assert tr.instant("z", n=3) is None
+
+
+def test_enable_disable_roundtrip():
+    t = obs_trace.enable()
+    assert obs_trace.tracer() is t and t and t.enabled
+    assert obs_trace.disable() is t
+    assert obs_trace.tracer() is obs_trace.NOOP_TRACER
+
+
+def test_tracing_scope_restores_previous():
+    outer = obs_trace.enable()
+    with obs_trace.tracing() as inner:
+        assert obs_trace.tracer() is inner is not outer
+    assert obs_trace.tracer() is outer
+
+
+def test_env_trace_tokens(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    assert not obs_trace.env_trace_enabled()
+    assert obs_trace.env_trace_path() is None
+    for v in ("", "  ", "0", "off", "FALSE", "no"):
+        monkeypatch.setenv("REPRO_TRACE", v)
+        assert not obs_trace.env_trace_enabled(), v
+    for v in ("1", "on", "TRUE", "yes"):
+        monkeypatch.setenv("REPRO_TRACE", v)
+        assert obs_trace.env_trace_enabled(), v
+        assert obs_trace.env_trace_path() is None, v
+    monkeypatch.setenv("REPRO_TRACE", "/tmp/run.json")
+    assert obs_trace.env_trace_enabled()
+    assert obs_trace.env_trace_path() == "/tmp/run.json"
+
+
+# -- span trees are well-formed ----------------------------------------------
+
+
+def test_span_end_is_idempotent():
+    with obs_trace.tracing() as tr:
+        sp = tr.span("a")
+        sp.end(n=1)
+        sp.end(n=2)
+    assert tr.n_events == 1
+    assert tr.lanes()["host"][0]["attrs"] == {"n": 1}
+
+
+def test_exclusive_lane_clamps_to_serial():
+    """Two async spans opened back-to-back (double-buffered dispatch):
+    the second's start is clamped to the first's end."""
+    with obs_trace.tracing() as tr:
+        a = tr.begin("d1", lane="dev")
+        b = tr.begin("d2", lane="dev")
+        a.end()
+        b.end()
+    evs = tr.lanes()["dev"]
+    assert len(evs) == 2
+    assert evs[1]["ts_ns"] >= evs[0]["ts_ns"] + evs[0]["dur_ns"]
+
+
+def _intervals(events):
+    return [(e["ts_ns"], e["ts_ns"] + e["dur_ns"]) for e in events]
+
+
+@pytest.fixture(scope="module")
+def traced_run(ds, theta):
+    """One pipelined sq8 es_mi join under a tracer (shared by the
+    well-formedness and export tests)."""
+    eng = JoinEngine(ds.Y, build_kw=BK, metrics=obs_metrics.Metrics())
+    with obs_trace.tracing() as tr:
+        res = eng.join(ds.X, _cfg("es_mi", theta, "sq8", overlap=True))
+    return tr, res
+
+
+def test_trace_lanes_well_formed(traced_run):
+    tr, _ = traced_run
+    lanes = tr.lanes()
+    assert "traversal" in lanes and "assembly" in lanes
+    for evs in lanes.values():
+        for ev in evs:
+            assert ev["ts_ns"] >= 0 and ev["dur_ns"] >= 0
+    # exclusive device lane: a serial timeline (instants may land inside)
+    prev_end = -1
+    for ev in lanes["traversal"]:
+        if ev["dur_ns"] == 0:
+            continue
+        assert ev["ts_ns"] >= prev_end
+        prev_end = ev["ts_ns"] + ev["dur_ns"]
+    # host lane: spans nest like the call stack — disjoint or contained
+    host = _intervals(lanes["assembly"])
+    for i, (a0, a1) in enumerate(host):
+        for b0, b1 in host[i + 1:]:     # sorted by start: b0 >= a0
+            assert b0 >= a1 or b1 <= a1, ((a0, a1), (b0, b1))
+
+
+def test_pipelined_lanes_overlap_in_time(traced_run):
+    """The acceptance criterion: with overlap on, device (traversal)
+    spans and host (assembly) spans intersect in wall-clock — the
+    pipeline actually hides host work behind the device."""
+    tr, _ = traced_run
+    lanes = tr.lanes()
+    dev = [iv for iv, e in zip(_intervals(lanes["traversal"]),
+                               lanes["traversal"]) if e["dur_ns"] > 0]
+    host = _intervals(lanes["assembly"])
+    assert any(h0 < d1 and d0 < h1
+               for d0, d1 in dev for h0, h1 in host)
+
+
+def test_span_summary_and_attrs(traced_run):
+    tr, res = traced_run
+    summ = tr.summary()
+    assert summ[("traversal", "wave/device")][0] >= 1
+    assert summ[("assembly", "wave/assemble")][0] >= 1
+    # every device span carries the re-rank cap attribute
+    for ev in tr.lanes()["traversal"]:
+        if ev["name"] == "wave/device":
+            assert "cap" in ev["attrs"]
+    # transfer-class byte counters moved alongside the spans
+    assert res.stats.bytes_assembly > 0
+    assert res.stats.bytes_band > 0
+
+
+# -- export is loadable ------------------------------------------------------
+
+
+def test_perfetto_export_schema(tmp_path, traced_run):
+    tr, _ = traced_run
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    lanes = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"traversal", "assembly"} <= lanes
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+        elif e["ph"] == "i":
+            assert e["s"] == "t"
+        if "args" in e:
+            json.dumps(e["args"])       # attrs stayed JSON-serializable
+
+
+# -- metrics registry --------------------------------------------------------
+
+
+def test_counter_monotonic():
+    m = obs_metrics.Metrics()
+    c = m.counter("a", help="h")
+    c.inc()
+    c.inc(2)
+    assert m.value("a") == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert m.counter("a") is c          # get-or-create
+
+
+def test_gauge_set_max():
+    m = obs_metrics.Metrics()
+    g = m.gauge("g")
+    g.set(5.0)
+    g.set_max(3.0)
+    assert m.value("g") == 5.0
+    g.set_max(9.0)
+    assert m.value("g") == 9.0
+    g.set(1.0)                          # plain set may decrease
+    assert m.value("g") == 1.0
+
+
+def test_histogram_buckets():
+    m = obs_metrics.Metrics()
+    h = m.histogram("h", buckets=(1.0, 4.0, 16.0))
+    for v in (0.5, 2, 3, 100):
+        h.observe(v)
+    assert h.counts == [1, 2, 0, 1]     # last slot is the +Inf tail
+    assert h.cumulative() == [1, 3, 3, 4]
+    assert h.count == 4 and h.sum == pytest.approx(105.5)
+    assert m.value("h") == 4            # scalar view of a histogram
+    with pytest.raises(ValueError):
+        m.histogram("bad", buckets=(4.0, 1.0))
+    with pytest.raises(ValueError):
+        m.histogram("empty", buckets=())
+
+
+def test_kind_mismatch_raises():
+    m = obs_metrics.Metrics()
+    m.counter("x")
+    with pytest.raises(TypeError):
+        m.gauge("x")
+    with pytest.raises(TypeError):
+        m.histogram("x")
+
+
+def test_prometheus_text_format():
+    m = obs_metrics.Metrics()
+    m.counter("join.n_dist", help="distances").inc(7)
+    m.gauge("9lives").set(2)
+    m.histogram("wave.occ", buckets=(2.0,)).observe(1)
+    text = m.prometheus_text()
+    assert "# HELP join_n_dist distances" in text
+    assert "# TYPE join_n_dist counter" in text
+    assert "join_n_dist 7" in text
+    assert "_9lives 2" in text          # leading digit sanitized
+    assert 'wave_occ_bucket{le="2"} 1' in text
+    assert 'wave_occ_bucket{le="+Inf"} 1' in text
+    assert "wave_occ_count 1" in text
+    assert text.endswith("\n")
+
+
+def test_snapshot_and_clear():
+    m = obs_metrics.Metrics()
+    m.counter("c").inc(2)
+    m.gauge("g").set(1)
+    m.histogram("h").observe(3)
+    snap = m.snapshot()
+    assert snap["counters"] == {"c": 2}
+    assert snap["gauges"] == {"g": 1}
+    assert snap["histograms"]["h"]["count"] == 1
+    json.dumps(snap)                    # export-safe
+    m.clear()
+    assert m.names() == [] and m.value("c", default=-1) == -1
+
+
+# -- JoinStats: merge / publish / from_metrics -------------------------------
+
+
+def test_every_stats_field_is_classified():
+    """Merge is field-driven: every dataclass field is additive unless
+    registered in exactly one of the non-additive classes, so a newly
+    added counter is merge-covered by default."""
+    names = {f.name for f in dataclasses.fields(JoinStats)}
+    assert set(JoinStats._MERGE_MAX) <= names
+    assert set(JoinStats._MERGE_CAT) <= names
+    assert not set(JoinStats._MERGE_MAX) & set(JoinStats._MERGE_CAT)
+    # and the default-additive remainder actually supports +
+    JoinStats().merge(JoinStats())
+
+
+def test_merge_semantics():
+    a = JoinStats(n_dist=3, peak_cache_entries=5, band_occ_per_shard=(1, 2),
+                  greedy_seconds=0.5, cache_hits=1)
+    b = JoinStats(n_dist=4, peak_cache_entries=2, band_occ_per_shard=(7,),
+                  greedy_seconds=0.25, cache_hits=2)
+    m = a.merge(b)
+    assert m.n_dist == 7
+    assert m.peak_cache_entries == 5            # high-water mark
+    assert m.band_occ_per_shard == (1, 2, 7)    # shard groups concatenate
+    assert m.greedy_seconds == 0.75
+    assert m.cache_hits == 3
+
+
+def test_publish_from_metrics_roundtrip():
+    m = obs_metrics.Metrics()
+    s = JoinStats(n_dist=7, greedy_seconds=0.5, peak_cache_entries=3,
+                  band_occ_per_shard=(4, 9), cache_hits=2, cache_misses=1,
+                  bytes_band=128, wait_seconds=0.25)
+    s.publish(m)
+    assert JoinStats.from_metrics(m) == s
+    # second publish: counters accumulate, peaks max, shard gauges are
+    # last-write (per-join listings, not sums)
+    s.publish(m)
+    back = JoinStats.from_metrics(m)
+    assert back.n_dist == 14 and back.peak_cache_entries == 3
+    assert back.band_occ_per_shard == (4, 9)
+    assert m.value("join.shard_band_imbalance") == pytest.approx(9 / 6.5)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYP = False
+
+if not _HAVE_HYP:                                      # pragma: no cover
+
+    @pytest.mark.skip(reason="property tests need the hypothesis dev extra")
+    def test_merge_associativity():
+        pass
+
+if _HAVE_HYP:
+
+    def _rand_stats(data):
+        kw = {}
+        for f in dataclasses.fields(JoinStats):
+            if f.name in JoinStats._MERGE_CAT:
+                kw[f.name] = tuple(data.draw(
+                    st.lists(st.integers(0, 50), max_size=3)))
+            elif f.type == "float":
+                # dyadic rationals: float sums stay exact, so associativity
+                # is an equality, not an approximation
+                kw[f.name] = data.draw(st.integers(0, 1 << 12)) / 8.0
+            else:
+                kw[f.name] = data.draw(st.integers(0, 10_000))
+        return JoinStats(**kw)
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.data())
+    def test_merge_associativity(data):
+        """(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) over every field class — the
+        property that makes per-shard / per-batch reduction order
+        irrelevant."""
+        a, b, c = (_rand_stats(data) for _ in range(3))
+        assert a.merge(b).merge(c) == a.merge(b.merge(c))
+        # identity element
+        assert a.merge(JoinStats()) == a
+
+
+# -- engine surfaces ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("carry_window", [4096, 16])
+def test_streaming_cache_counters(ds, theta, carry_window):
+    """The work-sharing cache counters move under streaming submit, and
+    the engine-lifetime aggregate equals the merge of per-batch stats."""
+    eng = JoinEngine(ds.Y, build_kw=BK, carry_window=carry_window,
+                     metrics=obs_metrics.Metrics())
+    cfg = _cfg("es_sws", theta)
+    tot = JoinStats()
+    for b0 in range(0, ds.X.shape[0], 40):
+        tot = tot.merge(eng.submit(ds.X[b0:b0 + 40], cfg).stats)
+    assert tot.cache_hits + tot.cache_misses > 0
+    if carry_window == 16:
+        # window smaller than the stream: donors must have been evicted
+        assert tot.cache_evictions > 0
+    cum = eng.cumulative_stats()
+    assert cum.n_dist == tot.n_dist
+    assert cum.cache_hits == tot.cache_hits
+    assert cum.cache_evictions == tot.cache_evictions
+    assert cum.cache_tombstones == tot.cache_tombstones
+
+
+def test_engine_cache_event_and_serve_counters(ds, theta):
+    m = obs_metrics.Metrics()
+    eng = JoinEngine(ds.Y, build_kw=BK, metrics=m)
+    cfg = _cfg("es_hws", theta)
+    eng.join(ds.X, cfg)
+    assert m.value("engine.cache.index_y.miss") >= 1
+    eng.join(ds.X, cfg)
+    assert m.value("engine.cache.index_y.hit") >= 1
+    assert m.value("engine.joins") == 2
+    assert m.value("engine.queries") == 2 * ds.X.shape[0]
+    snap = eng.metrics_snapshot()
+    assert "engine.joins" in snap["counters"]
+    assert any(k.startswith("join.") for k in snap["counters"])
+
+
+def test_ambient_wave_histograms(ds, theta):
+    """Wave-level histograms land on the process-global registry even
+    when the engine uses a private one (ambient instrumentation)."""
+    g = obs_metrics.metrics()
+    before = g.value("wave.pairs", 0)
+    eng = JoinEngine(ds.Y, build_kw=BK, metrics=obs_metrics.Metrics())
+    eng.join(ds.X, _cfg("es_mi", theta))
+    assert g.value("wave.pairs", 0) > before
+    assert g.get("wave.band_occ") is not None
