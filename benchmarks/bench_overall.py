@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 from benchmarks.common import (REGIMES, SCALES, dist_bytes, emit,
                                run_method, theta_grid)
@@ -193,6 +194,74 @@ def run_early_exit(scale: str = "ci_hd", *, regime: str = "clustered",
     return rows
 
 
+def run_serve(scale: str = "ci", *, regimes=("manifold", "clustered"),
+              theta_idx: int = 2, n_requests: int = 16,
+              quant_modes=("off", "sq8"), method: str = "es_sws",
+              buckets=(64, 128), seed: int = 0) -> list[dict]:
+    """JoinService admission-path benchmark: one multi-tenant shuffled
+    request stream through the continuous-batching front end.
+
+    Reports admission latency (mean / max over the stream), serving
+    throughput (queries/s after warmup), wave-lane occupancy, and the
+    XLA compile-counter delta across the serving phase — asserted flat,
+    the bucket-ladder invariant the front end exists to provide.
+    """
+    import numpy as np
+
+    from benchmarks.common import dataset
+    from repro.obs import metrics as obs_metrics
+    from repro.serve import JoinRequest, JoinService, ServiceConfig
+
+    dim = SCALES[scale]["dim"]
+    svc = JoinService(ServiceConfig(buckets=tuple(buckets),
+                                    max_queue=4 * n_requests))
+    tenants = {}
+    for i, regime in enumerate(regimes):
+        ds = dataset(regime, scale)
+        theta = theta_grid(regime, scale)[theta_idx - 1]
+        svc.load(regime, ds.Y)
+        tenants[regime] = (ds, theta)
+    t0 = time.perf_counter()
+    for regime, (ds, theta) in tenants.items():
+        svc.warmup(regime, thetas=[theta], methods=(method,),
+                   quants=quant_modes)
+    warm_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    names = list(tenants)
+    for uid in range(n_requests):
+        regime = names[int(rng.integers(len(names)))]
+        ds, theta = tenants[regime]
+        n_max = int(ds.X.shape[0])
+        n = int(rng.integers(1, min(2 * max(buckets), n_max) + 1))
+        lo = int(rng.integers(0, n_max - n + 1))
+        svc.submit(JoinRequest(
+            uid=uid, tenant=regime,
+            X=np.asarray(ds.X, np.float32)[lo:lo + n], theta=theta,
+            method=method, quant=quant_modes[uid % len(quant_modes)]))
+    c0 = obs_metrics.compile_count()
+    t0 = time.perf_counter()
+    done = svc.run()
+    dt = time.perf_counter() - t0
+    compiles = obs_metrics.compile_count() - c0
+    assert compiles == 0, (
+        f"{compiles} recompiles in steady-state serving (bucket ladder "
+        f"not warm)")
+    served = [sj for sj in done.values() if sj.ok]
+    n_queries = sum(sj.n_queries for sj in served)
+    h = svc.metrics.get("serve_join.admission_seconds")
+    occ = svc.metrics.get("serve_join.occupancy")
+    return [dict(
+        scale=scale, method=method, tenants=len(tenants),
+        requests=len(served), queries=n_queries,
+        pairs=sum(len(sj.pairs) for sj in served),
+        warmup_s=warm_s, serve_s=dt,
+        queries_per_s=n_queries / max(dt, 1e-9),
+        admission_mean_s=h.sum / max(h.count, 1),
+        occupancy_mean=occ.sum / max(occ.count, 1),
+        serve_compiles=compiles)]
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="ci")
@@ -210,14 +279,16 @@ def main(argv=None) -> None:
     early_exit_rows = run_early_exit(
         "full_hd" if args.scale == "full" else "ci_hd")
     trace_rows = run_trace_overhead(args.scale, regime=args.regimes[0])
+    serve_rows = run_serve(args.scale)
     emit(rows)
     emit(overlap_rows)
     emit(early_exit_rows)
     emit(trace_rows)
+    emit(serve_rows)
     if args.json:
         payload = dict(bench="overall", scale=args.scale, rows=rows,
                        overlap=overlap_rows, early_exit=early_exit_rows,
-                       trace_overhead=trace_rows)
+                       trace_overhead=trace_rows, serve=serve_rows)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -103,16 +103,29 @@ class TraversalConfig:
     dist_impl: str | None = None   # kernels.ops impl override
 
 
+def env_flag(name: str, default: bool) -> bool:
+    """Boolean env-var override with an *empty-counts-as-unset* contract:
+    an unset or empty/whitespace value returns ``default``, anything else
+    is truthy unless it spells one of ``0/off/false/no`` (case- and
+    whitespace-insensitive). The empty-string rule lets CI matrices
+    template a variable per leg (``REPRO_OVERLAP: ''`` on non-off legs)
+    without pinning every config to the enabled path.
+
+    The single owner of the flag grammar — ``early_exit_enabled``,
+    ``engine.waves.overlap_enabled``, and the ``REPRO_SERVE_*`` serving
+    knobs (``serve.join_service``) all parse through here."""
+    env = os.environ.get(name)
+    if env is not None and env.strip():
+        return env.strip().lower() not in ("0", "off", "false", "no")
+    return default
+
+
 def early_exit_enabled(tcfg: TraversalConfig) -> bool:
     """``tcfg.early_exit``, unless the ``REPRO_EARLY_EXIT`` env var
     overrides it (CI bisection: ``REPRO_EARLY_EXIT=off`` forces the
-    full-scan PDX kernels everywhere without touching configs). An empty
-    value counts as unset, so CI matrices can template the variable per
-    leg. Mirrors ``engine.waves.overlap_enabled``."""
-    env = os.environ.get("REPRO_EARLY_EXIT")
-    if env is not None and env.strip():
-        return env.strip().lower() not in ("0", "off", "false", "no")
-    return tcfg.early_exit
+    full-scan PDX kernels everywhere without touching configs).
+    Mirrors ``engine.waves.overlap_enabled``."""
+    return env_flag("REPRO_EARLY_EXIT", tcfg.early_exit)
 
 
 METHODS = ("nlj", "index", "es", "es_hws", "es_sws", "es_mi", "es_mi_adapt")

@@ -178,6 +178,11 @@ class JoinEngine:
         self._carry_norms: np.ndarray | None = None
         self._carry_qids = np.empty(0, np.int64)
 
+        # LSH-sampled band-occupancy estimates, sticky per (θ, quant)
+        # so repeated requests reuse one capacity (stable jit cap set)
+        self._est_sketch = None
+        self._cap_estimates: dict[tuple, int] = {}
+
     # -- index lifecycle ----------------------------------------------------
 
     @property
@@ -329,6 +334,16 @@ class JoinEngine:
         else:
             key, vecs = ("index_y",), self.index_y().vecs
         self.cascade_for(key, vecs, cfg, JoinStats())
+
+    def drop_caches(self) -> None:
+        """Release every cached index artifact and tier store (the
+        tenant-unload path of ``serve.JoinService``). ``Y`` itself and
+        the build counters stay; the next join rebuilds on demand."""
+        self._index_y = None
+        self._index_x.clear()
+        self._merged.clear()
+        self._sharded.clear()
+        self._tier_stores.clear()
 
     def adopt(self, *, index_y: GraphIndex | None = None, X=None,
               index_x: GraphIndex | None = None,
@@ -548,6 +563,10 @@ class JoinEngine:
             result = self._submit_search(X_batch, cfg, stats, offset)
 
         self._stream_n = offset + nb
+        self._batch_done(result, nb)
+        return result
+
+    def _batch_done(self, result: JoinResult, nb: int) -> None:
         self.serve_stats["batches"] += 1
         self.serve_stats["queries"] += nb
         self.serve_stats["pairs"] += len(result.pairs)
@@ -555,7 +574,58 @@ class JoinEngine:
         self.metrics.counter("engine.batches").inc()
         self.metrics.counter("engine.queries").inc(nb)
         self.metrics.counter("engine.pairs").inc(len(result.pairs))
-        return result
+
+    def submit_many(self, jobs) -> list[JoinResult]:
+        """Submit several streaming batches, interleaving waves across
+        batch boundaries where the pipeline allows it.
+
+        ``jobs`` is a sequence of ``(X_batch, cfg)`` pairs (``cfg`` may
+        be None for the engine default, or carry per-batch θ / method /
+        quant — the per-request knobs of the serving front end). Returns
+        one ``JoinResult`` per job, pair-identical to calling
+        ``submit()`` on each job in order.
+
+        Consecutive search-path jobs (``index``/``es``/``es_hws``/
+        ``es_sws``) that agree on (method, quant, wave_size) and have
+        the wave pipeline enabled are run as one pipelined *group*: the
+        final wave of batch *k* stays in flight while batch *k+1*'s
+        first wave launches from its seed feedback, so the admission
+        front end (``serve.JoinService``) never pays a pipeline drain
+        between back-to-back batches. The seed-overlay argument is the
+        same as within one batch — feedback entries equal the prefix of
+        the full cache entry — so pair sets and work-sharing cache
+        contents are unchanged. NLJ / merged-index jobs have no
+        cross-batch seed dependency to hide and fall back to ``submit``.
+        """
+        resolved = [(X, self._resolve(cfg, None, None)) for X, cfg in jobs]
+        results: list[JoinResult] = []
+        i = 0
+        while i < len(resolved):
+            X, cfg = resolved[i]
+            if not (cfg.method in _SEARCH_METHODS
+                    and W.overlap_enabled(cfg) and self.n_shards == 1):
+                results.append(self.submit(X, cfg))
+                i += 1
+                continue
+            key = (cfg.method, cfg.quant, cfg.wave_size)
+            j = i + 1
+            while j < len(resolved):
+                X2, c2 = resolved[j]
+                if ((c2.method, c2.quant, c2.wave_size) != key
+                        or not W.overlap_enabled(c2)):
+                    break
+                j += 1
+            group = []
+            for X2, c2 in resolved[i:j]:
+                offset = self._stream_n
+                self._stream_n += int(X2.shape[0])
+                group.append((jnp.asarray(X2), c2, JoinStats(), offset))
+            outs = self._submit_search_group(group)
+            for (X2, _, _, _), res in zip(group, outs):
+                self._batch_done(res, int(X2.shape[0]))
+            results.extend(outs)
+            i = j
+        return results
 
     def _submit_search(self, X_batch: Array, cfg: JoinConfig,
                        stats: JoinStats, offset: int) -> JoinResult:
@@ -565,33 +635,43 @@ class JoinEngine:
         query codes, which exist before traversal), while the host
         assembles wave *k*'s pairs and work-sharing cache in the shadow
         of the device. ``overlap`` off serializes the same primitives."""
+        return self._submit_search_group(
+            [(X_batch, cfg, stats, offset)])[0]
+
+    def _submit_search_group(self, group) -> list[JoinResult]:
+        """Pipelined search-path waves over one *or several* batches.
+
+        ``group`` is a list of ``(X_batch, cfg, stats, offset)`` jobs
+        that share (method, quant, wave_size). With one job this is
+        exactly the old per-batch pipeline; with several (the
+        ``submit_many`` group path) the pending wave is carried *across
+        the batch boundary*: batch *k+1*'s first wave launches from the
+        seed-feedback overlay while batch *k*'s last wave is still being
+        assembled, so back-to-back admitted batches never drain the
+        pipeline. Pairs, stats attribution, and work-sharing cache
+        contents are per-job and identical to sequential ``submit``
+        calls (the overlay/tombstone machinery is shared engine state
+        either way)."""
         iy = self.index_y()
-        casc = self.cascade_for(("index_y",), iy.vecs, cfg, stats)
-        int8 = casc.tier("int8") if casc is not None else None
         sy = int(iy.start)
-        S = cfg.traversal.seeds_max
-        nb = int(X_batch.shape[0])
-        X_np = np.asarray(X_batch, np.float32)
-        caching = cfg.method in _CACHING_METHODS
-        all_pairs: list[np.ndarray] = []
-        ov = W.overlap_enabled(cfg)
-        capctl = W.RerankCap(W.effective_tcfg(cfg))
+        all_pairs: list[list[np.ndarray]] = [[] for _ in group]
         # seed overlay: feedback entries of the wave whose full cache
         # update is still pending (equal to the first S ids that
         # update_sws_cache will write for the same queries)
         overlay: dict[int, np.ndarray] = {}
         seed_cache = ChainMap(overlay, self._stream_cache)
-        pending: W.WaveHandles | None = None
+        pending: tuple[int, W.WaveHandles] | None = None
 
-        def drain(h: W.WaveHandles) -> None:
-            out = W.assemble_wave(h, stats)
-            all_pairs.append(out.pairs)
-            if caching:
+        def drain(j: int, h: W.WaveHandles) -> None:
+            _, cfg_j, stats_j, _ = group[j]
+            out = W.assemble_wave(h, stats_j)
+            all_pairs[j].append(out.pairs)
+            if cfg_j.method in _CACHING_METHODS:
                 t1 = time.perf_counter()
                 with obs_trace.tracer().span("wave/cache_update",
                                              lane="assembly"):
                     self._stream_entry_n = W.update_sws_cache(
-                        self._stream_cache, out, h.qids, cfg, stats,
+                        self._stream_cache, out, h.qids, cfg_j, stats_j,
                         self._stream_entry_n)
                     for q in h.qids[h.lane_valid]:
                         overlay.pop(int(q), None)
@@ -603,68 +683,147 @@ class JoinEngine:
                         gone = self._stream_cache.pop(int(q), None)
                         if gone is not None:
                             self._stream_entry_n -= len(gone)
-                            stats.cache_tombstones += 1
-                stats.other_seconds += time.perf_counter() - t1
+                            stats_j.cache_tombstones += 1
+                stats_j.other_seconds += time.perf_counter() - t1
 
-        for c0 in range(0, nb, cfg.wave_size):
-            local = np.arange(c0, min(c0 + cfg.wave_size, nb))
-            qids_l, lane_valid = W.pad_wave(local, cfg.wave_size)
-            qids_g = qids_l + offset
-            xw = X_batch[jnp.asarray(qids_l)]
-            # queries are encoded on the cascade grids exactly once per
-            # wave: the codes drive parent assignment, the carry window,
-            # *and* the traversal (streaming-side compression)
-            qc = casc.encode(xw) if casc is not None else None
-            qc8 = qc[casc.names.index("int8")] if int8 is not None else None
+        for j, (X_batch, cfg, stats, offset) in enumerate(group):
+            casc = self.cascade_for(("index_y",), iy.vecs, cfg, stats)
+            int8 = casc.tier("int8") if casc is not None else None
+            S = cfg.traversal.seeds_max
+            nb = int(X_batch.shape[0])
+            X_np = np.asarray(X_batch, np.float32)
+            caching = cfg.method in _CACHING_METHODS
+            ov = W.overlap_enabled(cfg)
+            capctl = W.RerankCap(W.effective_tcfg(cfg),
+                                 init_cap=self.estimate_rerank_cap(
+                                     X_np, cfg))
 
-            t0 = time.perf_counter()
-            parent = self._assign_parents(X_np[qids_l], qc8, int8, qids_g,
-                                          lane_valid, caching)
-            seeds, seeds_valid = W.seeds_from_cache(
-                qids_g, lane_valid, parent, seed_cache, sy,
-                cfg.wave_size, S, stats=stats)
-            stats.other_seconds += time.perf_counter() - t0
+            for c0 in range(0, nb, cfg.wave_size):
+                local = np.arange(c0, min(c0 + cfg.wave_size, nb))
+                qids_l, lane_valid = W.pad_wave(local, cfg.wave_size)
+                qids_g = qids_l + offset
+                # gather the wave on the host: a device-side
+                # X_batch[qids] would jit one gather per distinct batch
+                # length, where serving sees arbitrary request sizes —
+                # this transfer is (wave_size, d) regardless
+                xw = jnp.asarray(X_np[qids_l])
+                # queries are encoded on the cascade grids exactly once
+                # per wave: the codes drive parent assignment, the carry
+                # window, *and* the traversal (streaming compression)
+                qc = casc.encode(xw) if casc is not None else None
+                qc8 = (qc[casc.names.index("int8")]
+                       if int8 is not None else None)
 
-            h = W.launch_search_wave(iy, xw, qids_g, lane_valid, cfg,
-                                     stats, seeds=seeds,
-                                     seeds_valid=seeds_valid, cascade=casc,
-                                     qc=qc, capctl=capctl, sync=not ov,
-                                     collect_seeds=caching and ov)
-            if ov and pending is not None:
-                drain(pending)
-                pending = None
-            if caching:
-                if ov:
-                    overlay.update(W.fetch_feedback(h, stats))
-                # append this wave's donors to the carry window *before*
-                # the next wave assigns parents — codes only, no
-                # traversal dependency. Eviction may name queries whose
-                # cache entry is still pending; those become tombstones
-                # resolved at drain time.
                 t0 = time.perf_counter()
-                lv = lane_valid
-                if qc8 is not None:
-                    missed = self._remember(None, qids_g[lv],
-                                            codes=np.asarray(qc8.q)[lv],
-                                            norms=np.asarray(qc8.norms)[lv],
-                                            stats=stats)
-                else:
-                    missed = self._remember(X_np[qids_l[lv]], qids_g[lv],
-                                            stats=stats)
-                for q in missed:
-                    overlay.pop(int(q), None)
-                h.tombstones.extend(missed)
+                parent = self._assign_parents(X_np[qids_l], qc8, int8,
+                                              qids_g, lane_valid, caching)
+                seeds, seeds_valid = W.seeds_from_cache(
+                    qids_g, lane_valid, parent, seed_cache, sy,
+                    cfg.wave_size, S, stats=stats)
                 stats.other_seconds += time.perf_counter() - t0
-            if ov:
-                pending = h
-            else:
-                drain(h)
-        if pending is not None:
-            drain(pending)
 
-        pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
-                 else np.empty((0, 2), np.int64))
-        return JoinResult(pairs=pairs, stats=stats)
+                h = W.launch_search_wave(iy, xw, qids_g, lane_valid, cfg,
+                                         stats, seeds=seeds,
+                                         seeds_valid=seeds_valid,
+                                         cascade=casc, qc=qc,
+                                         capctl=capctl, sync=not ov,
+                                         collect_seeds=caching and ov)
+                if ov and pending is not None:
+                    drain(*pending)
+                    pending = None
+                if caching:
+                    if ov:
+                        overlay.update(W.fetch_feedback(h, stats))
+                    # append this wave's donors to the carry window
+                    # *before* the next wave assigns parents — codes
+                    # only, no traversal dependency. Eviction may name
+                    # queries whose cache entry is still pending; those
+                    # become tombstones resolved at drain time.
+                    t0 = time.perf_counter()
+                    lv = lane_valid
+                    if qc8 is not None:
+                        missed = self._remember(
+                            None, qids_g[lv], codes=np.asarray(qc8.q)[lv],
+                            norms=np.asarray(qc8.norms)[lv], stats=stats)
+                    else:
+                        missed = self._remember(X_np[qids_l[lv]],
+                                                qids_g[lv], stats=stats)
+                    for q in missed:
+                        overlay.pop(int(q), None)
+                    h.tombstones.extend(missed)
+                    stats.other_seconds += time.perf_counter() - t0
+                if ov:
+                    pending = (j, h)
+                else:
+                    drain(j, h)
+        if pending is not None:
+            drain(*pending)
+
+        return [JoinResult(pairs=(np.concatenate(ps, axis=0) if ps
+                                  else np.empty((0, 2), np.int64)),
+                           stats=group[j][2])
+                for j, ps in enumerate(all_pairs)]
+
+    # estimator sample sizes: ≤64 queries × ≤2048 data rows keeps the
+    # Hamming matmul trivial while the per-query survivor counts already
+    # concentrate; fixed sizes keep the sample-path jit shapes constant
+    _EST_SAMPLE_Q = 64
+    _EST_SAMPLE_Y = 2048
+
+    def estimate_rerank_cap(self, X_batch, cfg: JoinConfig) -> int | None:
+        """LSH-sample estimate of the initial band-compaction capacity.
+
+        Replaces the cold-start next-pow2 retry of ``RerankCap``:
+        sign-sketch (SimHash) a fixed sample of queries against a fixed
+        sample of Y, count per query how many sampled rows the sketch
+        tier cannot certify out of range at θ (the join-size/band
+        predictor the sketches double as), scale the tail quantile to
+        the full table, and start at the covering power of two. Sticky
+        per (θ, quant): repeated requests at the same operating point
+        reuse one capacity, so the ``_finalize_wave`` cap set stays
+        fixed after the first estimate (zero steady-state recompiles).
+        The overflow retry remains as the safety net — emitted pairs
+        never depend on the estimate.
+        """
+        tcfg = cfg.traversal
+        if cfg.quant not in QUANT_FILTER_MODES or tcfg.rerank_cap <= 0:
+            return None
+        key = (round(float(cfg.theta), 6), cfg.quant, tcfg.pool_cap)
+        cached = self._cap_estimates.get(key)
+        if cached is not None:
+            return cached
+        from repro.quant import sketch as SK
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0xC0FFEE)
+        if self._est_sketch is None:
+            N = int(self.Y.shape[0])
+            y_idx = (np.arange(N) if N <= self._EST_SAMPLE_Y
+                     else rng.choice(N, self._EST_SAMPLE_Y, replace=False))
+            self._est_sketch = (SK.build_sketch(np.asarray(self.Y)[y_idx]),
+                                N / len(y_idx))
+        st, scale = self._est_sketch
+        nb = int(X_batch.shape[0])
+        q_idx = rng.choice(nb, self._EST_SAMPLE_Q,
+                           replace=nb < self._EST_SAMPLE_Q)
+        qcodes, qcum = SK.sketch_queries(
+            np.asarray(X_batch, np.float32)[q_idx], st)
+        h = ops.pairwise_hamming(qcodes, st.codes)
+        lb = SK.sketch_lower_bound_pairwise(h, qcum, st.cum, st.hs, st.iso)
+        survivors = np.asarray(
+            (lb <= np.float32(cfg.theta) ** 2).sum(axis=1))
+        # sample max, not a quantile: an overflow retry after warmup
+        # would be a fresh jit specialization, which the serving front
+        # end's flat-compile-count guarantee can't afford
+        est = float(survivors.max()) * scale * 1.25
+        cap = int(min(ops.next_pow2(max(int(np.ceil(est)), 16)),
+                      tcfg.pool_cap))
+        self._cap_estimates[key] = cap
+        self.metrics.gauge(
+            "engine.rerank_cap_estimate",
+            help="LSH-sampled initial band capacity (last estimate)"
+        ).set(cap)
+        self.build_seconds += time.perf_counter() - t0
+        return cap
 
     def _assign_parents(self, xw: np.ndarray, qc8, int8_tier,
                         qids_g: np.ndarray, lane_valid: np.ndarray,
@@ -682,10 +841,25 @@ class JoinEngine:
             return {}
         if qc8 is not None and self._carry_codes is not None:
             st = int8_tier.store
+            # pad the donor side to the full carry window: the window
+            # fills to exactly ``carry_window`` in steady state anyway,
+            # and a fixed donor shape means the int8 pairwise kernel
+            # compiles once per wave bucket instead of once per window
+            # length while the window grows (the serving front end
+            # asserts a flat compile count after warmup). Padded columns
+            # are sliced off before the argmin, so parent choice is
+            # unchanged.
+            C, Nn = self._carry_codes, self._carry_norms
+            ncar = C.shape[0]
+            if ncar < self.carry_window:
+                pad = self.carry_window - ncar
+                C = np.concatenate(
+                    [C, np.zeros((pad,) + C.shape[1:], C.dtype)])
+                Nn = np.concatenate([Nn, np.zeros(pad, Nn.dtype)])
             d2 = np.asarray(ops.pairwise_sq_dists_int8(
-                qc8.q, jnp.asarray(self._carry_codes), st.scales,
+                qc8.q, jnp.asarray(C), st.scales,
                 group_size=st.group_size, xn=qc8.norms,
-                yn=jnp.asarray(self._carry_norms)))
+                yn=jnp.asarray(Nn)))[:, :ncar]
         elif self._carry_vecs is not None:
             C = self._carry_vecs
             d2 = (np.sum(xw * xw, axis=1, keepdims=True)

@@ -49,7 +49,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-import os
 import time
 
 import jax
@@ -59,7 +58,7 @@ import numpy as np
 from repro.core import ordering, traversal
 from repro.core.ood import predict_ood
 from repro.core.types import (NO_NODE, GraphIndex, JoinConfig, JoinStats,
-                              TraversalConfig, early_exit_enabled)
+                              TraversalConfig, early_exit_enabled, env_flag)
 from repro.kernels import ops
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -71,12 +70,9 @@ _INF = jnp.float32(jnp.inf)
 def overlap_enabled(cfg: JoinConfig) -> bool:
     """``cfg.overlap``, unless the ``REPRO_OVERLAP`` env var overrides it
     (CI bisection: ``REPRO_OVERLAP=off`` forces the sequential path
-    everywhere without touching configs). An empty value counts as
-    unset, so CI matrices can template the variable per leg."""
-    env = os.environ.get("REPRO_OVERLAP")
-    if env is not None and env.strip():
-        return env.strip().lower() not in ("0", "off", "false", "no")
-    return cfg.overlap
+    everywhere without touching configs; ``core.types.env_flag`` owns
+    the empty-counts-as-unset grammar)."""
+    return env_flag("REPRO_OVERLAP", cfg.overlap)
 
 
 # single owner of the capacity-growth policy, shared with the sharded
@@ -93,11 +89,19 @@ class RerankCap:
     Powers of two keep the set of jit specializations tiny while the
     capacity tracks the high-water band — re-rank gather traffic stays
     proportional to what the cascade actually leaves ambiguous.
+
+    ``init_cap`` overrides the config's cold-start value with a measured
+    estimate (``JoinEngine.estimate_rerank_cap``'s LSH sample) without
+    touching ``tcfg`` itself — ``TraversalConfig`` is a static jit
+    argument, so threading the estimate through the config would
+    recompile the traversal instead of just selecting a band capacity.
     """
 
-    def __init__(self, tcfg: TraversalConfig):
+    def __init__(self, tcfg: TraversalConfig, init_cap: int | None = None):
         self.limit = tcfg.pool_cap
-        init = tcfg.rerank_cap if tcfg.rerank_cap > 0 else tcfg.pool_cap
+        init = (init_cap if init_cap is not None and init_cap > 0
+                else tcfg.rerank_cap if tcfg.rerank_cap > 0
+                else tcfg.pool_cap)
         self.cap = min(next_pow2(init), self.limit)
 
     def grow(self, needed: int) -> None:

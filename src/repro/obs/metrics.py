@@ -29,7 +29,8 @@ import re
 import threading
 
 __all__ = ["Counter", "Gauge", "Histogram", "Metrics", "metrics",
-           "POW2_BUCKETS", "LATENCY_BUCKETS"]
+           "POW2_BUCKETS", "LATENCY_BUCKETS", "compile_count",
+           "enable_compile_counter"]
 
 # Fixed default bucket grids. Powers of two suit count-shaped
 # distributions (band occupancy, pairs per wave); the latency grid spans
@@ -224,3 +225,43 @@ def metrics() -> Metrics:
     """The process-global default registry (ambient instrumentation and
     the default backend of every ``JoinEngine``)."""
     return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# XLA compile counter (the bucket-ladder steady-state guard)
+# ---------------------------------------------------------------------------
+
+# Fires once per backend (XLA) compilation — jit cache hits don't emit
+# it, so steady-state serving over a warmed bucket ladder must leave the
+# counter flat. Registered lazily: jax.monitoring listeners are global
+# and cannot be individually removed, so we install exactly one, once.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_listener_installed = False
+
+
+def enable_compile_counter() -> None:
+    """Install the (idempotent, process-global) XLA-compilation listener
+    behind ``compile_count()``. ``JoinService`` enables it at
+    construction; tests and benchmarks may call it directly."""
+    global _compile_listener_installed
+    if _compile_listener_installed:
+        return
+    from jax import monitoring as jax_monitoring
+
+    def _on_event(name: str, duration: float = 0.0, **kw) -> None:
+        if name == _COMPILE_EVENT:
+            _DEFAULT.counter(
+                "jax.compiles",
+                help="XLA backend compilations (jit cache misses)").inc()
+
+    jax_monitoring.register_event_duration_secs_listener(_on_event)
+    _compile_listener_installed = True
+
+
+def compile_count() -> int:
+    """Total XLA backend compilations observed since
+    ``enable_compile_counter()`` was first called (0 before). A serving
+    loop whose wave shapes all come from a pre-compiled bucket ladder
+    holds this flat after warmup — the property the ``serve_join`` smoke
+    test asserts."""
+    return int(_DEFAULT.value("jax.compiles", 0))

@@ -1,4 +1,8 @@
-"""Batched serving engine (continuous batching over ragged KV lanes)."""
-from repro.serve.engine import Request, ServeEngine
+"""Serving front ends: continuous-batching LM decode (``ServeEngine``)
+and the multi-tenant join admission service (``JoinService``)."""
+from repro.serve.engine import Request, RequestRejected, ServeEngine
+from repro.serve.join_service import (JoinRequest, JoinService, ServedJoin,
+                                      ServiceConfig)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "RequestRejected", "ServeEngine", "JoinRequest",
+           "JoinService", "ServedJoin", "ServiceConfig"]

@@ -13,6 +13,7 @@ from a (seed, uid, position) key.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any
@@ -27,22 +28,55 @@ from repro.obs import metrics as obs_metrics
 PyTree = Any
 
 
+class RequestRejected(ValueError):
+    """A request failed admission validation (overlong prompt, shape
+    mismatch, unknown tenant, full queue). Serving engines catch it at
+    the admission boundary and record the request as failed instead of
+    crashing mid-batch — the shared validating path of ``ServeEngine``
+    and ``JoinService``."""
+
+
 class _MetricsDict(dict):
     """Serving stats dict that writes through to a metrics registry
     (``serve.<key>`` gauges), so ``eng.stats["generated"] += 1`` keeps
     working for existing callers while the registry stays the single
-    accumulation backend (``metrics_snapshot`` / Prometheus dumps)."""
+    accumulation backend (``metrics_snapshot`` / Prometheus dumps).
+
+    Every mutating path is covered: ``update``/``setdefault`` route
+    through ``__setitem__`` so the gauges cannot silently drift from the
+    dict, and the removal mutators (``pop``/``popitem``/``clear``/
+    ``del``) are rejected outright — a gauge has no notion of
+    un-registering, so a key that vanished from the dict but kept its
+    last gauge value would be exactly the drift this class exists to
+    prevent."""
 
     def __init__(self, metrics: obs_metrics.Metrics, prefix: str, **init):
-        super().__init__(**init)
+        super().__init__()
         self._metrics = metrics
         self._prefix = prefix
         for k, v in init.items():
-            metrics.gauge(f"{prefix}.{k}").set(v)
+            self[k] = v
 
     def __setitem__(self, k, v):
         super().__setitem__(k, v)
         self._metrics.gauge(f"{self._prefix}.{k}").set(v)
+
+    def update(self, *args, **kw):
+        for k, v in dict(*args, **kw).items():
+            self[k] = v
+
+    def setdefault(self, k, default=None):
+        if k not in self:
+            self[k] = default
+        return self[k]
+
+    def _reject(self, *a, **kw):
+        raise TypeError(
+            f"{self._prefix}.* stats write through to registry gauges, "
+            "which cannot be unregistered; removal would desynchronize "
+            "them")
+
+    __delitem__ = pop = popitem = clear = _reject
 
 
 @dataclasses.dataclass
@@ -81,12 +115,13 @@ class ServeEngine:
         self.lengths = np.zeros(n_slots, np.int32)
         self.last_tok = np.zeros(n_slots, np.int32)
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.done: dict[int, list[int]] = {}
+        self.failed: dict[int, str] = {}
         self.metrics = metrics if metrics is not None else \
             obs_metrics.metrics()
         self.stats = _MetricsDict(self.metrics, "serve", decode_steps=0,
-                                  prefills=0, generated=0,
+                                  prefills=0, generated=0, failed=0,
                                   occupancy_sum=0.0)
 
         @functools.partial(jax.jit, static_argnames=())
@@ -111,6 +146,20 @@ class ServeEngine:
     def submit(self, reqs: list[Request]) -> None:
         self.queue.extend(reqs)
 
+    def validate(self, req: Request) -> None:
+        """Admission validation: raises ``RequestRejected`` for a request
+        whose prompt + generation budget cannot fit the KV cache. A bare
+        ``assert`` here would be stripped under ``python -O`` and let the
+        prefill scatter past ``s_max``, silently corrupting every other
+        lane's cache rows."""
+        S = int(np.asarray(req.prompt).shape[0])
+        if S <= 0:
+            raise RequestRejected(f"uid={req.uid}: empty prompt")
+        if S + req.max_new > self.s_max:
+            raise RequestRejected(
+                f"uid={req.uid}: prompt ({S}) + max_new ({req.max_new}) "
+                f"exceeds the KV cache (s_max={self.s_max})")
+
     def _positions(self, pos: np.ndarray) -> jnp.ndarray:
         p = jnp.asarray(pos)
         if self.mc.pos_dims > 1:
@@ -119,9 +168,9 @@ class ServeEngine:
 
     def _insert(self, slot: int, req: Request) -> None:
         """Prefill a request and scatter its cache into the batch."""
+        self.validate(req)
         prompt = np.asarray(req.prompt)
         S = prompt.shape[0]
-        assert S + req.max_new <= self.s_max, "prompt too long for cache"
         inputs = jnp.asarray(prompt)[None]
         pos = self._positions(np.arange(S, dtype=np.int32)[None])
         logits, cache1 = self._prefill(self.params, inputs, pos)
@@ -156,9 +205,20 @@ class ServeEngine:
             self.lengths[slot] = 0
 
     def _refill(self) -> None:
+        """Fill every free slot from the FIFO. A request that fails
+        admission validation is recorded as failed (empty output in
+        ``done``, reason in ``failed``) and the slot moves on to the next
+        queued request — one bad prompt must not stall or corrupt the
+        other lanes."""
         for i in range(self.n_slots):
-            if not self.slots[i].active and self.queue:
-                self._insert(i, self.queue.pop(0))
+            while not self.slots[i].active and self.queue:
+                req = self.queue.popleft()
+                try:
+                    self._insert(i, req)
+                except RequestRejected as e:
+                    self.done[req.uid] = []
+                    self.failed[req.uid] = str(e)
+                    self.stats["failed"] += 1
 
     def step(self) -> None:
         """One batched decode step over all active lanes."""

@@ -1,0 +1,292 @@
+"""JoinService admission front end: service-vs-direct identity, flat
+compile counts after ladder warmup, tenant LRU/unload cache eviction,
+queue backpressure, and the serving-layer plumbing regressions
+(_MetricsDict write-through, env_flag empty-string contract,
+submit_many == sequential submit)."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs.vectorjoin import preset
+from repro.core.types import JoinConfig, TraversalConfig, env_flag
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine.engine import JoinEngine
+from repro.obs import metrics as obs_metrics
+from repro.serve import (JoinRequest, JoinService, RequestRejected,
+                         ServiceConfig)
+from repro.serve.engine import _MetricsDict
+from repro.serve.join_service import snap_budget
+
+TC = TraversalConfig(beam_width=32, expand_per_iter=4, pool_cap=512,
+                     hybrid_beam=32, seeds_max=8, max_iters=1024)
+BK = dict(k=12, degree=8)
+BUCKETS = (16, 32)
+
+
+def _base_cfg():
+    return dataclasses.replace(preset("es_sws", theta=1.0), traversal=TC)
+
+
+@pytest.fixture(scope="module")
+def ds_a():
+    return make_dataset("manifold", n_data=600, n_query=64, dim=16, seed=11)
+
+
+@pytest.fixture(scope="module")
+def ds_b():
+    return make_dataset("clustered", n_data=500, n_query=64, dim=16,
+                        seed=12)
+
+
+def _service(ds_map, **cfg_kw):
+    svc = JoinService(ServiceConfig(buckets=BUCKETS, **cfg_kw),
+                      metrics=obs_metrics.Metrics())
+    for name, ds in ds_map.items():
+        svc.load(name, ds.Y, build_kw=BK, default=_base_cfg(),
+                 engine_kw=dict(carry_window=64))
+    return svc
+
+
+# -- tentpole: shuffled multi-tenant stream == direct submits, no
+#    recompiles after ladder warmup -------------------------------------
+
+
+def test_service_matches_direct_and_compiles_flat(ds_a, ds_b):
+    svc = _service({"ta": ds_a, "tb": ds_b})
+    tenants = {"ta": ds_a, "tb": ds_b}
+    thetas = {n: [float(t) for t in thresholds(ds, 7)[1:4:2]]
+              for n, ds in tenants.items()}          # two θ per tenant
+    quants = ("off", "sq8")
+    for name in tenants:
+        svc.warmup(name, thetas=thetas[name], quants=quants)
+
+    rng = random.Random(3)
+    reqs = []
+    for uid in range(10):
+        name = rng.choice(list(tenants))
+        ds = tenants[name]
+        n = rng.randint(1, BUCKETS[-1])
+        lo = rng.randint(0, 64 - n)
+        reqs.append(JoinRequest(
+            uid=uid, tenant=name,
+            X=np.asarray(ds.X, np.float32)[lo:lo + n],
+            theta=rng.choice(thetas[name]), quant=quants[uid % 2]))
+    for r in reqs:
+        assert svc.submit(r)
+
+    c0 = obs_metrics.compile_count()
+    done = svc.run()
+    c1 = obs_metrics.compile_count()
+    assert c1 == c0, f"{c1 - c0} recompiles after ladder warmup"
+    assert len(done) == len(reqs) and all(sj.ok for sj in done.values())
+
+    # replay per tenant in service ARRIVAL order (work-sharing carry is
+    # order-dependent) on fresh engines with the service's exact plans
+    for name, ds in tenants.items():
+        eng = JoinEngine(ds.Y, build_kw=BK, default=_base_cfg(),
+                         carry_window=64, metrics=obs_metrics.Metrics())
+        for r in (r for r in reqs if r.tenant == name):
+            direct = eng.submit(r.X, svc.plan(r))
+            assert set(map(tuple, direct.pairs.tolist())) == \
+                done[r.uid].pair_set(), f"uid={r.uid} tenant={name}"
+            assert done[r.uid].n_queries == len(r.X)
+
+    snap = svc.metrics_snapshot()
+    g = snap["gauges"]
+    assert g["serve_join.completed"] == len(reqs)
+    assert g["serve_join.rejected"] == 0
+    assert snap["histograms"]["serve_join.admission_seconds"]["count"] \
+        == len(reqs)
+
+
+def test_submit_many_matches_sequential(ds_a):
+    jobs_spec = [(0, 16, "off"), (20, 12, "off"), (8, 16, "sq8")]
+    X = np.asarray(ds_a.X, np.float32)
+    theta = float(thresholds(ds_a, 7)[2])
+
+    def cfg(q):
+        return dataclasses.replace(_base_cfg(), theta=theta, quant=q,
+                                   wave_size=16)
+
+    eng_m = JoinEngine(ds_a.Y, build_kw=BK, default=_base_cfg(),
+                       carry_window=64, metrics=obs_metrics.Metrics())
+    many = eng_m.submit_many(
+        [(X[lo:lo + n], cfg(q)) for lo, n, q in jobs_spec])
+
+    eng_s = JoinEngine(ds_a.Y, build_kw=BK, default=_base_cfg(),
+                       carry_window=64, metrics=obs_metrics.Metrics())
+    for (lo, n, q), rm in zip(jobs_spec, many):
+        rs = eng_s.submit(X[lo:lo + n], cfg(q))
+        assert set(map(tuple, rs.pairs.tolist())) == \
+            set(map(tuple, rm.pairs.tolist()))
+    assert eng_m.n_submitted == eng_s.n_submitted == \
+        sum(n for _, n, _ in jobs_spec)
+
+
+# -- planning ------------------------------------------------------------
+
+
+def test_plan_buckets_and_budget_snapping(ds_a):
+    assert snap_budget(0.0) == 0.25
+    assert snap_budget(0.6) == 0.5
+    assert snap_budget(0.66) == 0.75
+    assert snap_budget(2.0) == 1.0
+
+    svc = _service({"ta": ds_a})
+    base = svc.engine("ta").default
+    X = np.asarray(ds_a.X, np.float32)
+    for n, want in ((1, 16), (16, 16), (17, 32), (100, 32)):
+        assert svc.bucket_for(n) == want
+        cfg = svc.plan(JoinRequest(uid=0, tenant="ta", X=X[:n],
+                                   theta=1.0))
+        assert cfg.wave_size == want
+        assert cfg.traversal is base.traversal       # full budget: untouched
+    half = svc.plan(JoinRequest(uid=0, tenant="ta", X=X[:4], theta=1.0,
+                                recall_budget=0.5))
+    assert half.traversal.patience == \
+        max(1, round(base.traversal.patience * 0.5))
+    assert dataclasses.replace(half.traversal,
+                               patience=base.traversal.patience) \
+        == base.traversal                            # patience-only change
+
+
+def test_rerank_cap_estimate(ds_a):
+    eng = JoinEngine(ds_a.Y, build_kw=BK, default=_base_cfg(),
+                     metrics=obs_metrics.Metrics())
+    X = np.asarray(ds_a.X, np.float32)
+    theta = float(thresholds(ds_a, 7)[2])
+    cfg = dataclasses.replace(_base_cfg(), theta=theta, quant="sq8")
+    cap = eng.estimate_rerank_cap(X, cfg)
+    tcfg = cfg.traversal
+    assert cap is not None and 16 <= cap <= tcfg.pool_cap
+    assert cap & (cap - 1) == 0                      # power of two
+    # sticky per (θ, quant): a different batch must not re-estimate
+    assert eng.estimate_rerank_cap(X[:3], cfg) == cap
+    # exact f32 mode has no band re-rank to size
+    assert eng.estimate_rerank_cap(
+        X, dataclasses.replace(cfg, quant="off")) is None
+
+
+# -- admission / backpressure -------------------------------------------
+
+
+def test_validation_rejects_without_raising(ds_a):
+    svc = _service({"ta": ds_a}, max_queue=2)
+    X = np.asarray(ds_a.X, np.float32)
+    bad = [
+        (JoinRequest(uid=0, tenant="nope", X=X[:4], theta=1.0),
+         "not loaded"),
+        (JoinRequest(uid=1, tenant="ta", X=X[:0], theta=1.0),
+         "non-empty"),
+        (JoinRequest(uid=2, tenant="ta", X=X[:4, :8], theta=1.0),
+         "dim"),
+        (JoinRequest(uid=3, tenant="ta", X=X[:4], theta=0.0),
+         "theta"),
+        (JoinRequest(uid=4, tenant="ta", X=X[:4], theta=1.0,
+                     method="es_mi"), "not servable"),
+        (JoinRequest(uid=5, tenant="ta", X=X[:4], theta=1.0,
+                     quant="zzz"), "quant"),
+    ]
+    for req, frag in bad:
+        assert svc.submit(req) is False
+        assert frag in svc.failed[req.uid]
+        assert svc.done[req.uid].ok is False
+        assert len(svc.done[req.uid].pairs) == 0
+    assert svc.stats["rejected"] == len(bad)
+    with pytest.raises(RequestRejected):
+        svc.validate(bad[0][0])
+
+    ok1 = JoinRequest(uid=10, tenant="ta", X=X[:4], theta=1.0)
+    assert svc.submit(ok1)
+    assert svc.submit(                               # duplicate uid
+        JoinRequest(uid=10, tenant="ta", X=X[:4], theta=1.0)) is False
+    assert "duplicate" in svc.failed[10]
+
+
+def test_queue_overflow_backpressure(ds_a):
+    svc = _service({"ta": ds_a}, max_queue=2)
+    X = np.asarray(ds_a.X, np.float32)
+    for uid in range(2):
+        assert svc.submit(JoinRequest(uid=uid, tenant="ta", X=X[:4],
+                                      theta=1.0))
+    assert svc.stats["queue_depth"] == 2
+    assert svc.submit(JoinRequest(uid=2, tenant="ta", X=X[:4],
+                                  theta=1.0)) is False
+    assert "queue full" in svc.failed[2]
+    assert svc.stats["rejected"] == 1 and svc.stats["admitted"] == 2
+    assert svc.metrics.gauge("serve_join.rejected").value == 1
+
+
+# -- tenancy -------------------------------------------------------------
+
+
+def test_unload_and_lru_eviction_drop_caches(ds_a, ds_b):
+    svc = _service({"ta": ds_a}, max_tenants=1)
+    eng_a = svc.engine("ta")
+    eng_a.index_y()                                  # populate artifact cache
+    assert eng_a._index_y is not None
+
+    svc.load("tb", ds_b.Y, build_kw=BK, default=_base_cfg())
+    assert svc.tenants == ["tb"]                     # LRU evicted ta
+    assert eng_a._index_y is None                    # caches actually dropped
+    assert len(eng_a._tier_stores) == 0
+    assert svc.stats["tenant_evictions"] == 1
+    with pytest.raises(KeyError):
+        svc.engine("ta")
+
+    eng_b = svc.engine("tb")
+    eng_b.index_y()
+    assert svc.unload("tb") is True
+    assert eng_b._index_y is None and len(eng_b._tier_stores) == 0
+    assert svc.unload("tb") is False
+    assert svc.stats["tenants"] == 0
+
+
+# -- serving-layer plumbing regressions ---------------------------------
+
+
+def test_metrics_dict_writes_through_and_rejects_removal():
+    reg = obs_metrics.Metrics()
+    d = _MetricsDict(reg, "t", a=1)
+    assert reg.gauge("t.a").value == 1
+    d["a"] += 2
+    assert reg.gauge("t.a").value == 3
+    d.update(b=5, a=4)
+    assert reg.gauge("t.b").value == 5 and reg.gauge("t.a").value == 4
+    d.update({"c": 6}, a=7)
+    assert reg.gauge("t.c").value == 6 and reg.gauge("t.a").value == 7
+    assert d.setdefault("e", 9) == 9 and reg.gauge("t.e").value == 9
+    assert d.setdefault("e", 0) == 9                 # existing key untouched
+    for op in (lambda: d.pop("a"), lambda: d.popitem(),
+               lambda: d.clear(), lambda: d.__delitem__("a")):
+        with pytest.raises(TypeError):
+            op()
+    assert d["a"] == 7                               # nothing was removed
+
+
+def test_env_flag_empty_counts_as_unset(monkeypatch):
+    name = "REPRO_TEST_FLAG"
+    monkeypatch.delenv(name, raising=False)
+    assert env_flag(name, True) is True
+    assert env_flag(name, False) is False
+    for empty in ("", "   "):
+        monkeypatch.setenv(name, empty)
+        assert env_flag(name, True) is True          # empty == unset
+        assert env_flag(name, False) is False
+    for falsy in ("0", "off", "OFF", " False ", "no"):
+        monkeypatch.setenv(name, falsy)
+        assert env_flag(name, True) is False
+    for truthy in ("1", "on", "yes", "anything"):
+        monkeypatch.setenv(name, truthy)
+        assert env_flag(name, False) is True
+
+
+def test_interleave_env_override(ds_a, monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_INTERLEAVE", "off")
+    svc = _service({"ta": ds_a}, interleave=True)
+    assert svc.interleave is False
+    monkeypatch.setenv("REPRO_SERVE_INTERLEAVE", "")
+    svc2 = _service({"ta": ds_a}, interleave=True)
+    assert svc2.interleave is True
