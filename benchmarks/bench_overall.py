@@ -17,10 +17,15 @@ identical pair sets and reporting ``dims_scanned_frac``.
 ``run_trace_overhead`` is the TraceKit guard: the same cell min-of-N
 timed with the span tracer off vs on, asserting identical pair sets and
 that tracing costs < 5% wall-clock (plus a small additive slack for
-sub-second CI cells). ``--json PATH`` writes all tables as a JSON
-artifact (``BENCH_overall.json``) — CI runs the ``--overlap-only`` form
-as a smoke step and uploads it so the serving-path perf trajectory is
-recorded per commit alongside ``BENCH_offline.json``.
+sub-second CI cells). ``run_sharded`` is the N-device
+mesh sweep: per-shard-count wall-clock and per-transfer-class /
+per-collective byte meters in forced-host-device subprocesses, asserting
+host bytes per wave stay independent of N_y. ``--json PATH`` writes all
+tables as a JSON artifact (``BENCH_overall.json``) — CI runs the
+``--overlap-only`` form as a smoke step and the ``--sharded-only`` form
+on the forced-8-device leg, and snapshots are committed at the repo root
+so the perf trajectory survives between PRs alongside
+``BENCH_offline.json``.
 """
 from __future__ import annotations
 
@@ -194,6 +199,71 @@ def run_early_exit(scale: str = "ci_hd", *, regime: str = "clustered",
     return rows
 
 
+def run_sharded(scale: str = "ci", *, regime: str = "manifold",
+                theta_idx: int = 2, shard_counts=(1, 2, 4, 8),
+                method: str = "es_mi", quant: str = "sq8",
+                wave: int = 128) -> list[dict]:
+    """N-device mesh driver vs single-device: wall-clock, per-transfer-
+    class bytes (feedback / band / assembly), per-collective bytes
+    (all_gather / ppermute / psum), and ``shard_band_imbalance``
+    (max/mean ambiguous-band occupancy across shards).
+
+    Each shard count runs in a subprocess with that many forced host
+    devices (jax locks the device count at first init). Two extra ``nlj``
+    cells run the same shard count and θ at N_y and 4·N_y and *assert*
+    host bytes per wave stay sub-linear in N_y (< 2× for 4× rows): the
+    on-device pool merge ships only the band-compacted merged pool
+    (S × B × merge_cap int32), so host traffic tracks band occupancy,
+    not the data-side row count.
+    """
+    import os
+    import subprocess
+    import sys
+
+    from repro.data.vectors import make_dataset, thresholds
+
+    n_data = 8_000 if scale == "ci" else 60_000
+    n_query, dim = (256, 48) if scale == "ci" else (1_000, 96)
+    ref = make_dataset(regime, n_data=n_data, n_query=n_query, dim=dim,
+                       seed=5)
+    theta = float(thresholds(ref, 7)[theta_idx - 1])
+
+    def cell(n_shards, *, n_data=n_data, method=method, quant=quant):
+        env = dict(os.environ, REPRO_BENCH_DEVICES=str(max(n_shards, 1)),
+                   PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks._sharded_worker",
+             "--n-data", str(n_data), "--n-query", str(n_query),
+             "--dim", str(dim), "--shards", str(n_shards),
+             "--method", method, "--quant", quant,
+             "--theta", repr(theta), "--wave", str(wave)],
+            capture_output=True, text=True, env=env, check=True)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    rows = [cell(s) for s in shard_counts]
+    base_s = rows[0]["seconds"]
+    for r in rows:
+        r["speedup_vs_1"] = base_s / max(r["seconds"], 1e-9)
+
+    # host-bytes-per-wave independence of N_y: same shards, same θ, the
+    # pure mesh NLJ driver (host traffic == the merged pool transfer)
+    s_chk = max(s for s in shard_counts if s > 1)
+    small = cell(s_chk, n_data=n_data // 2, method="nlj", quant="off")
+    big = cell(s_chk, n_data=2 * n_data, method="nlj", quant="off")
+    ratio = big["host_bytes_per_wave"] / max(small["host_bytes_per_wave"],
+                                             1e-9)
+    assert ratio < 2.0, (
+        f"host bytes per wave grew {ratio:.2f}x for 4x N_y "
+        f"({small['host_bytes_per_wave']:.0f} -> "
+        f"{big['host_bytes_per_wave']:.0f}B): the pool merge is leaking "
+        f"N_y-proportional traffic to the host")
+    for r in (small, big):
+        r["speedup_vs_1"] = float("nan")
+        r["ny_check"] = True
+        r["host_bytes_ratio"] = ratio
+    return rows + [small, big]
+
+
 def run_serve(scale: str = "ci", *, regimes=("manifold", "clustered"),
               theta_idx: int = 2, n_requests: int = 16,
               quant_modes=("off", "sq8"), method: str = "es_sws",
@@ -269,10 +339,23 @@ def main(argv=None) -> None:
     ap.add_argument("--overlap-only", action="store_true",
                     help="run only the wave-pipeline and early-exit "
                          "breakdowns (the CI smoke configuration)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run only the N-device mesh sweep (the CI "
+                         "forced-8-device leg)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + metadata as a JSON artifact "
                          "(e.g. BENCH_overall.json for the CI upload)")
     args = ap.parse_args(argv)
+    if args.sharded_only:
+        sharded_rows = run_sharded(args.scale, regime=args.regimes[0])
+        emit(sharded_rows)
+        if args.json:
+            payload = dict(bench="overall", scale=args.scale,
+                           sharded=sharded_rows)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}")
+        return
     rows = ([] if args.overlap_only
             else run(args.scale, regimes=tuple(args.regimes)))
     overlap_rows = run_overlap(args.scale, regime=args.regimes[0])
@@ -280,15 +363,19 @@ def main(argv=None) -> None:
         "full_hd" if args.scale == "full" else "ci_hd")
     trace_rows = run_trace_overhead(args.scale, regime=args.regimes[0])
     serve_rows = run_serve(args.scale)
+    sharded_rows = ([] if args.overlap_only
+                    else run_sharded(args.scale, regime=args.regimes[0]))
     emit(rows)
     emit(overlap_rows)
     emit(early_exit_rows)
     emit(trace_rows)
     emit(serve_rows)
+    emit(sharded_rows)
     if args.json:
         payload = dict(bench="overall", scale=args.scale, rows=rows,
                        overlap=overlap_rows, early_exit=early_exit_rows,
-                       trace_overhead=trace_rows, serve=serve_rows)
+                       trace_overhead=trace_rows, serve=serve_rows,
+                       sharded=sharded_rows)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -1,25 +1,42 @@
-"""Distributed vector join over the production mesh (DESIGN §2.7).
+"""Distributed vector join over an N-device mesh (ARCHITECTURE §8).
 
 A threshold join decomposes exactly over data partitions:
 ``X ⋈_θ Y = ∪_s (X ⋈_θ Y_s)`` — recall composes additively and no
-cross-shard traffic is needed *during* traversal. We therefore:
+cross-shard traffic is needed *during* traversal. ``MeshPlan`` picks,
+per (N_y, d, shards), between two partitionings of that decomposition:
 
-  * shard Y (and its per-shard merged index G_{X∪Y_s}) over the flattened
-    ``(pod, data)`` mesh axes — each device owns an independent subgraph;
-  * replicate the query wave (one broadcast per wave — the only collective
-    on the traversal path);
-  * run the batched MI traversal per shard under ``shard_map``;
-  * concatenate per-shard result pools on the host (global ids =
-    ``shard * shard_size + local id``).
+  * **vector partitioning** — Y rows (and the per-shard merged indexes
+    G_{X∪Y_s}) sharded over the ``data`` axis, full dims per device.
+    The only layout the graph traversal can use: every hop evaluates
+    whole-vector neighbor distances, so dims must be resident.
+  * **hybrid dimension+vector partitioning** (HARMONY, arXiv
+    2506.14707) — for the distance-dominated exact/NLJ path, a second
+    ``model`` axis splits the dim axis into whole PDX slab groups;
+    per-group partial squared distances are combined with a ``psum``.
+    Certified early-exit algebra survives the split: a rank's local
+    partial plus the reverse-triangle tail bound over *all dims it does
+    not own* is a lower bound on the full distance, so any rank may
+    retire a lane unilaterally (see ``hybrid_tail_bound``).
 
-The exact NLJ path additionally shards the *vector dimension* over the
-``model`` axis: partial squared-distance terms are accumulated with a
-``psum`` over model — a reduce-scatter-shaped collective that demonstrates
-the second-level parallelism used by the roofline analysis.
+Each of the wave pipeline's transfer classes rides its own collective
+(the routing table of ARCHITECTURE §8):
 
-Per-shard indexes are built independently (embarrassingly parallel
-offline); the merged-index offloading property is preserved per shard
-because RNG pruning is local to each subgraph.
+  * query waves — one replicating broadcast per wave;
+  * pair-pool merge — on-device: each shard band-compacts its kept
+    pool slots (``ops.band_compact``) and the compacted pools are
+    combined with ``all_gather`` (or an S−1-step ``ppermute`` ring for
+    large shard groups), so the host fetches ONE fused assembly block
+    whose size tracks pair-band occupancy — not N_y, not pool width;
+  * hybrid partial sums — ``psum`` over the model axis;
+  * per-shard scalar stats — ride the same fused fetch.
+
+Uneven shards: Y is padded to ``shard_size * n_shards`` with far-away
+(1e3) sentinel rows. Sentinels are masked out of every per-shard scale /
+center / variance statistic, pre-visited in the traversal bitmap, and
+can never satisfy ``d² < θ²`` — pair sets are those of the unpadded
+join. Per-shard indexes are built independently (embarrassingly
+parallel offline); the merged-index offloading property is preserved
+per shard because RNG pruning is local to each subgraph.
 """
 from __future__ import annotations
 
@@ -40,6 +57,119 @@ from repro.kernels import ops
 from repro.obs import trace as obs_trace
 
 Array = jax.Array
+
+# MeshPlan decision-rule constants (ARCHITECTURE §8). Hybrid
+# dimension+vector partitioning pays off only when (a) the dim axis is
+# wide enough that every model rank owns at least one whole PDX slab —
+# splitting mid-slab would break the suffix-energy tail tables — and
+# (b) vector partitioning alone would starve devices (too few rows per
+# shard to amortize a wave).
+HYBRID_ROW_FLOOR = 4096    # rows/shard below this → move devices to dims
+POOL_COMBINE_RING_MIN = 8  # ppermute ring combine for groups this large
+DEFAULT_MERGE_CAP = 32     # cold-start kept-pairs/lane/shard capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """How many devices go to rows vs dims, and which collective merges
+    the pair pool (host-side planning object, not a pytree).
+
+    Built by :meth:`plan` from (N_y, d, shards): graph-traversal methods
+    always get pure vector partitioning (``dim_shards == 1``); the
+    exact/NLJ distance path is allowed to move factors of two from the
+    ``data`` axis to the ``model`` axis while rows-per-shard is under
+    ``HYBRID_ROW_FLOOR`` and each model rank still owns at least one
+    whole PDX slab. The pool combine is ``all_gather`` for small shard
+    groups and an equivalent ``ppermute`` ring for groups of
+    ``POOL_COMBINE_RING_MIN``+ (same payload, no S× logical staging on
+    one device's allocator).
+    """
+    n_shards: int                  # devices on the data (row) axis
+    dim_shards: int = 1            # devices on the model (dim-slab) axis
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pool_combine: str = "all_gather"   # or "ppermute"
+
+    def __post_init__(self):
+        if self.pool_combine not in ("all_gather", "ppermute"):
+            raise ValueError(
+                f"unknown pool combine {self.pool_combine!r}")
+
+    @property
+    def kind(self) -> str:
+        return "vector" if self.dim_shards == 1 else "hybrid"
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_shards * self.dim_shards
+
+    def make_mesh(self) -> Mesh:
+        if self.dim_shards == 1:
+            return jax.make_mesh((self.n_shards,), (self.data_axis,))
+        return jax.make_mesh((self.n_shards, self.dim_shards),
+                             (self.data_axis, self.model_axis))
+
+    @classmethod
+    def plan(cls, n_y: int, d: int, shards, *, devices: int | None = None,
+             traversal: bool = True, pool_combine: str | None = None
+             ) -> "MeshPlan":
+        """Resolve ``shards`` (int, 0 or ``"auto"`` = all local devices)
+        into a partitioning for a (N_y, d) data side.
+
+        Raises a clear ``ValueError`` when more shards are requested
+        than devices exist — *before* anything reaches ``shard_map``.
+        """
+        from repro.quant.pdx import DEFAULT_SLAB
+
+        if devices is None:
+            devices = len(jax.devices())
+        if shards in (0, "auto", None):
+            shards = devices
+        shards = int(shards)
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > devices:
+            raise ValueError(
+                f"{shards} shard(s) requested but only {devices} JAX "
+                f"device(s) visible; use --shards auto, or force host "
+                f"devices with XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={shards} on CPU")
+        k = 1
+        if not traversal:
+            while (shards % (k * 2) == 0 and shards // (k * 2) >= 1
+                   and d // (k * 2) >= DEFAULT_SLAB
+                   and n_y // (shards // k) < HYBRID_ROW_FLOOR):
+                k *= 2
+        n_shards = shards // k
+        if pool_combine is None:
+            pool_combine = ("ppermute"
+                            if n_shards >= POOL_COMBINE_RING_MIN
+                            else "all_gather")
+        return cls(n_shards=n_shards, dim_shards=k,
+                   pool_combine=pool_combine)
+
+
+def _ring_gather(x: Array, axis: str, n: int) -> Array:
+    """``all_gather`` expressed as S−1 ``ppermute`` ring shifts.
+
+    Round ``i`` hands each rank the buffer of rank ``r − i``; a scatter
+    by source rank reorders the received stack so every rank ends with
+    the same (S, ...) block an ``all_gather`` would produce. Payload per
+    device is identical to the ring all_gather ((S−1)·|x| received); it
+    exists as the ``MeshPlan.pool_combine == "ppermute"`` routing for
+    large shard groups and is asserted pair-identical to the all_gather
+    path in tests/test_mesh.py.
+    """
+    rank = jax.lax.axis_index(axis).astype(jnp.int32)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    parts = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        parts.append(cur)
+    stack = jnp.stack(parts)        # stack[i] came from rank (r − i) % n
+    src = (rank - jnp.arange(n, dtype=jnp.int32)) % n
+    return jnp.zeros_like(stack).at[src].set(stack)
 
 
 @jax.tree_util.register_dataclass
@@ -340,7 +470,7 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                    hybrid: bool, axis: str, group_size: int,
                    tier_names: tuple, n_shards: int, pad: int,
                    rerank_cap: int, pdx_slab: int, pdx_dim: int,
-                   early_exit: bool):
+                   early_exit: bool, merge_cap: int, pool_combine: str):
     """Per-shard MI join body (runs under shard_map; all-local compute).
 
     With ``tier_names`` the shard reconstructs its *local*
@@ -348,8 +478,18 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
     certified lower bounds (queries encoded on the local grids),
     re-ranking only the ambiguous band of its pool with exact f32
     distances before returning — the same escalation code path as the
-    single-device engine, so the merged host-side result is identical to
-    the f32 path. Escalation counts return per shard.
+    single-device engine, so the merged result is identical to the f32
+    path. Escalation counts return per shard.
+
+    The pair pool is merged *on device*: each shard band-compacts its
+    kept pool slots into ``merge_cap`` dense columns and the compacted
+    pools are combined across the shard axis (``all_gather`` or a
+    ``ppermute`` ring per ``pool_combine``), so the host's assembly
+    fetch is one fused (S, B, merge_cap) id block sized by pair-band
+    occupancy — never the (S, B, pool_cap) raw pools. Lanes whose kept
+    set outgrows ``merge_cap`` report their true occupancy in the
+    ``n_keep`` output; the driver retries the wave at a grown capacity,
+    so emitted pairs never depend on the cap.
 
     The in-shard re-rank is *sparse*: the ambiguous band is stably
     compacted into ``rerank_cap`` slots (``ops.band_compact``) and only
@@ -439,10 +579,19 @@ def _local_mi_join(vecs, nbrs, mnd, start, qq, qscales, qnorms, qerr,
                 vecs, xw, r.pool_idx, amb, cap, impl=cfg.dist_impl)
         keep = sure | (within & (exact < th2))
         n_band_over = jnp.sum(amb & ~within, axis=1).astype(jnp.int32)
-    # globalize result ids
-    gids = jnp.where(r.pool_idx != NO_NODE,
-                     r.pool_idx + rank * shard_size, NO_NODE)
-    return (gids[None], r.pool_dist[None], keep[None], r.overflow[None],
+    # globalize kept ids and merge the pool on device: compact the kept
+    # slots of this shard's pool, then combine compacted pools across
+    # the shard axis so one fused assembly transfer reaches the host
+    kept = keep & lane_valid[:, None] & (r.pool_idx != NO_NODE)
+    gids = jnp.where(kept, r.pool_idx + rank * shard_size, NO_NODE)
+    n_keep = jnp.sum(kept, axis=1).astype(jnp.int32)
+    _, cand, _ = ops.band_compact(kept, gids, merge_cap)
+    if pool_combine == "ppermute" and isinstance(axis, str):
+        merged = _ring_gather(cand, axis, n_shards)
+    else:
+        merged = jax.lax.all_gather(cand, axis)
+        merged = merged.reshape(n_shards, *cand.shape)
+    return (merged, n_keep[None], r.overflow[None],
             r.n_dist[None], n_rerank[None], r.n_esc[None],
             n_band_over[None], n_dims_scanned[None], n_dims_total[None])
 
@@ -452,7 +601,9 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                              hybrid: bool = False,
                              cascade: ShardedCascade | None = None,
                              n_data: int | None = None,
-                             rerank_cap: int | None = None):
+                             rerank_cap: int | None = None,
+                             merge_cap: int = DEFAULT_MERGE_CAP,
+                             pool_combine: str = "all_gather"):
     """Build the pjit'd per-wave distributed join step.
 
     shard_axes: mesh axis name (or tuple of names) the index is sharded
@@ -497,7 +648,8 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
         rerank_cap=cfg.rerank_cap if rerank_cap is None else rerank_cap,
         pdx_slab=pstore.slab if pdx else 1,
         pdx_dim=pstore.dim if pdx else 0,
-        early_exit=early_exit_enabled(cfg) if pdx else False)
+        early_exit=early_exit_enabled(cfg) if pdx else False,
+        merge_cap=merge_cap, pool_combine=pool_combine)
 
     mapped = compat.shard_map(
         body, mesh=mesh,
@@ -507,8 +659,11 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
                   spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
                   spec_idx, spec_idx, spec_idx, spec_idx,
                   P(), P(), P()),
-        out_specs=(spec_idx, spec_idx, spec_idx, spec_idx, spec_idx,
-                   spec_idx, spec_idx, spec_idx, spec_idx, spec_idx),
+        # the merged pool is identical on every shard after the combine
+        # collective → replicated out-spec: the host fetch is ONE fused
+        # (S, B, merge_cap) block, not S per-shard pools
+        out_specs=(P(), spec_idx, spec_idx, spec_idx, spec_idx,
+                   spec_idx, spec_idx, spec_idx, spec_idx),
         check_vma=False)
 
     S = smi.n_shards
@@ -560,71 +715,100 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
     return step, qargs
 
 
-def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
-                        *, theta: float, cfg: TraversalConfig,
-                        wave_size: int = 256, hybrid: bool = False,
+def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
+                        shard_axes=None, *, theta: float,
+                        cfg: TraversalConfig, wave_size: int = 256,
+                        hybrid: bool = False,
                         cascade: ShardedCascade | None = None,
-                        n_data: int | None = None, overlap: bool = True):
+                        n_data: int | None = None, overlap: bool = True,
+                        plan: MeshPlan | None = None,
+                        merge_cap: int = DEFAULT_MERGE_CAP):
     """Host driver: waves of queries against all shards; assemble pairs.
 
-    Pipelined like the single-device wave loop: shard waves are mutually
-    independent, so wave *k+1* is dispatched before wave *k*'s per-shard
-    pools are transferred and merged on the host — the host-side pair
-    assembly runs in the shadow of the devices. ``overlap=False``
-    serializes the same steps (the bisection escape hatch).
+    Pass either an explicit ``(mesh, shard_axes)`` or a ``MeshPlan``
+    (which also selects the pool-combine collective). Pipelined like the
+    single-device wave loop: shard waves are mutually independent, so
+    wave *k+1* is dispatched before wave *k*'s merged pool is fetched —
+    the host-side pair assembly runs in the shadow of the devices.
+    ``overlap=False`` serializes the same steps (the bisection escape
+    hatch).
 
-    With a ``cascade`` the in-shard re-rank is band-compacted; a wave
-    whose band overflows the capacity on any shard is retried through a
-    step built at the next power-of-two capacity (sticky for the rest of
-    the call), so the merged pair set never depends on the capacity.
+    Two sticky grow-and-retry capacities (``waves.StickyCap``) keep
+    results cap-independent: the in-shard re-rank band capacity and the
+    merged-pool capacity (kept pairs per lane per shard). A wave that
+    overflows either on any shard is retried through a step built at the
+    next power-of-two capacity, sticky for the rest of the call.
+
+    The assembly transfer is the all_gather/ppermute-combined
+    (S, B, merge_cap) id block — host bytes per wave scale with the
+    pair-band occupancy the merge capacity tracks, independent of N_y
+    (per-collective traffic is metered in ``bytes_allgather`` /
+    ``bytes_ppermute``; the fused fetch in ``bytes_assembly``).
 
     Returns ``(pairs, stats)`` where ``stats`` is a field-complete
     ``JoinStats``: one per-shard ``JoinStats`` is accumulated over the
     run (``band_occ_per_shard`` holding that shard's band total) and the
-    shard group is reduced with the associative ``JoinStats.merge`` —
-    the same combine callers use to fold the result into their own
-    stats. Host-phase time is self-attributed (``wait_seconds`` for the
+    shard group is reduced with the associative ``JoinStats.merge``.
+    Host-phase time is self-attributed (``wait_seconds`` for the
     blocking per-wave transfer, ``other_seconds`` for pair assembly).
     """
+    from repro.engine import waves as W
+
+    if plan is not None:
+        if mesh is None:
+            mesh = plan.make_mesh()
+        if shard_axes is None:
+            shard_axes = plan.data_axis
+    if mesh is None or shard_axes is None:
+        raise ValueError("pass mesh+shard_axes or a MeshPlan")
+    pool_combine = plan.pool_combine if plan is not None else "all_gather"
     X = jnp.asarray(X)
     nq = X.shape[0]
     d = int(X.shape[1])
     C = cfg.pool_cap
-    cap0 = (min(ops.next_pow2(cfg.rerank_cap), C)
-            if cfg.rerank_cap > 0 else C)
-    steps: dict[int, tuple] = {}
+    S = smi.n_shards
+    rcap = W.RerankCap(cfg)
+    mcap = W.StickyCap(merge_cap, C)
+    steps: dict[tuple, tuple] = {}
 
-    def get_step(cap: int):
-        if cap not in steps:
-            steps[cap] = make_distributed_mi_join(
+    def get_step():
+        key = (rcap.cap if cascade is not None else C, mcap.cap)
+        if key not in steps:
+            steps[key] = make_distributed_mi_join(
                 mesh, shard_axes, smi, theta=theta, cfg=cfg, hybrid=hybrid,
-                cascade=cascade, n_data=n_data, rerank_cap=cap)
-        return steps[cap]
+                cascade=cascade, n_data=n_data, rerank_cap=key[0],
+                merge_cap=key[1], pool_combine=pool_combine)
+        return steps[key]
 
-    cur_cap = cap0 if cascade is not None else C
     pairs_out = []
-    shard_stats = [JoinStats() for _ in range(smi.n_shards)]
-    band = np.zeros(smi.n_shards, np.int64)
+    shard_stats = [JoinStats() for _ in range(S)]
+    band = np.zeros(S, np.int64)
     tr = obs_trace.tracer()
 
-    def dispatch(padded, lane_valid, cap: int):
-        step, qargs = get_step(cap)
-        dev = tr.begin("wave/device", lane="traversal", cap=cap,
-                       shards=smi.n_shards)
+    def dispatch(padded, lane_valid):
+        step, qargs = get_step()
+        dev = tr.begin("wave/device", lane="traversal", cap=rcap.cap,
+                       merge_cap=mcap.cap, shards=S)
         with compat.set_mesh(mesh):
             outs = step(
                 smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
                 X[jnp.asarray(padded)], jnp.asarray(padded),
                 jnp.asarray(lane_valid))
-        if cascade is not None:
-            B = int(lane_valid.shape[0])
-            for st in shard_stats:
-                st.n_rerank_gather += B * cap
-                st.bytes_band += B * cap * d * 4
+        B = int(lane_valid.shape[0])
+        combine_bytes = (S - 1) * B * mcap.cap * 4   # peer payload/device
+        for st in shard_stats:
+            if cascade is not None:
+                st.n_rerank_gather += B * rcap.cap
+                st.bytes_band += B * rcap.cap * d * 4
+            if pool_combine == "ppermute":
+                st.bytes_ppermute += combine_bytes
+            else:
+                st.bytes_allgather += combine_bytes
         return outs, dev
 
     def fetch(outs, dev):
-        """The blocking per-wave transfer (all shard pools at once)."""
+        """The blocking per-wave transfer: one fused merged-pool block
+        plus the per-shard scalar stats."""
         t0 = time.perf_counter()
         outs = jax.device_get(outs)
         if dev:
@@ -634,28 +818,39 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
         return outs
 
     def assemble(wave) -> None:
-        nonlocal cur_cap
         padded, lane_valid, outs, dev = wave
         with tr.span("wave/assemble", lane="assembly") as sp:
-            (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
+            (merged, n_keep, overflow, n_dist, n_rerank, n_esc,
              n_band_over, n_dims_s, n_dims_t) = fetch(outs, dev)
-            if n_band_over[:, lane_valid].sum() > 0:
-                # a shard's band outgrew the compaction capacity: re-rank
-                # this wave at a capacity covering the worst shard band
-                # and keep the larger step for the rest of the call
-                needed = int(n_rerank[:, lane_valid].max())
+            # grow-and-retry: the band capacity (in-shard re-rank) and
+            # the merge capacity (kept pairs per lane per shard) are both
+            # exact after one measurement, but growing the band can admit
+            # more kept pairs — loop until neither overflows (bounded:
+            # caps are monotone powers of two clamped to pool_cap)
+            while True:
+                need_band = (int(n_rerank[:, lane_valid].max())
+                             if n_band_over[:, lane_valid].sum() > 0 else 0)
+                need_merge = (int(n_keep[:, lane_valid].max())
+                              if (n_keep[:, lane_valid] > mcap.cap).any()
+                              else 0)
+                if not need_band and not need_merge:
+                    break
                 if tr:
                     tr.instant("wave/overflow_retry", lane="traversal",
-                               needed=needed, cap=cur_cap)
-                cur_cap = ops.grow_cap(cur_cap, needed, C)
-                (gids, gdist, keep, overflow, n_dist, n_rerank, n_esc,
+                               band=need_band, merge=need_merge,
+                               cap=rcap.cap, merge_cap=mcap.cap)
+                if need_band:
+                    rcap.grow(need_band)
+                if need_merge:
+                    mcap.grow(need_merge)
+                (merged, n_keep, overflow, n_dist, n_rerank, n_esc,
                  n_band_over, n_dims_s, n_dims_t) = fetch(
-                    *dispatch(padded, lane_valid, cur_cap))
+                    *dispatch(padded, lane_valid))
             t1 = time.perf_counter()
-            # (S, B, C) kept pool slots, restricted to real lanes
-            mask = keep & lane_valid[None, :, None]
-            sh, ln, sl = np.nonzero(mask)
-            pairs_out.append(np.stack([padded[ln], gids[sh, ln, sl]],
+            # (S, B, K) merged id block: every non-sentinel entry is a
+            # kept (shard-global) pair for its lane
+            sh, ln, sl = np.nonzero(merged != NO_NODE)
+            pairs_out.append(np.stack([padded[ln], merged[sh, ln, sl]],
                                       axis=1))
             per = {  # (S,) per-shard wave totals
                 "n_dist": n_dist[:, lane_valid].sum(axis=1),
@@ -676,11 +871,8 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
     pending = None
     for q0 in range(0, nq, wave_size):
         ids = np.arange(q0, min(q0 + wave_size, nq))
-        padded = np.zeros(wave_size, np.int32)
-        padded[:ids.size] = ids
-        lane_valid = np.zeros(wave_size, bool)
-        lane_valid[:ids.size] = True
-        outs, dev = dispatch(padded, lane_valid, cur_cap)
+        padded, lane_valid = W.pad_wave(ids.astype(np.int32), wave_size)
+        outs, dev = dispatch(padded, lane_valid)
         if overlap:
             if pending is not None:
                 assemble(pending)
@@ -698,7 +890,254 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh, shard_axes,
 
 
 # ---------------------------------------------------------------------------
-# exact NLJ with 2-D (data × model) sharding — dimension-parallel distances
+# hybrid dimension+vector partitioning — exact NLJ over a 2-D mesh
+# ---------------------------------------------------------------------------
+
+def _pad_cols(A: np.ndarray, k: int, slab: int) -> tuple[np.ndarray, int]:
+    """Zero-pad columns so ``k`` model ranks each own the same number of
+    *whole* slabs (``w`` columns each). Zero columns contribute exactly
+    0.0 to every squared distance, so padded results are bit-identical
+    to unpadded ones."""
+    d = A.shape[1]
+    n_slabs = -(-d // slab)
+    per = -(-n_slabs // k)           # whole slabs per model rank
+    w = per * slab
+    if w * k == d:
+        return np.ascontiguousarray(A, np.float32), w
+    out = np.zeros((A.shape[0], w * k), np.float32)
+    out[:, :d] = A
+    return out, w
+
+
+def slab_partial_sq_dists(X, Y, k: int, *, slab: int | None = None):
+    """Unsharded reference of the hybrid partition's partial sums.
+
+    Returns the (k, B, N) per-group partial squared distances, computed
+    with the *same arithmetic* each model rank runs locally (norms +
+    GEMM over the group's column slice). ``sum(axis=0)`` of this stack
+    is the grouped-order total the ``psum`` combine must reproduce
+    bitwise on CPU — the admissibility contract of the hybrid plan
+    (tests/test_mesh.py)."""
+    from repro.quant.pdx import DEFAULT_SLAB
+
+    sl = slab or DEFAULT_SLAB
+    Xp, w = _pad_cols(np.asarray(X), k, sl)
+    Yp, _ = _pad_cols(np.asarray(Y), k, sl)
+    parts = []
+    for g in range(k):
+        x = jnp.asarray(Xp[:, g * w:(g + 1) * w])
+        y = jnp.asarray(Yp[:, g * w:(g + 1) * w])
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)
+        yn = jnp.sum(y * y, axis=-1, keepdims=True)
+        parts.append(xn + yn.T - 2.0 * (x @ y.T))
+    return jnp.stack(parts)
+
+
+def make_hybrid_sq_dists(mesh: Mesh, plan: MeshPlan):
+    """jit'd ``(Xp, Yp) → (B, N)`` exact squared distances with the dim
+    axis split into whole-slab groups over the model axis and per-group
+    partials combined with ``psum`` (rows replicated — the minimal
+    admissibility harness for the hybrid partitioning; the production
+    path is ``distributed_nlj_join``)."""
+    def body(x, y):
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)
+        yn = jnp.sum(y * y, axis=-1, keepdims=True)
+        part = xn + yn.T - 2.0 * (x @ y.T)
+        if plan.dim_shards > 1:
+            part = jax.lax.psum(part, plan.model_axis)
+        return part
+
+    spec = (P(None, plan.model_axis) if plan.dim_shards > 1
+            else P(None, None))
+    mapped = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                              out_specs=P(), check_vma=False)
+    return jax.jit(mapped)
+
+
+def hybrid_tail_bound(part, own_x, own_y, norm_x, norm_y, d: int):
+    """Certified lower bound on the *full* squared distance available to
+    a model rank that owns only one dim-slab group.
+
+    ``part`` is the rank's exact local partial, ``own_*`` the group
+    energies (local squared norms) and ``norm_*`` the full squared
+    norms. By the reverse triangle inequality over every dim the rank
+    does NOT own::
+
+        part + (√(‖x‖²−own_x) − √(‖y‖²−own_y))² ≤ ‖x − y‖²
+
+    deflated by the PDX rounding guard (``pdx.deflate_tail``) so f32
+    round-off can't inflate it past the true distance. A rank may
+    therefore unilaterally retire a lane when the bound exceeds θ² —
+    certified early exit survives the hybrid split, and the psum'd
+    retirement flag keeps every rank's keep-decision identical."""
+    from repro.quant import pdx as pdx_mod
+
+    ox = jnp.maximum(norm_x - own_x, 0.0)
+    oy = jnp.maximum(norm_y - own_y, 0.0)
+    rt = (jnp.sqrt(ox) - jnp.sqrt(oy)) ** 2
+    return part + pdx_mod.deflate_tail(rt, norm_x + norm_y, d)
+
+
+def _make_nlj_step(mesh: Mesh, plan: MeshPlan, *, rows: int, d: int,
+                   merge_cap: int):
+    """Compiled per-wave step of the sharded exact NLJ: rows over the
+    data axis, whole-slab dim groups over the model axis (hybrid plans),
+    ``psum`` partial-sum combine, certified per-rank retirement, and the
+    same on-device band-compact + all_gather/ppermute pool merge as the
+    MI driver. θ² is a *runtime* argument — threshold sweeps and served
+    tenants reuse one executable."""
+    S, k = plan.n_shards, plan.dim_shards
+    daxis, maxis = plan.data_axis, plan.model_axis
+
+    def body(x, y, th2, lane_valid):
+        # x: (B, w) local dim slice;  y: (rows, w) local rows × dims
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)
+        yn = jnp.sum(y * y, axis=-1, keepdims=True)
+        part = xn + yn.T - 2.0 * (x @ y.T)
+        if k > 1:
+            # full norms, certified per-rank retirement, exact combine
+            nx = jax.lax.psum(xn, maxis)
+            ny = jax.lax.psum(yn, maxis)
+            bound = hybrid_tail_bound(part, xn, yn.T, nx, ny.T, d)
+            retired = jax.lax.psum(
+                (bound > th2).astype(jnp.int32), maxis)
+            d2 = jax.lax.psum(part, maxis)
+            kept = (retired == 0) & (d2 < th2)
+        else:
+            kept = part < th2
+        kept = kept & lane_valid[:, None]
+        rank = jax.lax.axis_index(daxis).astype(jnp.int32)
+        ids = jnp.arange(rows, dtype=jnp.int32)[None, :] + rank * rows
+        gids = jnp.where(kept, jnp.broadcast_to(ids, kept.shape), NO_NODE)
+        n_keep = jnp.sum(kept, axis=1).astype(jnp.int32)
+        _, cand, _ = ops.band_compact(kept, gids, merge_cap)
+        if plan.pool_combine == "ppermute":
+            merged = _ring_gather(cand, daxis, S)
+        else:
+            merged = jax.lax.all_gather(cand, daxis)
+        return merged, n_keep[None]
+
+    if k > 1:
+        in_specs = (P(None, maxis), P(daxis, maxis), P(), P())
+        out_specs = (P(), P(daxis))
+    else:
+        in_specs = (P(None, None), P(daxis, None), P(), P())
+        out_specs = (P(), P(daxis))
+    mapped = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped)
+
+
+def distributed_nlj_join(X, Y, plan: MeshPlan, *, theta: float,
+                         wave_size: int = 256,
+                         merge_cap: int = DEFAULT_MERGE_CAP,
+                         step_cache: dict | None = None):
+    """Sharded exact NLJ driver — the pair-producing engine path behind
+    ``MeshPlan`` hybrid plans.
+
+    Y rows are padded to ``n_shards`` even shards with far-away (1e3)
+    sentinels and sharded over the data axis; for hybrid plans the dim
+    axis is zero-padded to whole slabs and split over the model axis
+    (``psum`` partial-sum combine + certified per-rank retirement —
+    pairs identical to the single-device exact NLJ). The kept pool is
+    merged on device and fetched as one fused block per wave.
+
+    ``step_cache`` (engine-owned dict) pins the compiled step, the
+    device-resident sharded Y block, and the sticky merge capacity
+    across calls: streaming submits and threshold sweeps stay at a flat
+    compile count because θ² is a runtime argument.
+
+    Returns ``(pairs, stats)``.
+    """
+    from repro.engine import waves as W
+    from repro.quant.pdx import DEFAULT_SLAB
+
+    cache = step_cache if step_cache is not None else {}
+    X = np.asarray(X, np.float32)
+    Y = np.asarray(Y, np.float32)
+    n_data, d = Y.shape
+    S, k = plan.n_shards, plan.dim_shards
+    key = (plan, n_data, d)
+    if cache.get("key") != key:
+        rows = -(-n_data // S)
+        Yp = Y
+        if rows * S != n_data:
+            Yp = np.concatenate(
+                [Y, np.full((rows * S - n_data, d), 1e3, np.float32)],
+                axis=0)
+        Yp, w = _pad_cols(Yp, k, DEFAULT_SLAB)
+        cache.clear()
+        cache.update(key=key, mesh=plan.make_mesh(), rows=rows, w=w,
+                     Yp=jnp.asarray(Yp),
+                     mcap=W.StickyCap(merge_cap, rows * S), steps={})
+    mesh, rows, w = cache["mesh"], cache["rows"], cache["w"]
+    mcap: W.StickyCap = cache["mcap"]
+
+    def get_step():
+        if mcap.cap not in cache["steps"]:
+            cache["steps"][mcap.cap] = _make_nlj_step(
+                mesh, plan, rows=rows, d=d, merge_cap=mcap.cap)
+        return cache["steps"][mcap.cap]
+
+    Xp, _ = _pad_cols(X, k, DEFAULT_SLAB)
+    th2 = jnp.float32(theta) ** 2
+    stats = JoinStats()
+    pairs_out = []
+    tr = obs_trace.tracer()
+
+    def dispatch(xw, lane_valid):
+        step = get_step()
+        with compat.set_mesh(mesh):
+            outs = step(jnp.asarray(xw), cache["Yp"], th2,
+                        jnp.asarray(lane_valid))
+        B = int(lane_valid.shape[0])
+        # collective meters (ARCHITECTURE §8 routing table): the pool
+        # combine over the data axis and, for hybrid plans, the psum'd
+        # partials / norms / retirement flags over the model axis
+        combine = (S - 1) * B * mcap.cap * 4
+        if plan.pool_combine == "ppermute":
+            stats.bytes_ppermute += S * combine
+        else:
+            stats.bytes_allgather += S * combine
+        if k > 1:
+            stats.bytes_psum += (plan.n_devices * (k - 1)
+                                 * (2 * B * rows + B + rows) * 4)
+        return outs
+
+    nq = X.shape[0]
+    for q0 in range(0, nq, wave_size):
+        ids = np.arange(q0, min(q0 + wave_size, nq))
+        padded, lane_valid = W.pad_wave(ids.astype(np.int32), wave_size)
+        xw = Xp[padded]
+        outs = dispatch(xw, lane_valid)
+        while True:
+            t0 = time.perf_counter()
+            merged, n_keep = jax.device_get(outs)
+            stats.wait_seconds += time.perf_counter() - t0
+            stats.bytes_assembly += merged.nbytes + n_keep.nbytes
+            if not (n_keep[:, lane_valid] > mcap.cap).any():
+                break
+            need = int(n_keep[:, lane_valid].max())
+            if tr:
+                tr.instant("wave/merge_retry", lane="traversal",
+                           needed=need, merge_cap=mcap.cap)
+            mcap.grow(need)
+            outs = dispatch(xw, lane_valid)
+        t1 = time.perf_counter()
+        sh, ln, sl = np.nonzero(merged != NO_NODE)
+        pairs_out.append(np.stack([padded[ln], merged[sh, ln, sl]],
+                                  axis=1))
+        stats.n_dist += int(lane_valid.sum()) * rows * S
+        stats.other_seconds += time.perf_counter() - t1
+    pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
+             else np.empty((0, 2), np.int64)).astype(np.int64)
+    pairs = pairs[pairs[:, 1] < n_data]      # sentinel belt-and-braces
+    stats.band_occ_per_shard = (0,) * S      # NLJ has no re-rank band
+    return pairs, stats
+
+
+# ---------------------------------------------------------------------------
+# exact NLJ counts with 2-D (data × model) sharding — the roofline demo
 # ---------------------------------------------------------------------------
 
 def make_distributed_nlj_count(mesh: Mesh, data_axes, model_axis: str,

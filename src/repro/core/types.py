@@ -225,6 +225,18 @@ class JoinStats:
     #                                (n_rerank_gather × d × 4)
     bytes_assembly: int = 0        # the bulky per-wave pool transfer
     #                                (idx/dist/keep/stats block)
+    # Bytes moved per *collective* on the sharded mesh (device↔device
+    # accounting; ARCHITECTURE §8). Each transfer class is routed over
+    # one collective — these meters are how the routing table is
+    # observable:
+    bytes_allgather: int = 0       # all_gather pool combine: per-device
+    #                                payload received from peers during
+    #                                the on-device pair-pool merge
+    bytes_ppermute: int = 0        # ppermute ring combine (the same
+    #                                merge routed as S−1 ring shifts for
+    #                                large shard groups)
+    bytes_psum: int = 0            # psum partial-sum combines (hybrid
+    #                                dimension-partitioned distances)
 
     @property
     def total_seconds(self) -> float:

@@ -118,11 +118,15 @@ class JoinEngine:
     build_kw : kwargs forwarded to ``graph.build_index`` /
         ``build_merged_index`` (``k``, ``degree``, ``style``, ...).
     default : the ``JoinConfig`` used when a call supplies none.
-    n_shards : >1 shards Y (and its merged indexes) over that many
-        devices for the MI methods. Requires ≥ n_shards JAX devices.
+    n_shards : >1 shards Y over that many devices (MI methods shard the
+        merged indexes row-wise; ``nlj`` runs the mesh NLJ driver, with
+        hybrid dimension+vector partitioning when the ``MeshPlan``
+        decision rule picks it). ``0`` means one shard per visible JAX
+        device; requesting more shards than devices raises early with a
+        clear error (``distributed.MeshPlan.plan``).
     mesh, shard_axes : optionally supply an existing mesh (e.g. the
-        production ``(pod, data, model)`` mesh) instead of the default
-        1-D ``("data",)`` mesh the engine builds on demand.
+        production ``(pod, data, model)`` mesh) instead of the planned
+        mesh the engine builds on demand.
     carry_window : how many completed queries the streaming path keeps
         as seed donors for future batches.
     max_cached_indexes : LRU capacity for per-X artifacts (query index,
@@ -142,9 +146,12 @@ class JoinEngine:
         self.Y = jnp.asarray(Y)
         self.build_kw = dict(build_kw or {})
         self.default = default or JoinConfig()
-        self.n_shards = int(n_shards)
+        self.n_shards = (int(n_shards) if n_shards
+                         else len(jax.devices()))   # 0 = one per device
         self._mesh = mesh
         self._shard_axes = shard_axes
+        self._plans: dict[bool, Any] = {}    # MeshPlan per traversal kind
+        self._nlj_steps: dict = {}           # sharded-NLJ compiled state
         self.carry_window = int(carry_window)
         self.metrics = metrics if metrics is not None else \
             obs_metrics.metrics()
@@ -344,6 +351,8 @@ class JoinEngine:
         self._merged.clear()
         self._sharded.clear()
         self._tier_stores.clear()
+        self._nlj_steps.clear()   # device-resident sharded Y + steps
+        self._plans.clear()
 
     def adopt(self, *, index_y: GraphIndex | None = None, X=None,
               index_x: GraphIndex | None = None,
@@ -373,16 +382,18 @@ class JoinEngine:
             rep["theta"] = float(theta)
         return dataclasses.replace(cfg, **rep) if rep else cfg
 
-    def _mesh_axes(self):
-        if self._mesh is None:
-            devs = jax.devices()
-            if len(devs) < self.n_shards:
-                raise ValueError(
-                    f"n_shards={self.n_shards} but only {len(devs)} "
-                    f"device(s) visible")
-            self._mesh = jax.make_mesh((self.n_shards,), ("data",))
-            self._shard_axes = ("data",)
-        return self._mesh, self._shard_axes
+    def _mesh_plan(self, *, traversal: bool):
+        """The engine's ``MeshPlan`` for (N_y, d, n_shards) — vector
+        partitioning for graph traversal, hybrid-eligible for the exact
+        NLJ path. Validates shards ≤ devices with a clear error."""
+        from repro.core import distributed
+        plan = self._plans.get(traversal)
+        if plan is None:
+            plan = distributed.MeshPlan.plan(
+                int(self.Y.shape[0]), int(self.Y.shape[1]),
+                self.n_shards, traversal=traversal)
+            self._plans[traversal] = plan
+        return plan
 
     # -- one-shot joins -----------------------------------------------------
 
@@ -412,6 +423,9 @@ class JoinEngine:
                        index_x=index_x, index_merged=index_merged)
 
         if cfg.method == "nlj":
+            if self.n_shards > 1:
+                return self._done(
+                    self._join_sharded_nlj(X, cfg, stats), X)
             t0 = time.perf_counter()
             casc = self.cascade_for(("y",), self.Y, cfg, stats)
             pairs, counts = cascade_join_pairs(
@@ -458,14 +472,20 @@ class JoinEngine:
 
     def _join_sharded(self, X: Array, cfg: JoinConfig,
                       stats: JoinStats) -> JoinResult:
-        """shard_map MI join: Y partitioned over devices, waves replicated,
-        per-shard pair pools merged on the host."""
+        """Mesh MI join: Y partitioned over devices, waves replicated,
+        pair pools band-compacted and merged on device (one fused
+        assembly transfer per wave)."""
         from repro.core import distributed
         if cfg.method not in _MI_METHODS:
             raise NotImplementedError(
-                f"sharded execution supports {_MI_METHODS}, not "
-                f"{cfg.method!r} (work-sharing caches are per-device)")
-        mesh, axes = self._mesh_axes()
+                f"sharded execution supports {_MI_METHODS} and 'nlj', "
+                f"not {cfg.method!r} (work-sharing caches are "
+                f"per-device)")
+        if self._mesh is not None:        # user-supplied mesh wins
+            mesh, axes, plan = self._mesh, self._shard_axes, None
+        else:
+            mesh, axes = None, None
+            plan = self._mesh_plan(traversal=True)
         smi = self.sharded_index(X)
         # one tier store per shard (per-shard scale and sketch grids),
         # cached alongside the sharded index they compress
@@ -479,7 +499,8 @@ class JoinEngine:
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
             wave_size=cfg.wave_size, hybrid=hybrid, cascade=casc,
-            n_data=int(self.Y.shape[0]), overlap=W.overlap_enabled(cfg))
+            n_data=int(self.Y.shape[0]), overlap=W.overlap_enabled(cfg),
+            plan=plan)
         # dstats is a field-complete JoinStats (one per shard, reduced via
         # merge); it times its own wait/assembly phases, so only the wall
         # clock it did NOT attribute lands in expand_seconds
@@ -489,6 +510,31 @@ class JoinEngine:
         stats = stats.merge(dstats)
         # drop padded sentinel rows (Y padded up to shard_size * n_shards)
         pairs = pairs[pairs[:, 1] < self.Y.shape[0]]
+        return JoinResult(pairs=pairs, stats=stats)
+
+    def _join_sharded_nlj(self, X: Array, cfg: JoinConfig,
+                          stats: JoinStats, offset: int = 0) -> JoinResult:
+        """Mesh exact NLJ: the ``MeshPlan`` may move devices from the
+        row axis to the dim axis (hybrid dimension+vector partitioning;
+        psum partial-sum combine). Distances are exact f32 — pairs are
+        identical to the single-device NLJ under every quant mode, which
+        only ever changes *work*, never pairs. θ is a runtime argument
+        of the cached compiled step, so streamed batches and threshold
+        sweeps run at a flat compile count (``JoinService`` tenants can
+        therefore run sharded)."""
+        from repro.core import distributed
+        plan = self._mesh_plan(traversal=False)
+        t0 = time.perf_counter()
+        pairs, dstats = distributed.distributed_nlj_join(
+            np.asarray(X), np.asarray(self.Y), plan, theta=cfg.theta,
+            wave_size=cfg.wave_size, step_cache=self._nlj_steps)
+        stats.expand_seconds += max(
+            0.0, time.perf_counter() - t0
+            - dstats.wait_seconds - dstats.other_seconds)
+        stats = stats.merge(dstats)
+        if offset:
+            pairs = pairs.copy()
+            pairs[:, 0] += offset
         return JoinResult(pairs=pairs, stats=stats)
 
     # -- streaming ----------------------------------------------------------
@@ -520,17 +566,25 @@ class JoinEngine:
         """
         from repro.core.join import cascade_join_pairs
 
-        if self.n_shards > 1:
-            raise NotImplementedError(
-                "streaming submit() runs single-device; use join() for "
-                "sharded execution (or n_shards=1 for a streaming engine)")
         cfg = self._resolve(cfg, method, theta)
+        if self.n_shards > 1 and cfg.method not in _MI_METHODS \
+                and cfg.method != "nlj":
+            raise NotImplementedError(
+                "sharded streaming supports 'nlj' and the merged-index "
+                "methods; the work-sharing-cache methods "
+                f"{_SEARCH_METHODS} run single-device (n_shards=1)")
         X_batch = jnp.asarray(X_batch)
         nb = int(X_batch.shape[0])
         offset = self._stream_n
         stats = JoinStats()
 
-        if cfg.method == "nlj":
+        if cfg.method == "nlj" and self.n_shards > 1:
+            result = self._join_sharded_nlj(X_batch, cfg, stats, offset)
+        elif cfg.method in _MI_METHODS and self.n_shards > 1:
+            result = self._join_sharded(X_batch, cfg, stats)
+            if offset:
+                result.pairs[:, 0] += offset
+        elif cfg.method == "nlj":
             t0 = time.perf_counter()
             casc = self.cascade_for(("y",), self.Y, cfg, stats)
             pairs, counts = cascade_join_pairs(

@@ -80,15 +80,31 @@ def overlap_enabled(cfg: JoinConfig) -> bool:
 next_pow2 = ops.next_pow2
 
 
-class RerankCap:
-    """Sticky band-compaction capacity for one runner invocation.
+class StickyCap:
+    """Sticky power-of-two grow-and-retry capacity.
 
-    Starts at ``cfg.rerank_cap`` (rounded up to a power of two, clamped
-    to ``pool_cap``); a wave whose ambiguous band overflows grows it to
-    the next power of two covering the observed occupancy and is retried.
-    Powers of two keep the set of jit specializations tiny while the
-    capacity tracks the high-water band — re-rank gather traffic stays
-    proportional to what the cascade actually leaves ambiguous.
+    The one overflow-retry shape used wherever a sparse set is compacted
+    into a fixed-width device buffer: starts at ``init`` (rounded up to
+    a power of two, clamped to ``limit``); a wave that overflows grows
+    the capacity to the next power of two covering the observed
+    occupancy and is retried. Powers of two keep the set of jit
+    specializations tiny while the capacity tracks the high-water
+    occupancy. Shared by the re-rank band (``RerankCap``) and the
+    sharded driver's on-device pair-pool merge
+    (``core.distributed.distributed_mi_join``).
+    """
+
+    def __init__(self, init: int, limit: int):
+        self.limit = limit
+        self.cap = min(next_pow2(max(init, 1)), limit)
+
+    def grow(self, needed: int) -> None:
+        self.cap = ops.grow_cap(self.cap, needed, self.limit)
+
+
+class RerankCap(StickyCap):
+    """``StickyCap`` for the ambiguous-band re-rank of one runner
+    invocation, sized from the traversal config.
 
     ``init_cap`` overrides the config's cold-start value with a measured
     estimate (``JoinEngine.estimate_rerank_cap``'s LSH sample) without
@@ -98,14 +114,10 @@ class RerankCap:
     """
 
     def __init__(self, tcfg: TraversalConfig, init_cap: int | None = None):
-        self.limit = tcfg.pool_cap
         init = (init_cap if init_cap is not None and init_cap > 0
                 else tcfg.rerank_cap if tcfg.rerank_cap > 0
                 else tcfg.pool_cap)
-        self.cap = min(next_pow2(init), self.limit)
-
-    def grow(self, needed: int) -> None:
-        self.cap = ops.grow_cap(self.cap, needed, self.limit)
+        super().__init__(init, tcfg.pool_cap)
 
 
 # ---------------------------------------------------------------------------

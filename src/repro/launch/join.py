@@ -25,6 +25,29 @@ from repro.data.vectors import make_dataset, thresholds
 from repro.obs import trace as obs_trace
 
 
+def shards_arg(v: str) -> int:
+    """``--shards`` parser: ``auto`` = one shard per local device (0 is
+    the engine's auto sentinel), otherwise a positive int."""
+    if v.strip().lower() == "auto":
+        return 0
+    return int(v)
+
+
+def check_shards(ap: argparse.ArgumentParser, n_shards: int) -> None:
+    """Fail at the launcher with a clear message when more shards are
+    requested than JAX devices exist, instead of erroring inside
+    ``shard_map`` mesh construction."""
+    import jax
+
+    nd = len(jax.devices())
+    if n_shards > nd:
+        ap.error(
+            f"--shards {n_shards}: only {nd} JAX device(s) visible; use "
+            f"--shards auto, or force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards} "
+            f"on CPU")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", choices=METHODS, default="es_mi_adapt")
@@ -72,9 +95,12 @@ def main(argv=None) -> int:
     ap.add_argument("--engine-spec", default="default",
                     help="EngineSpec preset "
                          "(default|ci|serving|serving_sq8|serving_sketch8)")
-    ap.add_argument("--shards", type=int, default=1,
+    ap.add_argument("--shards", type=shards_arg, default=1,
                     help="shard the data side over N local devices (MI "
-                         "methods); 0 = one shard per device")
+                         "and nlj methods); 'auto' (or 0) = one shard "
+                         "per device. The MeshPlan may re-split shards "
+                         "over a second dimension axis for nlj (hybrid "
+                         "dimension+vector partitioning)")
     ap.add_argument("--stream", type=int, default=0, metavar="B",
                     help="submit queries as streaming batches of B")
     ap.add_argument("--sweep", action="store_true",
@@ -115,10 +141,13 @@ def main(argv=None) -> int:
             cfg.traversal, early_exit=(args.early_exit != "off")))
 
     n_shards = 0 if args.distributed else args.shards
+    check_shards(ap, n_shards)
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
                       n_shards=n_shards, quant_build=quant_build)
-    if args.stream and eng.n_shards > 1:
-        ap.error("--stream runs single-device; drop --shards/--distributed")
+    if (args.stream and eng.n_shards > 1
+            and args.method not in ("nlj", "es_mi", "es_mi_adapt")):
+        ap.error(f"--stream with --shards supports nlj/es_mi/"
+                 f"es_mi_adapt, not {args.method}")
 
     trace_path = args.trace or (
         (obs_trace.env_trace_path() or "trace.json")

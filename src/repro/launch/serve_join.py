@@ -22,6 +22,7 @@ from repro.configs.vectorjoin import preset
 from repro.core import exact_join_pairs
 from repro.core.types import QUANT_MODES
 from repro.data.vectors import make_dataset, thresholds
+from repro.launch.join import check_shards, shards_arg
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serve import JoinRequest, JoinService, ServiceConfig
@@ -49,6 +50,10 @@ def main(argv=None) -> int:
                     help="comma-separated ascending wave-size ladder")
     ap.add_argument("--max-request", type=int, default=192,
                     help="request sizes are drawn from [1, max-request]")
+    ap.add_argument("--shards", type=shards_arg, default=1,
+                    help="shard every tenant's data side over N local "
+                         "devices ('auto' = one shard per device); "
+                         "sharded serving requires --method nlj")
     ap.add_argument("--max-queue", type=int, default=1024)
     ap.add_argument("--max-tenants", type=int, default=8)
     ap.add_argument("--no-interleave", action="store_true",
@@ -78,6 +83,11 @@ def main(argv=None) -> int:
         if q not in QUANT_MODES:
             ap.error(f"unknown quant mode {q!r}")
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    check_shards(ap, args.shards)
+    if args.shards != 1 and args.method != "nlj":
+        ap.error("--shards: sharded serving supports --method nlj only "
+                 "(search methods need the whole graph resident)")
+    engine_kw = {"n_shards": args.shards} if args.shards != 1 else None
 
     trace_path = args.trace or (
         (obs_trace.env_trace_path() or "trace.json")
@@ -100,7 +110,7 @@ def main(argv=None) -> int:
                           n_query=args.max_request, dim=args.dim,
                           seed=args.seed + i)
         theta = float(thresholds(ds, 7)[args.theta_q - 1])
-        svc.load(name, ds.Y, default=base)
+        svc.load(name, ds.Y, default=base, engine_kw=engine_kw)
         tenants[name] = (ds, theta)
 
     t0 = time.perf_counter()
