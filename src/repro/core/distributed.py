@@ -622,7 +622,17 @@ def make_distributed_mi_join(mesh: Mesh, shard_axes, smi: ShardedMergedIndex,
     *qargs, xw, qids, lane_valid)``.
     """
     axes = (shard_axes,) if isinstance(shard_axes, str) else tuple(shard_axes)
-    flat = axes if len(axes) == 1 else axes
+    # a single shard axis passes as the bare name: P() and the
+    # collectives accept it, and the body's isinstance(axis, str) gate
+    # enables the ppermute ring combine. Multi-axis stacks keep the
+    # tuple and can only run all_gather — reject a ppermute request
+    # loudly rather than silently falling back (the driver meters
+    # traffic by the requested collective).
+    flat = axes[0] if len(axes) == 1 else axes
+    if pool_combine == "ppermute" and not isinstance(flat, str):
+        raise ValueError(
+            "pool_combine='ppermute' needs a single shard axis; "
+            f"got {axes!r}")
     axis_size = int(np.prod([dict(mesh.shape)[a] for a in axes]))
     # one shard per device on the shard axes — a bigger stack would be
     # silently truncated by the per-shard body (vecs[0])
@@ -737,7 +747,10 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
     results cap-independent: the in-shard re-rank band capacity and the
     merged-pool capacity (kept pairs per lane per shard). A wave that
     overflows either on any shard is retried through a step built at the
-    next power-of-two capacity, sticky for the rest of the call.
+    next power-of-two capacity, sticky for the rest of the call. A retry
+    re-runs the full per-shard wave, so work counters (``n_dist``,
+    ``n_rerank``, …) and byte meters both accumulate over every attempt
+    — they report real device work, including discarded attempts.
 
     The assembly transfer is the all_gather/ppermute-combined
     (S, B, merge_cap) id block — host bytes per wave scale with the
@@ -819,9 +832,29 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
 
     def assemble(wave) -> None:
         padded, lane_valid, outs, dev = wave
+
+        def tally(n_dist, overflow, n_rerank, n_esc, n_dims_s, n_dims_t):
+            # per-attempt accounting: an overflow retry re-runs the FULL
+            # per-shard wave (traversal included), so the work counters
+            # accumulate on every fetch — the same style as dispatch()'s
+            # per-attempt collective/re-rank byte meters
+            per = {  # (S,) per-shard attempt totals
+                "n_dist": n_dist[:, lane_valid].sum(axis=1),
+                "n_overflow": overflow[:, lane_valid].sum(axis=1),
+                "n_rerank": n_rerank[:, lane_valid].sum(axis=1),
+                "n_esc8": n_esc[:, lane_valid].sum(axis=1),
+                "n_dims_scanned": np.asarray(n_dims_s).reshape(-1),
+                "n_dims_total": np.asarray(n_dims_t).reshape(-1),
+            }
+            for s, st in enumerate(shard_stats):
+                for k, v in per.items():
+                    setattr(st, k, getattr(st, k) + int(v[s]))
+            band[:] += n_rerank[:, lane_valid].sum(axis=1).astype(np.int64)
+
         with tr.span("wave/assemble", lane="assembly") as sp:
             (merged, n_keep, overflow, n_dist, n_rerank, n_esc,
              n_band_over, n_dims_s, n_dims_t) = fetch(outs, dev)
+            tally(n_dist, overflow, n_rerank, n_esc, n_dims_s, n_dims_t)
             # grow-and-retry: the band capacity (in-shard re-rank) and
             # the merge capacity (kept pairs per lane per shard) are both
             # exact after one measurement, but growing the band can admit
@@ -830,8 +863,16 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
             while True:
                 need_band = (int(n_rerank[:, lane_valid].max())
                              if n_band_over[:, lane_valid].sum() > 0 else 0)
+                # the merge check runs against the *dispatch-time*
+                # capacity — the fetched block's actual width. With
+                # overlap on, an earlier wave's assembly may have grown
+                # the sticky mcap after this wave was dispatched;
+                # occupancies in (dispatch cap, mcap.cap] would pass a
+                # check against mcap.cap while this block is truncated
+                # at the old width, silently dropping pairs.
                 need_merge = (int(n_keep[:, lane_valid].max())
-                              if (n_keep[:, lane_valid] > mcap.cap).any()
+                              if (n_keep[:, lane_valid]
+                                  > merged.shape[2]).any()
                               else 0)
                 if not need_band and not need_merge:
                     break
@@ -846,24 +887,14 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
                 (merged, n_keep, overflow, n_dist, n_rerank, n_esc,
                  n_band_over, n_dims_s, n_dims_t) = fetch(
                     *dispatch(padded, lane_valid))
+                tally(n_dist, overflow, n_rerank, n_esc, n_dims_s,
+                      n_dims_t)
             t1 = time.perf_counter()
             # (S, B, K) merged id block: every non-sentinel entry is a
             # kept (shard-global) pair for its lane
             sh, ln, sl = np.nonzero(merged != NO_NODE)
             pairs_out.append(np.stack([padded[ln], merged[sh, ln, sl]],
                                       axis=1))
-            per = {  # (S,) per-shard wave totals
-                "n_dist": n_dist[:, lane_valid].sum(axis=1),
-                "n_overflow": overflow[:, lane_valid].sum(axis=1),
-                "n_rerank": n_rerank[:, lane_valid].sum(axis=1),
-                "n_esc8": n_esc[:, lane_valid].sum(axis=1),
-                "n_dims_scanned": np.asarray(n_dims_s).reshape(-1),
-                "n_dims_total": np.asarray(n_dims_t).reshape(-1),
-            }
-            for s, st in enumerate(shard_stats):
-                for k, v in per.items():
-                    setattr(st, k, getattr(st, k) + int(v[s]))
-            band[:] += n_rerank[:, lane_valid].sum(axis=1).astype(np.int64)
             if sp:
                 sp.set(pairs=int(ln.size))
             shard_stats[0].other_seconds += time.perf_counter() - t1
@@ -1115,7 +1146,10 @@ def distributed_nlj_join(X, Y, plan: MeshPlan, *, theta: float,
             merged, n_keep = jax.device_get(outs)
             stats.wait_seconds += time.perf_counter() - t0
             stats.bytes_assembly += merged.nbytes + n_keep.nbytes
-            if not (n_keep[:, lane_valid] > mcap.cap).any():
+            # check against the fetched block's width (== the dispatch
+            # cap; this loop is sequential, but the invariant matches
+            # the MI driver's overlap-safe check)
+            if not (n_keep[:, lane_valid] > merged.shape[2]).any():
                 break
             need = int(n_keep[:, lane_valid].max())
             if tr:
@@ -1127,7 +1161,9 @@ def distributed_nlj_join(X, Y, plan: MeshPlan, *, theta: float,
         sh, ln, sl = np.nonzero(merged != NO_NODE)
         pairs_out.append(np.stack([padded[ln], merged[sh, ln, sl]],
                                   axis=1))
-        stats.n_dist += int(lane_valid.sum()) * rows * S
+        # logical distance count: sentinel pad rows are not real
+        # comparisons, so the meter matches the single-device NLJ
+        stats.n_dist += int(lane_valid.sum()) * n_data
         stats.other_seconds += time.perf_counter() - t1
     pairs = (np.concatenate(pairs_out, axis=0) if pairs_out
              else np.empty((0, 2), np.int64)).astype(np.int64)

@@ -8,8 +8,9 @@ an uneven N_y asserts pair sets and work-sharing cache counters
 identical to single-device, the hybrid leg asserts the dimension-
 partitioned ``psum`` partials are bitwise-equal to the unsharded slab
 sums on CPU (the admissibility contract behind certified early exit),
-and the combine leg asserts ``all_gather`` and ``ppermute`` ring pool
-merges emit identical pairs.
+and the combine legs assert ``all_gather`` and ``ppermute`` ring pool
+merges emit identical pairs on both the NLJ and MI drivers (with the
+requested collective really present in the traced MI step).
 """
 import os
 import subprocess
@@ -234,6 +235,55 @@ def test_hybrid_partition_admissibility_8dev():
     slab sums on CPU; hybrid, vector, and ring-combine plans all emit the
     exact pair set."""
     _run_forced(_HYBRID_SCRIPT, "MESH_HYBRID_OK")
+
+
+_MI_RING_SCRIPT = _PRELUDE + textwrap.dedent("""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import compat
+    from repro.core import distributed as D
+
+    smi = D.build_sharded_merged_index(ds.Y, ds.X, 8, **BK)
+    kw = dict(theta=theta, cfg=tc, wave_size=32, n_data=1501)
+    pa, sa = D.distributed_mi_join(
+        ds.X, smi, plan=D.MeshPlan(n_shards=8, pool_combine="all_gather"),
+        **kw)
+    pp, sp = D.distributed_mi_join(
+        ds.X, smi, plan=D.MeshPlan(n_shards=8, pool_combine="ppermute"),
+        **kw)
+    assert (set(map(tuple, pp.tolist())) == set(map(tuple, pa.tolist()))
+            == truth), (len(set(map(tuple, pp.tolist())) ^ truth))
+    assert sp.bytes_ppermute > 0 and sp.bytes_allgather == 0
+    assert sa.bytes_allgather > 0 and sa.bytes_ppermute == 0
+
+    # regression: the requested collective must actually be in the
+    # traced step — the ring used to silently lower to all_gather
+    # because the single-name shard axis stayed a tuple, while the
+    # driver kept metering bytes_ppermute
+    for combine in ("ppermute", "all_gather"):
+        plan = D.MeshPlan(n_shards=8, pool_combine=combine)
+        mesh = plan.make_mesh()
+        step, qargs = D.make_distributed_mi_join(
+            mesh, plan.data_axis, smi, theta=theta, cfg=tc, n_data=1501,
+            pool_combine=combine)
+        B = 32
+        with compat.set_mesh(mesh):
+            jxp = str(jax.make_jaxpr(step)(
+                smi.vecs, smi.nbrs, smi.mean_nbr_dist, smi.start, *qargs,
+                jnp.asarray(ds.X[:B]), jnp.zeros((B,), jnp.int32),
+                jnp.ones((B,), bool)))
+        assert (combine == "ppermute") == ("ppermute" in jxp), combine
+        assert (combine == "all_gather") == ("all_gather" in jxp), combine
+    print("MESH_MI_RING_OK")
+""")
+
+
+@pytest.mark.slow
+def test_mi_ring_combine_8dev():
+    """The MI driver's ppermute ring pool merge emits the same pairs as
+    all_gather, books bytes under the right meter, and the ring is
+    really in the compiled step (not a silent all_gather fallback)."""
+    _run_forced(_MI_RING_SCRIPT, "MESH_MI_RING_OK")
 
 
 _SERVE_SCRIPT = textwrap.dedent("""
