@@ -17,7 +17,12 @@ identical pair sets and reporting ``dims_scanned_frac``.
 ``run_trace_overhead`` is the TraceKit guard: the same cell min-of-N
 timed with the span tracer off vs on, asserting identical pair sets and
 that tracing costs < 5% wall-clock (plus a small additive slack for
-sub-second CI cells). ``run_sharded`` is the N-device
+sub-second CI cells). ``run_planner`` is the JoinPlanner parity table:
+hand-tuned knobs vs ``plan_config``'s choice per dataset, asserting
+admissibility (identical pair sets at a matching operating point;
+soundness + no recall loss when calibration steers to a different one)
+and zero cap-overflow retries at predicted caps (the ``--planner-only``
+CI leg). ``run_sharded`` is the N-device
 mesh sweep: per-shard-count wall-clock and per-transfer-class /
 per-collective byte meters in forced-host-device subprocesses, asserting
 host bytes per wave stay independent of N_y. ``--json PATH`` writes all
@@ -264,6 +269,87 @@ def run_sharded(scale: str = "ci", *, regime: str = "manifold",
     return rows + [small, big]
 
 
+def run_planner(scale: str = "ci", *, regimes=REGIMES, theta_idx: int = 2,
+                method: str = "es_mi", quant: str = "sketch8",
+                wave: int = 128) -> list[dict]:
+    """JoinPlanner parity table: hand-tuned knobs vs the planner's
+    choice, per dataset.
+
+    The hand arm runs the fixed (method, quant, wave) cell through
+    ``run_method`` (which also calibrates the persistent engine's cost
+    table); the planned arm asks ``JoinEngine.plan_config`` for the
+    operating point — with calibrated candidates, the planner picks by
+    measured cost — warms that exact config, then times it.
+
+    Admissibility is asserted per what the planner was free to change:
+    when it lands on the hand arm's (method, quant), the pair sets must
+    be bit-identical (knobs like wave size and cap seeds are advisory —
+    they move wall-clock, never pairs); when it picks a *different*
+    operating point (e.g. exact NLJ once calibration shows it cheaper
+    than an approximate traversal), set identity is the wrong bar —
+    instead the planned arm must be sound (⊆ exact truth) and lose no
+    recall vs the hand arm. Both arms must take **zero** cap-overflow
+    retries at the predicted caps (``JoinStats.overflow_retries``).
+    """
+    from benchmarks.common import dataset, engine, truth
+    from repro.core.types import JoinConfig, recall as _recall
+
+    rows = []
+    for regime in regimes:
+        theta = theta_grid(regime, scale)[theta_idx - 1]
+        res_h, dt_h, rec_h = run_method(regime, method, theta,
+                                        scale=scale, quant=quant,
+                                        wave=wave)
+        ds = dataset(regime, scale)
+        eng = engine(regime, scale)
+        cfg_p = eng.plan_config(
+            ds.X, JoinConfig(method=method, theta=theta, quant=quant,
+                             wave_size=wave))
+        # warm the planned cell so its timing is compile-free like the
+        # hand arm's (run_method warms + re-calibrates as a side effect)
+        run_method(regime, cfg_p.method, theta, scale=scale,
+                   quant=cfg_p.quant, wave=cfg_p.wave_size)
+        t0 = time.perf_counter()
+        res_p = eng.join(ds.X, cfg_p)
+        dt_p = time.perf_counter() - t0
+        same_point = (cfg_p.method, cfg_p.quant) == (method, quant)
+        match = res_p.pair_set() == res_h.pair_set()
+        rec_p = _recall(res_p, truth(regime, theta, scale))
+        tset = set(map(tuple, truth(regime, theta, scale).tolist()))
+        sound = not (res_p.pair_set() - tset)
+        admissible = (match if same_point
+                      else (sound and rec_p >= rec_h - 1e-9))
+        assert admissible, (
+            f"{regime}: planned ({cfg_p.method}/{cfg_p.quant}) vs "
+            f"hand-tuned ({method}/{quant}): "
+            + (f"pair sets differ by "
+               f"{len(res_p.pair_set() ^ res_h.pair_set())}"
+               if same_point else
+               f"sound={sound} recall {rec_p:.4f} < {rec_h:.4f}"))
+        assert res_p.stats.overflow_retries == 0, (
+            f"{regime}: planned run took "
+            f"{res_p.stats.overflow_retries} cap-overflow retries at "
+            f"predicted caps")
+        plan = eng.planner.plan(
+            ds.X, theta=theta,
+            pool_cap=int(cfg_p.traversal.pool_cap),
+            n_shards=eng.n_shards, dim=int(ds.Y.shape[1]))
+        rows.append(dict(
+            dataset=regime, theta_idx=theta_idx, theta=theta,
+            hand_method=method, hand_quant=quant, hand_wave=wave,
+            planned_method=cfg_p.method, planned_quant=cfg_p.quant,
+            planned_wave=cfg_p.wave_size, plan_source=plan.source,
+            hand_s=dt_h, planned_s=dt_p,
+            speedup=dt_h / max(dt_p, 1e-9),
+            pairs=len(res_p.pairs), same_point=same_point,
+            pairs_match=match, admissible=admissible,
+            recall=rec_h, planned_recall=rec_p,
+            predicted_pairs=plan.predicted_join_size,
+            hand_retries=res_h.stats.overflow_retries,
+            planned_retries=res_p.stats.overflow_retries))
+    return rows
+
+
 def run_serve(scale: str = "ci", *, regimes=("manifold", "clustered"),
               theta_idx: int = 2, n_requests: int = 16,
               quant_modes=("off", "sq8"), method: str = "es_sws",
@@ -342,6 +428,11 @@ def main(argv=None) -> None:
     ap.add_argument("--sharded-only", action="store_true",
                     help="run only the N-device mesh sweep (the CI "
                          "forced-8-device leg)")
+    ap.add_argument("--planner-only", action="store_true",
+                    help="run only the JoinPlanner parity table "
+                         "(planned vs hand-tuned knobs; the CI planner "
+                         "leg — asserts identical pairs and zero "
+                         "overflow retries at predicted caps)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + metadata as a JSON artifact "
                          "(e.g. BENCH_overall.json for the CI upload)")
@@ -356,6 +447,17 @@ def main(argv=None) -> None:
                 json.dump(payload, f, indent=2, sort_keys=True)
             print(f"# wrote {args.json}")
         return
+    if args.planner_only:
+        planner_rows = run_planner(args.scale,
+                                   regimes=tuple(args.regimes))
+        emit(planner_rows)
+        if args.json:
+            payload = dict(bench="overall", scale=args.scale,
+                           planner=planner_rows)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}")
+        return
     rows = ([] if args.overlap_only
             else run(args.scale, regimes=tuple(args.regimes)))
     overlap_rows = run_overlap(args.scale, regime=args.regimes[0])
@@ -363,6 +465,9 @@ def main(argv=None) -> None:
         "full_hd" if args.scale == "full" else "ci_hd")
     trace_rows = run_trace_overhead(args.scale, regime=args.regimes[0])
     serve_rows = run_serve(args.scale)
+    planner_rows = ([] if args.overlap_only
+                    else run_planner(args.scale,
+                                     regimes=tuple(args.regimes)))
     sharded_rows = ([] if args.overlap_only
                     else run_sharded(args.scale, regime=args.regimes[0]))
     emit(rows)
@@ -370,12 +475,13 @@ def main(argv=None) -> None:
     emit(early_exit_rows)
     emit(trace_rows)
     emit(serve_rows)
+    emit(planner_rows)
     emit(sharded_rows)
     if args.json:
         payload = dict(bench="overall", scale=args.scale, rows=rows,
                        overlap=overlap_rows, early_exit=early_exit_rows,
                        trace_overhead=trace_rows, serve=serve_rows,
-                       sharded=sharded_rows)
+                       planner=planner_rows, sharded=sharded_rows)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

@@ -732,7 +732,8 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
                         cascade: ShardedCascade | None = None,
                         n_data: int | None = None, overlap: bool = True,
                         plan: MeshPlan | None = None,
-                        merge_cap: int = DEFAULT_MERGE_CAP):
+                        merge_cap: int = DEFAULT_MERGE_CAP,
+                        rerank_cap_init: int | None = None):
     """Host driver: waves of queries against all shards; assemble pairs.
 
     Pass either an explicit ``(mesh, shard_axes)`` or a ``MeshPlan``
@@ -750,7 +751,12 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
     next power-of-two capacity, sticky for the rest of the call. A retry
     re-runs the full per-shard wave, so work counters (``n_dist``,
     ``n_rerank``, …) and byte meters both accumulate over every attempt
-    — they report real device work, including discarded attempts.
+    — they report real device work, including discarded attempts (each
+    retry also bumps ``JoinStats.overflow_retries``). ``merge_cap`` and
+    ``rerank_cap_init`` seed the two caps — the engine passes its LSH
+    estimates (``estimate_merge_cap`` / ``estimate_rerank_cap``) so
+    well-predicted runs take zero retries; the estimates stay
+    advisory-only because the retry loop owns correctness.
 
     The assembly transfer is the all_gather/ppermute-combined
     (S, B, merge_cap) id block — host bytes per wave scale with the
@@ -780,7 +786,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
     d = int(X.shape[1])
     C = cfg.pool_cap
     S = smi.n_shards
-    rcap = W.RerankCap(cfg)
+    rcap = W.RerankCap(cfg, init_cap=rerank_cap_init)
     mcap = W.StickyCap(merge_cap, C)
     steps: dict[tuple, tuple] = {}
 
@@ -880,6 +886,7 @@ def distributed_mi_join(X, smi: ShardedMergedIndex, mesh: Mesh | None = None,
                     tr.instant("wave/overflow_retry", lane="traversal",
                                band=need_band, merge=need_merge,
                                cap=rcap.cap, merge_cap=mcap.cap)
+                shard_stats[0].overflow_retries += 1
                 if need_band:
                     rcap.grow(need_band)
                 if need_merge:
@@ -1155,6 +1162,7 @@ def distributed_nlj_join(X, Y, plan: MeshPlan, *, theta: float,
             if tr:
                 tr.instant("wave/merge_retry", lane="traversal",
                            needed=need, merge_cap=mcap.cap)
+            stats.overflow_retries += 1
             mcap.grow(need)
             outs = dispatch(xw, lane_valid)
         t1 = time.perf_counter()

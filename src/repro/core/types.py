@@ -237,6 +237,12 @@ class JoinStats:
     #                                large shard groups)
     bytes_psum: int = 0            # psum partial-sum combines (hybrid
     #                                dimension-partitioned distances)
+    overflow_retries: int = 0      # grow-and-retry rounds taken by the
+    #                                band/merge capacity controls
+    #                                (RerankCap/StickyCap) — each retry
+    #                                re-dispatches a wave at the next
+    #                                power-of-two cap, so a well-seeded
+    #                                estimate keeps this at 0
 
     @property
     def total_seconds(self) -> float:

@@ -38,8 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import (QUANT_FILTER_MODES, GraphIndex, JoinConfig,
-                              JoinResult, JoinStats, early_exit_enabled)
+from repro.core.types import (QUANT_FILTER_MODES, QUANT_MODES, GraphIndex,
+                              JoinConfig, JoinResult, JoinStats,
+                              early_exit_enabled)
 from repro.engine import waves as W
 from repro.kernels import ops
 from repro.obs import metrics as obs_metrics
@@ -185,10 +186,16 @@ class JoinEngine:
         self._carry_norms: np.ndarray | None = None
         self._carry_qids = np.empty(0, np.int64)
 
-        # LSH-sampled band-occupancy estimates, sticky per (θ, quant)
-        # so repeated requests reuse one capacity (stable jit cap set)
-        self._est_sketch = None
+        # LSH-sampled band-occupancy estimates (plan.LshEstimator built
+        # lazily over Y), sticky per (θ, quant) so repeated requests
+        # reuse one capacity (stable jit cap set); the CostTable keeps
+        # warmup-calibrated per-unit costs per (method, quant) for the
+        # JoinPlanner and is exported via metrics_snapshot()
+        from repro.plan.cost import CostTable
+        self._estimator = None
+        self._planner = None
         self._cap_estimates: dict[tuple, int] = {}
+        self.cost_table = CostTable()
 
     # -- index lifecycle ----------------------------------------------------
 
@@ -425,7 +432,7 @@ class JoinEngine:
         if cfg.method == "nlj":
             if self.n_shards > 1:
                 return self._done(
-                    self._join_sharded_nlj(X, cfg, stats), X)
+                    self._join_sharded_nlj(X, cfg, stats), X, cfg)
             t0 = time.perf_counter()
             casc = self.cascade_for(("y",), self.Y, cfg, stats)
             pairs, counts = cascade_join_pairs(
@@ -438,10 +445,12 @@ class JoinEngine:
             stats.n_dims_total += counts["dims_total"]
             stats.other_seconds = time.perf_counter() - t0
             stats.n_dist = int(X.shape[0]) * int(self.Y.shape[0])
-            return self._done(JoinResult(pairs=pairs, stats=stats), X)
+            return self._done(JoinResult(pairs=pairs, stats=stats), X,
+                              cfg)
 
         if self.n_shards > 1:
-            return self._done(self._join_sharded(X, cfg, stats), X)
+            return self._done(self._join_sharded(X, cfg, stats), X,
+                              cfg)
 
         all_pairs: list[np.ndarray] = []
         t0 = time.perf_counter()
@@ -462,7 +471,7 @@ class JoinEngine:
 
         pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                  else np.empty((0, 2), np.int64))
-        return self._done(JoinResult(pairs=pairs, stats=stats), X)
+        return self._done(JoinResult(pairs=pairs, stats=stats), X, cfg)
 
     def sweep(self, X, thetas, cfg: JoinConfig | None = None, *,
               method: str | None = None) -> list[JoinResult]:
@@ -495,12 +504,22 @@ class JoinEngine:
         # per-query adaptive split (per-shard OOD prediction would need
         # per-shard side tables; the hybrid path subsumes the BFS one).
         hybrid = cfg.method == "es_mi_adapt"
+        # seed the merge StickyCap of the two-cap loop from the LSH
+        # estimate's per-shard band — advisory; the driver's retry loop
+        # owns correctness. The rerank cap keeps its configured cold
+        # start: the gather dispatch is capacity-shaped, and the sketch
+        # superset systematically overshoots the int8-tier band, so a
+        # seeded re-rank width would trade the (amortized, batch-wide)
+        # grow-and-retry for permanently inflated gather traffic.
+        mcap0 = self.estimate_merge_cap(
+            np.asarray(X, np.float32), cfg,
+            limit=int(cfg.traversal.pool_cap))
         t0 = time.perf_counter()
         pairs, dstats = distributed.distributed_mi_join(
             X, smi, mesh, axes, theta=cfg.theta, cfg=cfg.traversal,
             wave_size=cfg.wave_size, hybrid=hybrid, cascade=casc,
             n_data=int(self.Y.shape[0]), overlap=W.overlap_enabled(cfg),
-            plan=plan)
+            plan=plan, merge_cap=mcap0)
         # dstats is a field-complete JoinStats (one per shard, reduced via
         # merge); it times its own wait/assembly phases, so only the wall
         # clock it did NOT attribute lands in expand_seconds
@@ -524,10 +543,18 @@ class JoinEngine:
         therefore run sharded)."""
         from repro.core import distributed
         plan = self._mesh_plan(traversal=False)
+        # predicted per-(query, shard) *true* in-range occupancy seeds
+        # the merged pool's StickyCap — this pool holds exact-θ pairs,
+        # so the sketch-band superset (which scales with N_y) would
+        # inflate the host-side merged-pool transfer for nothing
+        mcap0 = self.estimate_merge_cap(
+            np.asarray(X, np.float32), cfg, limit=int(self.Y.shape[0]),
+            exact=True)
         t0 = time.perf_counter()
         pairs, dstats = distributed.distributed_nlj_join(
             np.asarray(X), np.asarray(self.Y), plan, theta=cfg.theta,
-            wave_size=cfg.wave_size, step_cache=self._nlj_steps)
+            wave_size=cfg.wave_size, step_cache=self._nlj_steps,
+            merge_cap=mcap0)
         stats.expand_seconds += max(
             0.0, time.perf_counter() - t0
             - dstats.wait_seconds - dstats.other_seconds)
@@ -609,7 +636,9 @@ class JoinEngine:
             casc = self.cascade_for(
                 ("merged", _fingerprint(X_batch)), merged.vecs, cfg, stats)
             W.run_mi_join(X_batch, merged, cfg, stats, all_pairs,
-                          qid_offset=offset, cascade=casc)
+                          qid_offset=offset, cascade=casc,
+                          capctl=self._seeded_capctl(X_batch, cfg,
+                                                     cfg.traversal))
             pairs = (np.concatenate(all_pairs, axis=0) if all_pairs
                      else np.empty((0, 2), np.int64))
             result = JoinResult(pairs=pairs, stats=stats)
@@ -617,10 +646,11 @@ class JoinEngine:
             result = self._submit_search(X_batch, cfg, stats, offset)
 
         self._stream_n = offset + nb
-        self._batch_done(result, nb)
+        self._batch_done(result, nb, cfg)
         return result
 
-    def _batch_done(self, result: JoinResult, nb: int) -> None:
+    def _batch_done(self, result: JoinResult, nb: int,
+                    cfg: JoinConfig | None = None) -> None:
         self.serve_stats["batches"] += 1
         self.serve_stats["queries"] += nb
         self.serve_stats["pairs"] += len(result.pairs)
@@ -628,6 +658,7 @@ class JoinEngine:
         self.metrics.counter("engine.batches").inc()
         self.metrics.counter("engine.queries").inc(nb)
         self.metrics.counter("engine.pairs").inc(len(result.pairs))
+        self._observe_cost(cfg, nb, result.stats)
 
     def submit_many(self, jobs) -> list[JoinResult]:
         """Submit several streaming batches, interleaving waves across
@@ -675,8 +706,8 @@ class JoinEngine:
                 self._stream_n += int(X2.shape[0])
                 group.append((jnp.asarray(X2), c2, JoinStats(), offset))
             outs = self._submit_search_group(group)
-            for (X2, _, _, _), res in zip(group, outs):
-                self._batch_done(res, int(X2.shape[0]))
+            for (X2, c2, _, _), res in zip(group, outs):
+                self._batch_done(res, int(X2.shape[0]), c2)
             results.extend(outs)
             i = j
         return results
@@ -818,26 +849,44 @@ class JoinEngine:
                            stats=group[j][2])
                 for j, ps in enumerate(all_pairs)]
 
-    # estimator sample sizes: ≤64 queries × ≤2048 data rows keeps the
-    # Hamming matmul trivial while the per-query survivor counts already
-    # concentrate; fixed sizes keep the sample-path jit shapes constant
-    _EST_SAMPLE_Q = 64
-    _EST_SAMPLE_Y = 2048
+    # -- planning (plan/: LshEstimator + CostTable + JoinPlanner) -----------
+
+    @property
+    def estimator(self):
+        """The engine's ``plan.LshEstimator`` over Y (lazy; samples and
+        sketches ≤2048 rows on first use, then fixed-shape forever)."""
+        if self._estimator is None:
+            from repro.plan import LshEstimator
+            self._estimator = LshEstimator(self.Y)
+        return self._estimator
+
+    @property
+    def planner(self):
+        """The engine's sticky ``plan.JoinPlanner`` (estimator + cost
+        table + this engine's metrics registry)."""
+        if self._planner is None:
+            from repro.plan import JoinPlanner
+            self._planner = JoinPlanner(self.estimator, self.cost_table,
+                                        metrics=self.metrics)
+        return self._planner
 
     def estimate_rerank_cap(self, X_batch, cfg: JoinConfig) -> int | None:
         """LSH-sample estimate of the initial band-compaction capacity.
 
-        Replaces the cold-start next-pow2 retry of ``RerankCap``:
-        sign-sketch (SimHash) a fixed sample of queries against a fixed
-        sample of Y, count per query how many sampled rows the sketch
-        tier cannot certify out of range at θ (the join-size/band
-        predictor the sketches double as), scale the tail quantile to
-        the full table, and start at the covering power of two. Sticky
-        per (θ, quant): repeated requests at the same operating point
-        reuse one capacity, so the ``_finalize_wave`` cap set stays
-        fixed after the first estimate (zero steady-state recompiles).
-        The overflow retry remains as the safety net — emitted pairs
-        never depend on the estimate.
+        Replaces the cold-start next-pow2 retry of ``RerankCap``: the
+        ``plan.LshEstimator`` sign-sketches (SimHash) a fixed sample of
+        queries against a fixed sample of Y, counts per query how many
+        sampled rows the sketch tier cannot certify out of range at θ
+        (the join-size/band predictor the sketches double as), and the
+        capacity is the covering power of two of the scaled sample max
+        (not a quantile: an overflow retry after warmup would be a
+        fresh jit specialization, which the serving front end's
+        flat-compile-count guarantee can't afford). Sticky per
+        (θ, quant): repeated requests at the same operating point reuse
+        one capacity, so the ``_finalize_wave`` cap set stays fixed
+        after the first estimate (zero steady-state recompiles). The
+        overflow retry remains as the safety net — emitted pairs never
+        depend on the estimate.
         """
         tcfg = cfg.traversal
         if cfg.quant not in QUANT_FILTER_MODES or tcfg.rerank_cap <= 0:
@@ -846,31 +895,9 @@ class JoinEngine:
         cached = self._cap_estimates.get(key)
         if cached is not None:
             return cached
-        from repro.quant import sketch as SK
         t0 = time.perf_counter()
-        rng = np.random.default_rng(0xC0FFEE)
-        if self._est_sketch is None:
-            N = int(self.Y.shape[0])
-            y_idx = (np.arange(N) if N <= self._EST_SAMPLE_Y
-                     else rng.choice(N, self._EST_SAMPLE_Y, replace=False))
-            self._est_sketch = (SK.build_sketch(np.asarray(self.Y)[y_idx]),
-                                N / len(y_idx))
-        st, scale = self._est_sketch
-        nb = int(X_batch.shape[0])
-        q_idx = rng.choice(nb, self._EST_SAMPLE_Q,
-                           replace=nb < self._EST_SAMPLE_Q)
-        qcodes, qcum = SK.sketch_queries(
-            np.asarray(X_batch, np.float32)[q_idx], st)
-        h = ops.pairwise_hamming(qcodes, st.codes)
-        lb = SK.sketch_lower_bound_pairwise(h, qcum, st.cum, st.hs, st.iso)
-        survivors = np.asarray(
-            (lb <= np.float32(cfg.theta) ** 2).sum(axis=1))
-        # sample max, not a quantile: an overflow retry after warmup
-        # would be a fresh jit specialization, which the serving front
-        # end's flat-compile-count guarantee can't afford
-        est = float(survivors.max()) * scale * 1.25
-        cap = int(min(ops.next_pow2(max(int(np.ceil(est)), 16)),
-                      tcfg.pool_cap))
+        est = self.estimator.estimate(X_batch, float(cfg.theta))
+        cap = est.rerank_cap(tcfg.pool_cap)
         self._cap_estimates[key] = cap
         self.metrics.gauge(
             "engine.rerank_cap_estimate",
@@ -878,6 +905,114 @@ class JoinEngine:
         ).set(cap)
         self.build_seconds += time.perf_counter() - t0
         return cap
+
+    def _seeded_capctl(self, X_batch, cfg: JoinConfig,
+                       tcfg) -> "W.RerankCap":
+        """A ``RerankCap`` seeded from the sticky LSH estimate (falls
+        back to the config cold start for non-filtering modes)."""
+        return W.RerankCap(tcfg,
+                           init_cap=self.estimate_rerank_cap(
+                               np.asarray(X_batch, np.float32), cfg))
+
+    def estimate_merge_cap(self, X_batch, cfg: JoinConfig, *,
+                           limit: int, exact: bool = False) -> int:
+        """LSH-sample seed for the sharded drivers' merged-pool
+        ``StickyCap`` — the predicted worst per-(query, shard)
+        occupancy, replacing the DEFAULT_MERGE_CAP cold start
+        (satellite of the same estimate ``estimate_rerank_cap`` takes;
+        sticky per (θ, shards, limit, exact)). ``exact`` sizes from the
+        sampled true in-range counts instead of the sketch-band
+        superset — the mesh NLJ merged pool only ever holds pairs past
+        the exact θ check, and the superset predictor would scale its
+        host transfer with N_y. Advisory-only: the drivers
+        overflow-check and retry, so a low estimate costs retry time,
+        never pairs."""
+        key = (round(float(cfg.theta), 6), "merge", self.n_shards,
+               int(limit), bool(exact))
+        cached = self._cap_estimates.get(key)
+        if cached is not None:
+            return cached
+        t0 = time.perf_counter()
+        est = self.estimator.estimate(X_batch, float(cfg.theta),
+                                      n_shards=self.n_shards)
+        cap = est.merge_cap(int(limit), exact=exact)
+        self._cap_estimates[key] = cap
+        self.metrics.gauge(
+            "engine.merge_cap_estimate",
+            help="LSH-sampled sharded merge capacity (last estimate)"
+        ).set(cap)
+        self.build_seconds += time.perf_counter() - t0
+        return cap
+
+    def plan_config(self, X_batch, cfg: JoinConfig | None = None, *,
+                    method: str | None = None, theta: float | None = None,
+                    quant: str | None = None,
+                    buckets: tuple[int, ...] | None = None) -> JoinConfig:
+        """Plan one batch's operating point and return it as a concrete
+        ``JoinConfig`` (the ``--plan auto`` entry point of the launch
+        CLIs and benchmarks).
+
+        Explicit ``method``/``quant`` pin those knobs; otherwise the
+        ``JoinPlanner`` picks from this engine's admissible candidates
+        by calibrated cost (selectivity heuristic before calibration).
+        Wave size snaps to the bucket ladder; cap seeds flow through
+        the sticky estimate caches (``estimate_rerank_cap`` /
+        ``estimate_merge_cap``) at join time, and the hybrid-patience
+        hint applies only when it changes nothing a jit cares about
+        before the traversal would compile anyway. Plans are advisory:
+        the planned config joins through the same overflow-checked
+        drivers as a hand-tuned one and emits the identical pair set.
+        """
+        base = self._resolve(cfg, method, theta)
+        if quant is not None:
+            base = dataclasses.replace(base, quant=quant)
+        if self.n_shards > 1:
+            methods = ("nlj",) + _MI_METHODS
+            default_method = "es_mi_adapt"
+        else:
+            methods = ("nlj",) + _SEARCH_METHODS + _MI_METHODS
+            default_method = base.method if base.method != "nlj" else None
+        if buckets is not None:
+            self.planner.buckets = tuple(buckets)
+        p = self.planner.plan(
+            np.asarray(X_batch, np.float32), theta=float(base.theta),
+            pool_cap=int(base.traversal.pool_cap),
+            method=method, quant=quant, methods=methods,
+            quants=QUANT_MODES if quant is None else (quant,),
+            default_method=default_method, default_quant=base.quant,
+            n_shards=self.n_shards, dim=int(self.Y.shape[1]))
+        rep: dict[str, Any] = {"method": p.method, "quant": p.quant,
+                               "wave_size": p.wave_size}
+        out = dataclasses.replace(base, **rep)
+        if (p.hybrid_patience is not None
+                and p.method == "es_mi_adapt"
+                and p.hybrid_patience != out.traversal.hybrid_patience):
+            out = dataclasses.replace(out, traversal=dataclasses.replace(
+                out.traversal, hybrid_patience=p.hybrid_patience))
+        return out
+
+    def plan_request(self, n_queries: int, *, theta: float,
+                     method: str | None = None,
+                     quant: str | None = None) -> tuple[str, str]:
+        """Cheap (estimator-free) per-request plan for the serving
+        admission path: pick (method, quant) for a request that left
+        them unspecified, from the cost table alone — planning a
+        request never touches the device, so serve steady state stays
+        at a flat compile count. Falls back to the engine's servable
+        default before any calibration exists."""
+        if self.n_shards > 1:
+            servable = ("nlj",) + _MI_METHODS
+            fallback = "nlj"
+        else:
+            servable = ("nlj",) + _SEARCH_METHODS
+            fallback = "es_sws"
+        methods = (method,) if method else servable
+        quants = (quant,) if quant else (self.default.quant,)
+        choice = self.planner.choose(int(n_queries), methods=methods,
+                                     quants=quants)
+        if choice is not None:
+            return choice[0], choice[1]
+        return (method or fallback), (quant or self.default.quant)
 
     def _assign_parents(self, xw: np.ndarray, qc8, int8_tier,
                         qids_g: np.ndarray, lane_valid: np.ndarray,
@@ -980,7 +1115,8 @@ class JoinEngine:
 
     # -- bookkeeping --------------------------------------------------------
 
-    def _done(self, result: JoinResult, X) -> JoinResult:
+    def _done(self, result: JoinResult, X,
+              cfg: JoinConfig | None = None) -> JoinResult:
         self.serve_stats["joins"] += 1
         self.serve_stats["queries"] += int(X.shape[0])
         self.serve_stats["pairs"] += len(result.pairs)
@@ -988,14 +1124,36 @@ class JoinEngine:
         self.metrics.counter("engine.joins").inc()
         self.metrics.counter("engine.queries").inc(int(X.shape[0]))
         self.metrics.counter("engine.pairs").inc(len(result.pairs))
+        self._observe_cost(cfg, int(X.shape[0]), result.stats)
         return result
+
+    def _observe_cost(self, cfg: JoinConfig | None, n_queries: int,
+                      stats: JoinStats) -> None:
+        """Offer a finished join to the planner's cost table (fastest
+        per-query measurement wins, so the first post-compile batch
+        sticks as the (method, quant) calibration point)."""
+        if cfg is None:
+            return
+        if self.cost_table.observe(cfg.method, cfg.quant, n_queries,
+                                   stats):
+            self.metrics.counter(
+                "plan.calibrations",
+                help="cost-table entries (re)calibrated from finished "
+                     "joins").inc()
 
     def metrics_snapshot(self) -> dict:
         """Plain-dict dump of the engine's metrics registry: cumulative
         ``join.*`` stats, ``engine.cache.*`` hit/miss counters, serve
         counters, and the ambient wave histograms (when the engine runs
-        on the process-global registry)."""
-        return self.metrics.snapshot()
+        on the process-global registry) — plus the engine's
+        warmup-calibrated planner cost table under ``"cost_table"``, so
+        benchmark runs sharing a persistent engine reuse one calibration
+        instead of re-measuring."""
+        snap = self.metrics.snapshot()
+        ct = self.cost_table.snapshot()
+        if ct:
+            snap["cost_table"] = ct
+        return snap
 
     def cumulative_stats(self) -> JoinStats:
         """Engine-lifetime ``JoinStats`` aggregate, materialized back

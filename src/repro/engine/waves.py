@@ -312,6 +312,7 @@ def _resolve_band(h: WaveHandles, stats: JoinStats) -> None:
             if tr:
                 tr.instant("wave/overflow_retry", lane="traversal",
                            needed=max_amb, cap=h.capctl.cap)
+            stats.overflow_retries += 1
             h.capctl.grow(max_amb)
             _refinalize(h, stats)
             n_amb = np.asarray(jax.device_get(h.n_amb))
@@ -618,7 +619,7 @@ def seeds_from_cache(qids: np.ndarray, lane_valid: np.ndarray,
 def run_search_join(X: Array, index_y: GraphIndex,
                     index_x: GraphIndex | None, cfg: JoinConfig,
                     stats: JoinStats, all_pairs: list[np.ndarray], *,
-                    cascade=None) -> None:
+                    cascade=None, capctl: RerankCap | None = None) -> None:
     """Full-batch index / es / es_hws / es_sws join (greedy + BFS).
 
     Pipelined (``overlap_enabled``): wave *k+1* launches from wave *k*'s
@@ -626,6 +627,10 @@ def run_search_join(X: Array, index_y: GraphIndex,
     assembles pairs and the work-sharing cache one wave behind. The seed
     overlay is dropped as soon as ``update_sws_cache`` writes the full
     entry, so cache contents match the sequential path exactly.
+
+    ``capctl`` seeds the band capacity from a measured estimate
+    (``JoinEngine.estimate_rerank_cap``); overflow is still detected and
+    retried, so the estimate is advisory-only for correctness.
     """
     nq = X.shape[0]
     needs_mst = cfg.method in ("es_hws", "es_sws")
@@ -647,7 +652,8 @@ def run_search_join(X: Array, index_y: GraphIndex,
     cache_n = 0
     overlay: dict[int, np.ndarray] = {}
     seed_cache = collections.ChainMap(overlay, cache)
-    capctl = RerankCap(effective_tcfg(cfg))
+    if capctl is None:
+        capctl = RerankCap(effective_tcfg(cfg))
     ov = overlap_enabled(cfg)
     pending: WaveHandles | None = None
 
@@ -764,7 +770,8 @@ def launch_mi_wave(merged: GraphIndex, xw: Array, qids: np.ndarray,
 
 def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
                 stats: JoinStats, all_pairs: list[np.ndarray], *,
-                qid_offset: int = 0, cascade=None) -> None:
+                qid_offset: int = 0, cascade=None,
+                capctl: RerankCap | None = None) -> None:
     """es_mi / es_mi_adapt join (greedy offloaded; BFS or adaptive BBFS).
 
     ``qid_offset`` shifts the emitted query ids — used by the streaming
@@ -793,7 +800,8 @@ def run_mi_join(X: Array, merged: GraphIndex, cfg: JoinConfig,
     groups = [(np.flatnonzero(~ood), False), (np.flatnonzero(ood), True)]
     stats.other_seconds += time.perf_counter() - t0
 
-    capctl = RerankCap(cfg.traversal)
+    if capctl is None:
+        capctl = RerankCap(cfg.traversal)
     ov = overlap_enabled(cfg)
     pending: WaveHandles | None = None
 

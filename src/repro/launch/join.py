@@ -91,6 +91,13 @@ def main(argv=None) -> int:
                          "(bisection escape hatch; pair sets are "
                          "identical either way — the REPRO_OVERLAP env "
                          "var overrides both)")
+    ap.add_argument("--plan", choices=("manual", "auto"), default="manual",
+                    help="auto: let the engine's JoinPlanner pick the "
+                         "operating point (method, quant, wave bucket, "
+                         "cap seeds) from its LSH selectivity estimate "
+                         "and calibrated cost table — --method/--quant "
+                         "become defaults, not pins. Advisory-only: the "
+                         "emitted pair set is identical to manual knobs")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine-spec", default="default",
                     help="EngineSpec preset "
@@ -144,10 +151,27 @@ def main(argv=None) -> int:
     check_shards(ap, n_shards)
     eng = make_engine(ds.Y, args.engine_spec, default=cfg,
                       n_shards=n_shards, quant_build=quant_build)
+    if args.plan == "auto":
+        # let the planner pick method/quant/wave from the LSH estimate
+        # (cost-table calibration is empty on a cold launcher, so this
+        # exercises the selectivity heuristic; caps stay overflow-
+        # checked, so the pair set cannot change)
+        cfg = eng.plan_config(ds.X, cfg)
+        quant = cfg.quant
+        # sticky-cache hit on the exact plan plan_config just made
+        plan = eng.planner.plan(
+            ds.X, theta=theta, pool_cap=int(cfg.traversal.pool_cap),
+            n_shards=eng.n_shards, dim=args.dim)
+        print(f"[join] plan auto: method={cfg.method} quant={cfg.quant} "
+              f"wave={cfg.wave_size} rerank_cap={plan.rerank_cap} "
+              f"merge_cap={plan.merge_cap} mesh={plan.mesh_kind} "
+              f"predicted_pairs={plan.predicted_join_size:.0f} "
+              f"source={plan.source}")
+    method = cfg.method
     if (args.stream and eng.n_shards > 1
-            and args.method not in ("nlj", "es_mi", "es_mi_adapt")):
+            and method not in ("nlj", "es_mi", "es_mi_adapt")):
         ap.error(f"--stream with --shards supports nlj/es_mi/"
-                 f"es_mi_adapt, not {args.method}")
+                 f"es_mi_adapt, not {method}")
 
     trace_path = args.trace or (
         (obs_trace.env_trace_path() or "trace.json")
@@ -155,7 +179,7 @@ def main(argv=None) -> int:
     if trace_path:
         tracer = obs_trace.enable()
     print(f"[join] {args.regime} |X|={args.n_query} |Y|={args.n_data} "
-          f"dim={args.dim} θ={theta:.4f} method={args.method} "
+          f"dim={args.dim} θ={theta:.4f} method={method} "
           f"shards={eng.n_shards} quant={quant} quant_build={quant_build} "
           f"overlap={'off' if args.no_overlap else 'on'}")
 

@@ -48,6 +48,14 @@ def main(argv=None) -> int:
                          f"requests (from {QUANT_MODES})")
     ap.add_argument("--buckets", default="64,128,256",
                     help="comma-separated ascending wave-size ladder")
+    ap.add_argument("--plan", choices=("manual", "auto"), default="manual",
+                    help="auto: submit requests with method/quant "
+                         "unspecified so each is planned at admission by "
+                         "its tenant engine's cost table "
+                         "(JoinEngine.plan_request) — the planner only "
+                         "resolves to operating points the warmup "
+                         "already compiled, so the serve compile count "
+                         "stays flat")
     ap.add_argument("--max-request", type=int, default=192,
                     help="request sizes are drawn from [1, max-request]")
     ap.add_argument("--shards", type=shards_arg, default=1,
@@ -115,10 +123,16 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     n_warm = 0
+    # planner-routed requests resolve to the engine-default quant when
+    # the cost table has nothing cheaper — make sure that point is in
+    # the warmed set so --plan auto cannot mint a new specialization
+    warm_quants = (tuple(dict.fromkeys(quants + (base.quant,)))
+                   if args.plan == "auto" else quants)
     if not args.no_warmup:
         for name, (ds, theta) in tenants.items():
             n_warm += svc.warmup(name, thetas=[theta],
-                                 methods=(args.method,), quants=quants)
+                                 methods=(args.method,),
+                                 quants=warm_quants)
     t_warm = time.perf_counter() - t0
     c_warm = obs_metrics.compile_count()
     print(f"[serve_join] {len(tenants)} tenants "
@@ -133,10 +147,15 @@ def main(argv=None) -> int:
         ds, theta = tenants[name]
         n = int(rng.integers(1, args.max_request + 1))
         lo = int(rng.integers(0, args.max_request - n + 1))
-        reqs.append(JoinRequest(
-            uid=uid, tenant=name,
-            X=np.asarray(ds.X, np.float32)[lo:lo + n], theta=theta,
-            method=args.method, quant=quants[uid % len(quants)]))
+        if args.plan == "auto":
+            reqs.append(JoinRequest(
+                uid=uid, tenant=name,
+                X=np.asarray(ds.X, np.float32)[lo:lo + n], theta=theta))
+        else:
+            reqs.append(JoinRequest(
+                uid=uid, tenant=name,
+                X=np.asarray(ds.X, np.float32)[lo:lo + n], theta=theta,
+                method=args.method, quant=quants[uid % len(quants)]))
     for r in reqs:
         svc.submit(r)
 

@@ -1,0 +1,18 @@
+"""Planning: LSH selectivity estimation + cost-based knob selection.
+
+``LshEstimator`` turns the sketch tier's SimHash bits into per-(θ,
+batch) predictions (join size, band-occupancy quantiles, escalation
+fractions, per-shard imbalance); ``CostTable`` keeps warmup-calibrated
+per-unit costs per (method, quant); ``JoinPlanner`` combines the two
+into sticky ``JoinPlan``s. All outputs are advisory-only for
+correctness — see docs/ARCHITECTURE.md §9.
+"""
+from repro.plan.cost import CostEntry, CostTable
+from repro.plan.estimator import (MERGE_CAP_FLOOR, BandEstimate,
+                                  LshEstimator)
+from repro.plan.planner import JoinPlan, JoinPlanner, PlanError
+
+__all__ = [
+    "BandEstimate", "CostEntry", "CostTable", "JoinPlan", "JoinPlanner",
+    "LshEstimator", "MERGE_CAP_FLOOR", "PlanError",
+]

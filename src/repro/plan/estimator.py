@@ -1,0 +1,221 @@
+"""LshEstimator — join-size / band-occupancy estimation over the sketch tier.
+
+Following "Similarity Join Size Estimation using LSH" (PAPERS.md), the
+sketch tier's SimHash bits double as a per-dataset LSH sample: a cached
+sketch over ≤ ``SAMPLE_Y`` data rows plus ``SAMPLE_Q`` sampled queries
+per batch give, for any (θ, X-batch), a certified *superset* of the true
+in-range mask (``quant.sketch.sketch_survivors`` — the lower bounds
+never reject a true pair). Scaled survivor counts therefore upper-bound
+per-query band occupancy, and exact f32 distances on the same raw
+sample rows (a 64 × 2048 × d numpy matmul, no device work) give the
+join-size point estimate and the per-tier escalation split.
+
+This generalizes what ``JoinEngine.estimate_rerank_cap`` used to inline:
+same sample sizes, same seed, same headroom — the engine's sticky cap
+numbers are bit-identical through the estimator — plus the quantities
+the ``JoinPlanner`` cost model needs: occupancy *quantiles* (not just
+the max), escalation fractions per cascade tier, the OOD query share,
+and per-shard band imbalance for seeding the sharded drivers' merge
+caps.
+
+Cost discipline: the data sample is drawn and sketched **once** per
+estimator (fixed shapes, so ``sketch_encode`` and the Hamming/bound
+kernels keep their jit specializations); each ``estimate`` call encodes
+only ``SAMPLE_Q`` queries at a fixed shape. No new compiles in steady
+state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.quant import sketch as SK
+
+# Merge-cap floor: matches core.distributed.DEFAULT_MERGE_CAP (the
+# drivers' cold-start value) so a seeded cap is never below what an
+# unseeded run would have started with.
+MERGE_CAP_FLOOR = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class BandEstimate:
+    """Everything the planner wants to know about one (θ, X-batch).
+
+    Occupancy numbers are *scaled to the full table* (sample count ×
+    N / sample size); ``occ_max`` carries the certified-superset
+    property, the quantiles are point estimates.
+    """
+    theta: float
+    n_queries: int             # full batch size the estimate speaks for
+    n_data: int                # full data table size
+    n_sample_q: int
+    n_sample_y: int
+    scale: float               # n_data / n_sample_y
+    occ_max: float             # scaled max per-query sketch-band occupancy
+    occ_quantiles: dict[float, float]  # {0.5/0.9/0.99: scaled occupancy}
+    join_size: float           # predicted |X ⋈_θ Y| for the whole batch
+    esc_sketch: float          # fraction of candidate pairs the sketch
+    #                            tier cannot prune (escalated to int8/f32)
+    esc_band: float            # of the escalated pairs, the fraction the
+    #                            exact tier rejects — the ambiguous band
+    #                            share that pays full re-rank work
+    ood_frac: float            # sampled queries with zero in-range rows
+    shard_occ: tuple[float, ...]  # per-shard scaled max per-(query, shard)
+    #                               band occupancy (contiguous row shards,
+    #                               aligned with the sharded drivers)
+    shard_true_occ: tuple[float, ...]  # same, but exact in-range counts —
+    #                               the occupancy an exact-distance merged
+    #                               pool (mesh NLJ) actually holds
+
+    HEADROOM = 1.25
+
+    @property
+    def selectivity(self) -> float:
+        denom = self.n_queries * self.n_data
+        return self.join_size / denom if denom > 0 else 0.0
+
+    @property
+    def shard_imbalance(self) -> float:
+        occ = [s for s in self.shard_occ if s > 0]
+        if not occ:
+            return 1.0
+        mean = sum(occ) / len(occ)
+        return max(occ) / mean if mean > 0 else 1.0
+
+    def rerank_cap(self, pool_cap: int) -> int:
+        """Power-of-two band capacity covering the predicted max
+        occupancy with headroom — bit-identical to the engine's
+        historical ``estimate_rerank_cap`` arithmetic."""
+        est = self.occ_max * self.HEADROOM
+        return int(min(ops.next_pow2(max(int(np.ceil(est)), 16)),
+                       pool_cap))
+
+    def merge_cap(self, limit: int, *, floor: int = MERGE_CAP_FLOOR,
+                  exact: bool = False) -> int:
+        """Power-of-two per-lane merged-pool capacity covering the
+        predicted worst per-shard occupancy, for seeding the sharded
+        drivers' ``StickyCap`` (advisory — the drivers still
+        overflow-check). ``exact`` picks the predictor: the mesh NLJ
+        merged pool holds pairs that already passed the exact θ check,
+        so it is sized from the sampled *true* in-range counts — the
+        sketch-band superset would grow with N_y even when the join
+        density does not, leaking N_y-proportional merged-pool traffic
+        to the host. Traversal band pools keep the superset predictor."""
+        if exact:
+            occ = (max(self.shard_true_occ) if self.shard_true_occ
+                   else 0.0)
+        else:
+            occ = max(self.shard_occ) if self.shard_occ else self.occ_max
+        need = max(int(np.ceil(occ * self.HEADROOM)), floor)
+        return int(min(ops.next_pow2(need), max(limit, 1)))
+
+
+class LshEstimator:
+    """Cached LSH sample over one data table; per-batch estimates.
+
+    Sampling matches the engine's historical inline estimator exactly:
+    one ``default_rng(SEED)`` stream per call, the ≤ ``SAMPLE_Y``-row
+    data draw consuming the stream only on the first call (so the
+    first call's query draw differs from later calls', a quirk kept for
+    bit-compatibility of the sticky caps), and
+    ``rng.choice(nb, SAMPLE_Q, replace=nb < SAMPLE_Q)`` for queries.
+    """
+
+    SAMPLE_Q = 64
+    SAMPLE_Y = 2048
+    SEED = 0xC0FFEE
+    QUANTILES = (0.5, 0.9, 0.99)
+
+    def __init__(self, Y, *, sample_q: int | None = None,
+                 sample_y: int | None = None, seed: int | None = None):
+        self._Y = Y                      # array-like; sampled lazily
+        self.sample_q = sample_q or self.SAMPLE_Q
+        self.sample_y = sample_y or self.SAMPLE_Y
+        self.seed = self.SEED if seed is None else seed
+        self._store: SK.SketchStore | None = None
+        self._rows: np.ndarray | None = None   # raw sampled data rows
+        self._y_idx: np.ndarray | None = None
+        self._scale = 1.0
+        self.n_data = int(np.shape(Y)[0])
+
+    def _ensure_sample(self, rng) -> None:
+        if self._store is not None:
+            return
+        N = self.n_data
+        y_idx = (np.arange(N) if N <= self.sample_y
+                 else rng.choice(N, self.sample_y, replace=False))
+        rows = np.asarray(self._Y)[y_idx]
+        self._store = SK.build_sketch(rows)
+        self._rows = np.asarray(rows, np.float32)
+        self._y_idx = np.asarray(y_idx)
+        self._scale = N / len(y_idx)
+
+    def estimate(self, X_batch, theta: float, *,
+                 n_shards: int = 1) -> BandEstimate:
+        """One (θ, X-batch) estimate. Cheap after the first call: a
+        fixed-shape query encode + Hamming/bound pass on the cached
+        sample plus an exact numpy distance block on the raw rows."""
+        X = np.asarray(X_batch, np.float32)
+        nb = int(X.shape[0])
+        theta = float(theta)
+        rng = np.random.default_rng(self.seed)
+        self._ensure_sample(rng)
+        q_idx = rng.choice(nb, self.sample_q, replace=nb < self.sample_q)
+        Xs = X[q_idx]
+
+        surv = SK.sketch_survivors(Xs, self._store, theta)   # (Sq, Sy)
+        counts = surv.sum(axis=1)                            # per query
+        occ_max = float(counts.max()) * self._scale
+        occ_q = {q: float(np.quantile(counts, q)) * self._scale
+                 for q in self.QUANTILES}
+
+        # exact distances on the raw sample rows: the join-size point
+        # estimate and the per-tier escalation split
+        rows = self._rows
+        d2 = (np.sum(Xs * Xs, axis=1)[:, None]
+              + np.sum(rows * rows, axis=1)[None, :]
+              - 2.0 * (Xs @ rows.T))
+        true = d2 <= np.float32(theta) ** 2                  # (Sq, Sy)
+        true_counts = true.sum(axis=1)
+        join_size = float(true_counts.mean()) * self._scale * nb
+
+        n_pairs = counts.size * surv.shape[1]
+        n_surv = int(counts.sum())
+        esc_sketch = n_surv / max(n_pairs, 1)
+        esc_band = (max(0, n_surv - int(true_counts.sum()))
+                    / max(n_surv, 1))
+        ood_frac = float((true_counts == 0).mean())
+
+        shard_occ = self._shard_occ(surv, n_shards)
+        shard_true_occ = self._shard_occ(true, n_shards)
+        return BandEstimate(
+            theta=theta, n_queries=nb, n_data=self.n_data,
+            n_sample_q=int(Xs.shape[0]), n_sample_y=int(surv.shape[1]),
+            scale=self._scale, occ_max=occ_max, occ_quantiles=occ_q,
+            join_size=join_size, esc_sketch=esc_sketch,
+            esc_band=esc_band, ood_frac=ood_frac, shard_occ=shard_occ,
+            shard_true_occ=shard_true_occ)
+
+    def _shard_occ(self, surv: np.ndarray, n_shards: int
+                   ) -> tuple[float, ...]:
+        """Scaled max per-(query, shard) survivor count, with sampled
+        rows mapped to the contiguous row shards the sharded drivers
+        use (rows padded to ⌈N/S⌉ per shard)."""
+        S = max(int(n_shards), 1)
+        if S == 1:
+            return (float(surv.sum(axis=1).max()) * self._scale,)
+        rows_per = -(-self.n_data // S)
+        shard_of = self._y_idx // rows_per
+        occ = []
+        for s in range(S):
+            cols = shard_of == s
+            n_cols = int(cols.sum())
+            if n_cols == 0:
+                occ.append(0.0)
+                continue
+            true_rows = min(rows_per, self.n_data - s * rows_per)
+            per_q = surv[:, cols].sum(axis=1)
+            occ.append(float(per_q.max()) * (true_rows / n_cols))
+        return tuple(occ)

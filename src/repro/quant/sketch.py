@@ -264,3 +264,23 @@ def sketch_lower_bound_gather(h: Array, cum_q: Array, cum_table: Array,
     cc = cum_table[cand, kidx]                             # (B, K)
     nc = cum_table[cand, -1]                               # (B, K)
     return _lb_from_cum(cq, cc, cum_q[:, -1:], nc, iso, hs[-1]), nc
+
+
+def sketch_survivors(x, store: SketchStore, theta: float) -> np.ndarray:
+    """(B, N) bool — which store rows the sketch tier *cannot* certify
+    out of θ-range for each query row: ``lb(x_b, y_n) ≤ θ²``.
+
+    The LSH selectivity primitive behind ``plan.LshEstimator``: the
+    survivor mask over a sampled store is a certified **superset** of
+    the true in-range mask (the lower bounds never reject a true pair),
+    so per-query survivor counts upper-bound band occupancy and their
+    scaled sum upper-bounds join size on the sample. All shapes are
+    fixed by (B, N, d), so repeated calls on a cached sample reuse the
+    jit specializations of ``sketch_encode`` and the bound kernel.
+    """
+    qcodes, qcum = sketch_queries(np.asarray(x, np.float32), store)
+    from repro.kernels import ops
+    h = ops.pairwise_hamming(qcodes, store.codes)
+    lb = sketch_lower_bound_pairwise(h, qcum, store.cum, store.hs,
+                                     store.iso)
+    return np.asarray(lb <= np.float32(theta) ** 2)

@@ -22,6 +22,11 @@ compiled decode step" invariant:
   * the initial band-compaction capacity comes from the engine's
     LSH-sample estimate (``estimate_rerank_cap``), sticky per (θ,
     quant), instead of the cold-start grow-and-retry;
+  * requests that leave ``method``/``quant`` unspecified are planned by
+    the tenant engine's cost table (``JoinEngine.plan_request``), which
+    only ever resolves to operating points that have already run (and
+    hence compiled) — admission-time planning cannot mint new
+    specializations, and it never touches the device;
   * ``warmup()`` runs one synthetic batch per (bucket × operating
     point) and then ``reset_stream()``s, so steady state replays only
     cached executables — ``obs.metrics.compile_count()`` must stay flat
@@ -55,6 +60,12 @@ from repro.obs import trace as obs_trace
 from repro.serve.engine import RequestRejected, _MetricsDict
 
 _BUDGET_STEPS = (0.25, 0.5, 0.75, 1.0)
+
+# Not servable through the streaming front end: merged-index methods
+# rebuild their index per batch; single-device traversal methods have no
+# sharded submit path.
+_UNSERVABLE = ("es_mi", "es_mi_adapt")
+_SINGLE_DEVICE = ("index", "es", "es_hws", "es_sws")
 
 
 def snap_budget(budget: float) -> float:
@@ -98,13 +109,20 @@ class ServiceConfig:
 @dataclasses.dataclass
 class JoinRequest:
     """One tenant request: join ``X`` against the tenant's Y at its own
-    operating point."""
+    operating point.
+
+    ``method``/``quant`` left as None route the request through the
+    tenant engine's planner (``JoinEngine.plan_request`` — cost-table
+    only, so admission never touches the device); ``wave`` pins the
+    ladder bucket the request must run at (requests whose pinned wave is
+    not a pre-compiled bucket are rejected, not snapped)."""
     uid: int
     tenant: str
     X: np.ndarray                   # (n, d) query vectors
     theta: float
-    method: str = "es_sws"
-    quant: str = "off"
+    method: str | None = None       # None → planner picks
+    quant: str | None = None        # None → planner picks
+    wave: int | None = None         # None → snapped to the ladder
     recall_budget: float = 1.0      # snapped to quarters → patience scale
 
 
@@ -213,12 +231,30 @@ class JoinService:
     def plan(self, req: JoinRequest) -> JoinConfig:
         """The exact ``JoinConfig`` a request will run under — public so
         tests/benchmarks can replay the service's planning against a
-        direct ``JoinEngine.submit`` baseline."""
+        direct ``JoinEngine.submit`` baseline.
+
+        Requests that left ``method``/``quant`` unspecified are routed
+        through the tenant engine's planner (``plan_request`` — cost
+        table only, no device work), constrained to the front end's
+        servable set. Raises ``RequestRejected`` when a pinned ``wave``
+        is not on the pre-compiled bucket ladder."""
         eng = self.engine(req.tenant)
         base = eng.default
-        rep: dict = dict(method=req.method, theta=float(req.theta),
-                         quant=req.quant,
-                         wave_size=self.bucket_for(len(req.X)))
+        method, quant = req.method, req.quant
+        if method is None or quant is None:
+            method, quant = eng.plan_request(
+                len(req.X), theta=float(req.theta),
+                method=method, quant=quant)
+            if method in _UNSERVABLE:
+                method = "nlj" if eng.n_shards > 1 else "es_sws"
+        wave = (int(req.wave) if req.wave is not None
+                else self.bucket_for(len(req.X)))
+        if wave not in self.cfg.buckets:
+            raise RequestRejected(
+                f"uid={req.uid}: wave {wave} does not fit any "
+                f"pre-compiled bucket {self.cfg.buckets}")
+        rep: dict = dict(method=method, theta=float(req.theta),
+                         quant=quant, wave_size=wave)
         b = snap_budget(req.recall_budget)
         if b < 1.0 and base.traversal.patience >= 0:
             rep["traversal"] = dataclasses.replace(
@@ -246,16 +282,28 @@ class JoinService:
                 f"{req.tenant!r} dim {d}")
         if not req.theta > 0:
             raise RequestRejected(f"uid={req.uid}: theta must be > 0")
-        if req.method not in METHODS:
-            raise RequestRejected(
-                f"uid={req.uid}: unknown method {req.method!r}")
-        if req.method in ("es_mi", "es_mi_adapt"):
-            raise RequestRejected(
-                f"uid={req.uid}: merged-index methods rebuild per batch "
-                "and are not servable through the streaming front end")
-        if req.quant not in QUANT_MODES:
+        if req.method is not None:
+            if req.method not in METHODS:
+                raise RequestRejected(
+                    f"uid={req.uid}: unknown method {req.method!r}")
+            if req.method in _UNSERVABLE:
+                raise RequestRejected(
+                    f"uid={req.uid}: merged-index methods rebuild per "
+                    "batch and are not servable through the streaming "
+                    "front end")
+            if (req.method in _SINGLE_DEVICE
+                    and self._tenants[req.tenant].n_shards > 1):
+                raise RequestRejected(
+                    f"uid={req.uid}: method {req.method!r} has no "
+                    "sharded submit path and is not servable on a "
+                    f"{self._tenants[req.tenant].n_shards}-shard tenant")
+        if req.quant is not None and req.quant not in QUANT_MODES:
             raise RequestRejected(
                 f"uid={req.uid}: unknown quant mode {req.quant!r}")
+        if req.wave is not None and int(req.wave) not in self.cfg.buckets:
+            raise RequestRejected(
+                f"uid={req.uid}: wave {req.wave} does not fit any "
+                f"pre-compiled bucket {self.cfg.buckets}")
         if req.uid in self.done or req.uid in self.failed \
                 or any(r.uid == req.uid for r, _ in self.queue):
             raise RequestRejected(f"uid={req.uid}: duplicate uid")
@@ -314,8 +362,12 @@ class JoinService:
         offset = eng.n_submitted
         jobs, meta = [], []
         for req, t_enq in items:
-            cfg = self.plan(req)
-            b = cfg.wave_size
+            try:
+                cfg = self.plan(req)
+            except RequestRejected as e:     # late reject (e.g. pinned
+                self._fail(req, str(e))      # wave off the ladder after
+                continue                     # a config swap) — recorded,
+            b = cfg.wave_size                # never raised into the loop
             n = len(req.X)
             self._h_admit.observe(t_disp - t_enq)
             self._h_occ.observe(n / (-(-n // b) * b))

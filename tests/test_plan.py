@@ -1,0 +1,357 @@
+"""JoinPlanner / LshEstimator / CostTable: estimation, cost-based knob
+selection, cap seeding, and the advisory-only contract.
+
+Covers the deterministic side: the certified-superset property of the
+full-sample estimator, cap arithmetic, fastest-wins calibration, sticky
+plan caching, planner-vs-hand-tuned pair identity across methods × quant
+modes, and the ``overflow_retries`` counter on the grow-and-retry paths.
+The randomized quantile-accuracy suite lives in
+``test_plan_properties.py`` (hypothesis; CI-only when hypothesis is not
+installed locally). CI runs this module in the quant-mode matrix
+(``REPRO_QUANT_MODE``), so the quant-parametrized tests narrow to the
+mode under test.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import exact_join_pairs
+from repro.core.types import (QUANT_FILTER_MODES, QUANT_MODES, JoinConfig,
+                              JoinStats, TraversalConfig)
+from repro.data.vectors import make_dataset, thresholds
+from repro.engine import JoinEngine
+from repro.plan import (CostTable, JoinPlanner, LshEstimator,
+                        MERGE_CAP_FLOOR)
+from repro.quant import sketch as SK
+
+_ENV_MODE = os.environ.get("REPRO_QUANT_MODE")
+MODES_UNDER_TEST = (_ENV_MODE,) if _ENV_MODE else QUANT_MODES
+FILTER_MODES_UNDER_TEST = tuple(m for m in MODES_UNDER_TEST
+                                if m in QUANT_FILTER_MODES)
+BK = dict(k=24, degree=12)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("clustered", n_data=1800, n_query=96, dim=24,
+                        seed=3)
+
+
+@pytest.fixture(scope="module")
+def theta(ds):
+    return float(thresholds(ds, 3)[1])
+
+
+# -- LshEstimator ------------------------------------------------------------
+
+
+def test_estimate_full_sample_is_certified(ds, theta):
+    """With the whole table sampled and every query drawn, the sketch
+    survivor counts are exact — occupancy numbers upper-bound the true
+    in-range counts (certified superset) and the join-size estimate is
+    the exact join size."""
+    est = LshEstimator(ds.Y)            # 1800 rows <= SAMPLE_Y
+    X64 = np.asarray(ds.X, np.float32)[:64]    # nb == SAMPLE_Q: no
+    e = est.estimate(X64, theta)               # replacement, all queries
+    assert e.scale == 1.0 and e.n_sample_y == ds.Y.shape[0]
+
+    Y = np.asarray(ds.Y, np.float32)
+    d2 = (np.sum(X64 * X64, 1)[:, None] + np.sum(Y * Y, 1)[None, :]
+          - 2.0 * (X64 @ Y.T))
+    true_counts = (d2 <= np.float32(theta) ** 2).sum(axis=1)
+    assert e.occ_max >= float(true_counts.max()) - 1e-6
+    for q, v in e.occ_quantiles.items():
+        assert v >= float(np.quantile(true_counts, q)) - 1e-6
+    truth = exact_join_pairs(X64, ds.Y, theta)
+    assert e.join_size == pytest.approx(len(truth), abs=1e-3)
+    assert 0.0 <= e.esc_sketch <= 1.0 and 0.0 <= e.esc_band <= 1.0
+    assert 0.0 <= e.ood_frac <= 1.0
+
+
+def test_estimate_deterministic_and_sample_cached(ds, theta):
+    est = LshEstimator(ds.Y)
+    e1 = est.estimate(ds.X, theta)
+    store = est._store
+    e2 = est.estimate(ds.X, theta)
+    assert est._store is store          # sample sketched exactly once
+    assert e1 == e2                     # frozen dataclass, full equality
+    assert e1.n_sample_q == est.sample_q
+
+
+def test_estimate_subsample_scales(theta):
+    ds_big = make_dataset("clustered", n_data=4000, n_query=64, dim=24,
+                          seed=5)
+    est = LshEstimator(ds_big.Y, sample_y=512)
+    e = est.estimate(ds_big.X, float(thresholds(ds_big, 3)[1]))
+    assert e.n_sample_y == 512
+    assert e.scale == pytest.approx(4000 / 512)
+    assert e.n_data == 4000
+
+
+def test_rerank_and_merge_cap_arithmetic(ds, theta):
+    est = LshEstimator(ds.Y)
+    e = est.estimate(ds.X, theta)
+    cap = e.rerank_cap(1024)
+    assert cap & (cap - 1) == 0         # power of two
+    assert 16 <= cap <= 1024
+    assert e.rerank_cap(64) <= 64       # clamped to pool_cap
+    m = e.merge_cap(1024)
+    assert m & (m - 1) == 0
+    assert MERGE_CAP_FLOOR <= m <= 1024
+    assert e.merge_cap(8) == 8          # clamped to the limit
+    # the exact predictor sizes from true in-range counts, a subset of
+    # the sketch-band survivors — never a larger cap than the band one
+    mx = e.merge_cap(1024, exact=True)
+    assert mx & (mx - 1) == 0
+    assert MERGE_CAP_FLOOR <= mx <= m
+
+
+def test_shard_occ_aligns_with_contiguous_shards(ds, theta):
+    est = LshEstimator(ds.Y)
+    e1 = est.estimate(ds.X, theta, n_shards=1)
+    e4 = est.estimate(ds.X, theta, n_shards=4)
+    assert len(e1.shard_occ) == 1 and len(e4.shard_occ) == 4
+    assert all(s >= 0.0 for s in e4.shard_occ)
+    assert e4.shard_imbalance >= 1.0
+    # a shard holds at most the whole band: per-shard occupancy cannot
+    # exceed the global per-query max
+    assert max(e4.shard_occ) <= e4.occ_max + 1e-6
+    # true in-range rows are a subset of the sketch-band survivors,
+    # shard by shard
+    assert len(e4.shard_true_occ) == 4
+    assert all(t <= s + 1e-6
+               for t, s in zip(e4.shard_true_occ, e4.shard_occ))
+
+
+def test_sketch_survivors_is_superset_of_true(ds, theta):
+    store = SK.build_sketch(ds.Y)
+    X = np.asarray(ds.X, np.float32)[:32]
+    surv = SK.sketch_survivors(X, store, theta)
+    Y = np.asarray(ds.Y, np.float32)
+    d2 = (np.sum(X * X, 1)[:, None] + np.sum(Y * Y, 1)[None, :]
+          - 2.0 * (X @ Y.T))
+    true = d2 <= np.float32(theta) ** 2
+    assert surv.shape == true.shape
+    assert not (true & ~surv).any()     # lower bound never rejects a pair
+
+
+# -- CostTable ---------------------------------------------------------------
+
+
+def _stats(secs: float, n_dist: int = 1000, n_rerank: int = 10):
+    return JoinStats(expand_seconds=secs, n_dist=n_dist,
+                     n_rerank=n_rerank)
+
+
+def test_cost_table_fastest_wins():
+    t = CostTable()
+    assert t.observe("es_sws", "off", 64, _stats(0.8))
+    assert not t.observe("es_sws", "off", 64, _stats(0.9))   # slower
+    assert t.observe("es_sws", "off", 64, _stats(0.4))       # faster
+    assert t.get("es_sws", "off").seconds == pytest.approx(0.4)
+    # per-query normalization: a bigger batch can win at higher seconds
+    assert t.observe("es_sws", "off", 640, _stats(2.0))
+    assert len(t) == 1
+
+
+def test_cost_table_rejects_degenerate():
+    t = CostTable()
+    assert not t.observe("nlj", "off", 0, _stats(0.5))
+    assert not t.observe("nlj", "off", 64, _stats(0.0))
+    assert len(t) == 0
+    t.observe("nlj", "off", 64, _stats(0.5))
+    snap = t.snapshot()
+    assert set(snap) == {"nlj/off"}
+    assert snap["nlj/off"]["sec_per_query"] > 0
+
+
+def test_engine_calibrates_and_exports_cost_table(ds, theta):
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    eng.join(ds.X, JoinConfig(method="nlj", theta=theta))
+    snap = eng.metrics_snapshot()
+    assert "cost_table" in snap and "nlj/off" in snap["cost_table"]
+    assert snap["cost_table"]["nlj/off"]["sec_per_query"] > 0
+    # sticks on the engine: a second join can only replace with faster
+    before = eng.cost_table.get("nlj", "off").sec_per_query
+    eng.join(ds.X, JoinConfig(method="nlj", theta=theta))
+    assert eng.cost_table.get("nlj", "off").sec_per_query <= before
+
+
+# -- JoinPlanner -------------------------------------------------------------
+
+
+def test_planner_sticky_cache(ds, theta):
+    planner = JoinPlanner(LshEstimator(ds.Y), CostTable())
+    p1 = planner.plan(ds.X, theta=theta, pool_cap=1024)
+    p2 = planner.plan(ds.X, theta=theta, pool_cap=1024)
+    assert p1 is p2                     # same (θ, wave, shards) profile
+    p3 = planner.plan(ds.X, theta=theta * 1.1, pool_cap=1024)
+    assert p3 is not p1
+
+
+def test_planner_heuristic_before_calibration(ds, theta):
+    planner = JoinPlanner(LshEstimator(ds.Y), CostTable())
+    p = planner.plan(ds.X, theta=theta, pool_cap=1024,
+                     default_method="es_sws")
+    # 1800-row table is below the small-N floor: brute force wins
+    assert p.method == "nlj" and p.source == "heuristic"
+    assert p.wave_size in planner.buckets
+    assert p.merge_cap >= MERGE_CAP_FLOOR
+
+
+def test_planner_picks_calibrated_cheapest(ds, theta):
+    costs = CostTable()
+    costs.observe("nlj", "off", 96, _stats(5.0, n_dist=96 * 1800))
+    costs.observe("es_sws", "off", 96, _stats(0.1, n_dist=5000))
+    planner = JoinPlanner(LshEstimator(ds.Y), costs)
+    p = planner.plan(ds.X, theta=theta, pool_cap=1024,
+                     methods=("nlj", "es_sws"), quants=("off",))
+    assert p.method == "es_sws" and p.source == "cost"
+    assert p.predicted_seconds is not None
+    # pinning overrides the cost ranking
+    pinned = planner.plan(ds.X, theta=theta, pool_cap=1024,
+                          method="nlj", quant="off")
+    assert pinned.method == "nlj" and pinned.source == "pinned"
+
+
+def test_plan_rerank_cap_only_for_filter_modes(ds, theta):
+    planner = JoinPlanner(LshEstimator(ds.Y), CostTable())
+    off = planner.plan(ds.X, theta=theta, pool_cap=1024,
+                       method="es_sws", quant="off")
+    assert off.rerank_cap is None
+    sq = planner.plan(ds.X, theta=theta, pool_cap=1024,
+                      method="es_sws", quant="sq8")
+    assert sq.rerank_cap is not None
+    assert 16 <= sq.rerank_cap <= 1024
+
+
+def test_plan_config_snaps_wave_and_respects_pins(ds, theta):
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    cfg = eng.plan_config(ds.X, JoinConfig(method="es_sws", theta=theta,
+                                           wave_size=999),
+                          method="es_sws", quant="off")
+    assert cfg.method == "es_sws" and cfg.quant == "off"
+    assert cfg.wave_size in eng.planner.buckets
+
+
+def _sample_never_drawn(eng) -> bool:
+    # the estimator object may exist (the planner holds one), but the
+    # admission path must never have drawn + sketched the data sample
+    return eng._estimator is None or eng._estimator._store is None
+
+
+def test_plan_request_is_estimator_free(ds, theta):
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    m, q = eng.plan_request(64, theta=theta)
+    assert (m, q) == ("es_sws", eng.default.quant)   # uncalibrated
+    assert _sample_never_drawn(eng)
+    eng.join(ds.X, JoinConfig(method="nlj", theta=theta))
+    m2, q2 = eng.plan_request(64, theta=theta)
+    assert m2 == "nlj"                  # the only calibrated candidate
+    assert _sample_never_drawn(eng)
+
+
+# -- planner admissibility: planned == hand-tuned pair sets ------------------
+
+
+@pytest.mark.parametrize("quant", MODES_UNDER_TEST)
+@pytest.mark.parametrize("method", ("nlj", "es_sws", "es_mi_adapt"))
+def test_planned_pairs_identical_to_hand_tuned(ds, theta, method, quant):
+    """The advisory-only contract, end to end: a planner-produced config
+    (caps seeded from the estimate, wave snapped to the ladder) emits
+    exactly the pair set of the hand-tuned config across methods × quant
+    modes."""
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    hand = JoinConfig(method=method, theta=theta, quant=quant,
+                      wave_size=48)
+    r_hand = eng.join(ds.X, hand)
+    planned = eng.plan_config(ds.X, hand, method=method, quant=quant)
+    r_plan = eng.join(ds.X, planned)
+    assert r_plan.pair_set() == r_hand.pair_set()
+    assert r_plan.stats.overflow_retries == 0
+
+
+# -- overflow_retries counter ------------------------------------------------
+
+
+@pytest.mark.skipif(not FILTER_MODES_UNDER_TEST,
+                    reason="no quant filter mode under test")
+def test_overflow_retries_counts_band_growth(ds):
+    """A deliberately tiny initial band capacity forces the
+    grow-and-retry rounds; the counter records them, and the emitted
+    pairs still match the full-width run (growth is lossless)."""
+    quant = FILTER_MODES_UNDER_TEST[0]
+    # a tight threshold: at the mid threshold the clusters separate so
+    # cleanly that the certified bounds leave an empty ambiguous band
+    # (nothing to overflow); θ1 keeps the band populated in every mode
+    theta = float(thresholds(ds, 7)[1])
+    eng = JoinEngine(ds.Y, build_kw=BK)
+    tiny = JoinConfig(method="es_mi", theta=theta, quant=quant,
+                      traversal=TraversalConfig(rerank_cap=2))
+    r_tiny = eng.join(ds.X, tiny)
+    assert r_tiny.stats.overflow_retries >= 1
+    full = JoinConfig(method="es_mi", theta=theta, quant=quant,
+                      traversal=TraversalConfig(rerank_cap=0))
+    r_full = eng.join(ds.X, full)
+    assert r_full.stats.overflow_retries == 0    # full width never grows
+    assert r_tiny.pair_set() == r_full.pair_set()
+
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    from repro.core import JoinConfig
+    from repro.core.distributed import MeshPlan, distributed_nlj_join
+    from repro.data.vectors import make_dataset, thresholds
+    from repro.engine import JoinEngine
+
+    ds = make_dataset("clustered", n_data=1501, n_query=48, dim=24,
+                      seed=11)
+    theta = float(thresholds(ds, 3)[1])
+
+    # 1) merge StickyCap grow-and-retry: a cap of 1 must retry (counted)
+    #    yet emit exactly the default-cap pairs
+    plan = MeshPlan.plan(1501, 24, 2, traversal=False)
+    p_tiny, s_tiny = distributed_nlj_join(
+        np.asarray(ds.X, np.float32), np.asarray(ds.Y, np.float32),
+        plan, theta=theta, wave_size=16, merge_cap=1)
+    p_def, s_def = distributed_nlj_join(
+        np.asarray(ds.X, np.float32), np.asarray(ds.Y, np.float32),
+        plan, theta=theta, wave_size=16)
+    assert set(map(tuple, p_tiny.tolist())) == \\
+        set(map(tuple, p_def.tolist()))
+    assert s_tiny.overflow_retries >= 1, s_tiny.overflow_retries
+
+    # 2) sharded planner admissibility: the planned config (merge cap
+    #    seeded from the per-shard estimate) emits the hand-tuned pairs
+    #    with zero retries
+    eng = JoinEngine(ds.Y, build_kw=dict(k=24, degree=12), n_shards=2)
+    hand = JoinConfig(method="es_mi", theta=theta, wave_size=16)
+    r_hand = eng.join(ds.X, hand)
+    planned = eng.plan_config(ds.X, hand, method="es_mi", quant="off")
+    r_plan = eng.join(ds.X, planned)
+    assert r_plan.pair_set() == r_hand.pair_set()
+    assert r_plan.stats.overflow_retries == 0, \\
+        r_plan.stats.overflow_retries
+    print("PLAN_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_merge_cap_seeding_and_retries():
+    """Subprocess (2 forced host devices): the sharded drivers' merge
+    StickyCap retry loop is counted and lossless, and a planner-seeded
+    sharded run needs zero retries while emitting hand-tuned pairs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "PLAN_SHARDED_OK" in r.stdout

@@ -169,6 +169,61 @@ def test_rerank_cap_estimate(ds_a):
         X, dataclasses.replace(cfg, quant="off")) is None
 
 
+def test_planner_routes_unpinned_requests(ds_a):
+    svc = _service({"ta": ds_a})
+    eng = svc.engine("ta")
+    base = eng.default
+    X = np.asarray(ds_a.X, np.float32)
+
+    cfg = svc.plan(JoinRequest(uid=0, tenant="ta", X=X[:8], theta=1.0))
+    assert cfg.method == "es_sws"        # uncalibrated servable fallback
+    assert cfg.quant == base.quant
+    assert cfg.wave_size == svc.bucket_for(8)
+    assert cfg.traversal is base.traversal   # planner route: untouched
+
+    # once the cost table has a calibrated servable point, the route
+    # follows it (cost-table only — no estimator, no device work)
+    eng.cost_table.observe(
+        "nlj", base.quant, 8,
+        type("S", (), dict(total_seconds=0.01, n_dist=4800, n_rerank=0,
+                           bytes_assembly=0))())
+    cfg2 = svc.plan(JoinRequest(uid=1, tenant="ta", X=X[:8], theta=1.0))
+    assert cfg2.method == "nlj"
+    # admission stayed device-free: the planner's estimator never drew
+    # its data sample
+    assert eng._estimator is None or eng._estimator._store is None
+
+    # explicit pins bypass the planner entirely
+    cfg3 = svc.plan(JoinRequest(uid=2, tenant="ta", X=X[:8], theta=1.0,
+                                method="es_sws", quant="sq8"))
+    assert cfg3.method == "es_sws" and cfg3.quant == "sq8"
+
+
+def test_wave_pin_must_fit_bucket(ds_a):
+    svc = _service({"ta": ds_a})
+    X = np.asarray(ds_a.X, np.float32)
+    ok = JoinRequest(uid=0, tenant="ta", X=X[:4], theta=1.0, wave=32)
+    assert svc.plan(ok).wave_size == 32      # pinned, not snapped to 16
+    bad = JoinRequest(uid=1, tenant="ta", X=X[:4], theta=1.0, wave=17)
+    assert svc.submit(bad) is False          # rejected, no assert/raise
+    assert "pre-compiled bucket" in svc.failed[1]
+    assert svc.done[1].ok is False
+
+
+def test_sharded_tenant_rejects_single_device_search(ds_a, monkeypatch):
+    svc = _service({"ta": ds_a})
+    monkeypatch.setattr(svc.engine("ta"), "n_shards", 2)
+    X = np.asarray(ds_a.X, np.float32)
+    r = JoinRequest(uid=0, tenant="ta", X=X[:4], theta=1.0,
+                    method="es_sws")
+    assert svc.submit(r) is False
+    assert "2-shard" in svc.failed[0]
+    # unpinned requests on the same tenant still plan — to the sharded
+    # fallback
+    cfg = svc.plan(JoinRequest(uid=1, tenant="ta", X=X[:4], theta=1.0))
+    assert cfg.method == "nlj"
+
+
 # -- admission / backpressure -------------------------------------------
 
 
